@@ -1,0 +1,71 @@
+"""Shared infrastructure for the paper-figure benchmarks.
+
+Model configs the paper evaluates against (public literature), the
+byte-accounting calibration, and the CSV emission helper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs.base import ModelConfig
+from repro.core.analysis import MemoryModel
+
+GB = 1e9
+
+# The paper's Fig. 1(a): (70B, 4K) peak activation 35.20 GB/device at
+# PP8_TP8, micro-batch 2 => 53.7 KB/token/layer after TP8.  Our
+# Megatron-selective estimator gives ~23 KB (flash + op-level recompute +
+# sequence parallelism); the paper's motivation table evidently accounts
+# full storage without SP.  PAPER_ACT_SCALE aligns our estimator with
+# their accounting for the reproduction figures; "ours" rows use the
+# uncalibrated estimator.
+PAPER_ACT_SCALE = 53.7 / 23.0
+
+GPT3_175B = ModelConfig(
+    name="gpt3-175b", family="dense", num_layers=96, d_model=12288,
+    num_heads=96, num_kv_heads=96, d_ff=49152, vocab_size=50257,
+    act="gelu")
+
+QWEN25_32B = ModelConfig(
+    name="qwen2.5-32b", family="dense", num_layers=64, d_model=5120,
+    num_heads=40, num_kv_heads=8, d_ff=27648, vocab_size=152064,
+    qkv_bias=True, act="silu")
+
+PALM_62B = ModelConfig(
+    name="palm-62b", family="dense", num_layers=64, d_model=8192,
+    num_heads=32, num_kv_heads=1, d_ff=32768, vocab_size=256000,
+    act="silu")
+
+OPT_66B = ModelConfig(
+    name="opt-66b", family="dense", num_layers=64, d_model=9216,
+    num_heads=72, num_kv_heads=72, d_ff=36864, vocab_size=50272,
+    act="gelu")
+
+
+def memory_model(cfg: ModelConfig, tp: int, calibrated: bool = True
+                 ) -> MemoryModel:
+    mm = MemoryModel.build(cfg, tp=tp)
+    if calibrated:
+        mm = dataclasses.replace(
+            mm, act_per_token_layer=mm.act_per_token_layer
+            * PAPER_ACT_SCALE)
+    return mm
+
+
+class Bench:
+    """Collects (name, us_per_call, derived) rows."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, fn):
+        t0 = time.perf_counter()
+        derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        self.rows.append((name, us, derived))
+        return derived
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.0f},{derived}")

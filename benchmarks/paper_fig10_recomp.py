@@ -1,0 +1,57 @@
+"""Fig. 10 — recomputation-solution comparison on GPT3-175B at
+(PP,TP)=(8,8), global batch 32, micro batch 1, seq 16K, SP on.
+
+Paper numbers (storage saving x over baseline*, throughput vs
+1F1B+R=100%): Megatron-Kwai operator-aware 1.27x; AdaPipe 1.76x / 1.26x;
+Chronos-Pipe+Chronos-Recomp 1.72x / 1.17x; ChronosPipe ALL 2.22x.
+*baseline = 1F1B with operator-level recompute only.
+"""
+from __future__ import annotations
+
+from benchmarks.common import GB, GPT3_175B, memory_model
+from repro.core import schedules as S
+
+PP, TP, MB, SEQ = 8, 8, 1, 16384
+TOKENS = MB * SEQ
+L = GPT3_175B.num_layers
+
+
+def rows():
+    mm = memory_model(GPT3_175B, tp=TP)
+    ma = mm.m_a(TOKENS, L)
+    state = mm.model_state(L, PP, TP)
+    base_act = S.onef1b(PP, 32).peak_activation() * ma
+
+    def tot(frac, off=0.0):
+        return frac * ma + mm.model_state(L, PP, TP, offload_frac=off)
+
+    r100 = S.onef1b(PP, 128, recomp=1.0)
+    out = {
+        "1f1b+oplevel (baseline)": tot(1.0),
+        "1f1b+R=100%": tot(0.0),
+        "chronos+recomp": tot(S.chronos_recomp(PP, 32).peak_activation(
+            count_transient=False)),
+        "chronosALL": tot(S.chronos_recomp(PP, 32).peak_activation(
+            count_transient=False), off=0.5),
+    }
+    # throughput proxy: ideal computation fraction (1-bubble-recomp)
+    icf = {
+        "1f1b+R=100%": r100.ideal_compute_fraction(),
+        "chronos+recomp":
+            S.chronos_recomp(PP, 128).ideal_compute_fraction(),
+    }
+    return out, icf
+
+
+def run(bench):
+    out, icf = rows()
+    base = out["1f1b+oplevel (baseline)"]
+    for k, v in out.items():
+        bench.add(f"fig10_{k}_GB", lambda v=v: round(v / GB, 1))
+    bench.add("fig10_chronos_recomp_saving_x (paper 1.72x)",
+              lambda: round(base / out["chronos+recomp"], 2))
+    bench.add("fig10_chronosALL_saving_x (paper 2.22x)",
+              lambda: round(base / out["chronosALL"], 2))
+    bench.add("fig10_throughput_gain_vs_r100 (paper 1.17x)",
+              lambda: round(icf["chronos+recomp"] / icf["1f1b+R=100%"], 2))
+    return out

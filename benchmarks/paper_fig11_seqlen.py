@@ -1,0 +1,63 @@
+"""Fig. 11 — memory & throughput across sequence lengths on a 32-layer
+model at (DP,PP,TP)=(2,4,8), global batch 128, micro batch 2.
+
+Paper: interleave-1F1B OOMs at 8k even with R=50%; at PP4 Chronos-Pipe /
+Chronos-Recomp save only 12.5% / 25% of activations vs 1F1B variants;
+savings grow with sequence length; Chronos-Pipe throughput -6..9% vs
+1F1B; Chronos-Recomp ~ 1F1B+R=50%.
+"""
+from __future__ import annotations
+
+from benchmarks.common import GB, memory_model
+from repro.configs.llama70b_paper import with_layers
+from repro.core import schedules as S
+
+DP, PP, TP, MB, L = 2, 4, 8, 2, 32
+M = 128 // (MB * DP)
+
+
+def rows(seqs=(2048, 4096, 8192, 16384)):
+    cfg = with_layers(L)
+    mm = memory_model(cfg, tp=TP)
+    scheds = {
+        "1f1b": S.onef1b(PP, M).peak_activation(),
+        "interleave-1f1b": S.interleaved(PP, M, 2).peak_activation(),
+        "1f1b+R=50%": S.onef1b(PP, M, recomp=0.5).peak_activation(
+            count_transient=False),
+        "chronos": S.chronos(PP, M, 2).peak_activation(),
+        "chronos+recomp": S.chronos_recomp(PP, M).peak_activation(
+            count_transient=False),
+    }
+    out = {}
+    for seq in seqs:
+        tokens = MB * seq
+        state = mm.model_state(L, PP, TP, dp_shard=1)
+        out[seq] = {name: (frac * mm.m_a(tokens, L) + state) / GB
+                    for name, frac in scheds.items()}
+    return out
+
+
+def run(bench):
+    out = rows()
+    for seq, row in out.items():
+        for name, gbs in row.items():
+            bench.add(f"fig11_seq{seq}_{name}_GB",
+                      lambda g=gbs: round(g, 1))
+    # savings vs 1f1b grow with seq (paper: "increasingly pronounced")
+    s2 = 1 - out[2048]["chronos"] / out[2048]["1f1b"]
+    s16 = 1 - out[16384]["chronos"] / out[16384]["1f1b"]
+    bench.add("fig11_chronos_saving_2k", lambda: round(s2, 3))
+    bench.add("fig11_chronos_saving_16k_grows", lambda: round(s16, 3))
+    # PP4 activation-only savings: 12.5% (chronos) / 25% (chronos-recomp)
+    ch = S.chronos(PP, M, 2).peak_activation()
+    # the paper's "25%" Fig-11 statement compares chronos-recomp WITH its
+    # recompute transient against 1F1B+R=50% WITHOUT one (0.375 vs 0.5
+    # at P=4) — reproduce that accounting here
+    cr = S.chronos_recomp(PP, M).peak_activation(count_transient=True)
+    f1 = S.onef1b(PP, M).peak_activation()
+    r5 = S.onef1b(PP, M, recomp=0.5).peak_activation(count_transient=False)
+    bench.add("fig11_act_saving_chronos_vs_1f1b (paper 12.5%)",
+              lambda: round(1 - ch / f1, 4))
+    bench.add("fig11_act_saving_recomp_vs_r50 (paper 25%)",
+              lambda: round(1 - cr / r5, 4))
+    return out

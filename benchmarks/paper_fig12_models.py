@@ -1,0 +1,52 @@
+"""Fig. 12 — memory across model families at (PP,TP)=(8,8), global batch
+128, micro batch 2, seq 4K: Qwen2.5-32B, PaLM-62B, OPT-66B.
+
+Paper: Chronos-Pipe+Chronos-Recomp 1.21-1.26x storage reduction vs
+1F1B+R=50% (enables PaLM-62B and OPT-66B in 32 GB); ChronosPipe ALL
+1.56-1.58x; vs 1F1B+R=100% ChronosPipe gains ~1.15x throughput and
+1.04-1.10x storage.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (GB, OPT_66B, PALM_62B, QWEN25_32B,
+                               memory_model)
+from repro.core import schedules as S
+
+PP, TP, MB, SEQ = 8, 8, 2, 4096
+M = 128 // MB
+TOKENS = MB * SEQ
+
+
+def rows():
+    out = {}
+    fr_r50 = S.onef1b(PP, M, recomp=0.5).peak_activation(
+        count_transient=False)
+    fr_cr = S.chronos_recomp(PP, M).peak_activation(count_transient=False)
+    for cfg in (QWEN25_32B, PALM_62B, OPT_66B):
+        mm = memory_model(cfg, tp=TP)
+        L = cfg.num_layers
+        state = mm.model_state(L, PP, TP)
+        out[cfg.name] = {
+            "1f1b+R=50%": (fr_r50 * mm.m_a(TOKENS, L) + state) / GB,
+            "chronos+recomp": (fr_cr * mm.m_a(TOKENS, L) + state) / GB,
+            "chronosALL": (fr_cr * mm.m_a(TOKENS, L) + mm.model_state(
+                L, PP, TP, offload_frac=0.5)) / GB,
+        }
+    return out
+
+
+def run(bench):
+    out = rows()
+    for name, row in out.items():
+        for sched, gbs in row.items():
+            bench.add(f"fig12_{name}_{sched}_GB", lambda g=gbs: round(g, 1))
+        bench.add(
+            f"fig12_{name}_recomp_saving_x (paper 1.21-1.26x)",
+            lambda r=row: round(r["1f1b+R=50%"] / r["chronos+recomp"], 2))
+        bench.add(
+            f"fig12_{name}_ALL_saving_x (paper 1.56-1.58x)",
+            lambda r=row: round(r["1f1b+R=50%"] / r["chronosALL"], 2))
+        bench.add(
+            f"fig12_{name}_fits_32GB_chronosALL",
+            lambda r=row: r["chronosALL"] < 32.0)
+    return out

@@ -1,0 +1,42 @@
+"""Fig. 13 — P2P overhead on a 24-layer model at (PP,TP)=(4,8), micro
+batch 2, seq 4K, Tc ~= 0.104 T_unit.
+
+Paper: Chronos-Pipe's ideal computation fraction is ~6% below 1F1B (5%
+of which is P2P: one extra round of communication); Chronos-Recomp lands
+within <=3% of 1F1B+R=50%.
+"""
+from __future__ import annotations
+
+from repro.core import schedules as S
+from repro.core.schedule import retime_with_comm
+
+PP, M, TC = 4, 32, 0.104
+
+
+def rows():
+    f1 = retime_with_comm(S.onef1b(PP, M), TC / 2, sync=True)
+    ch = retime_with_comm(S.chronos(PP, M, 2), TC, sync=True)
+    r50 = retime_with_comm(S.onef1b(PP, M, recomp=0.5), TC / 2, sync=True)
+    cr = retime_with_comm(S.chronos_recomp(PP, M), TC, sync=True)
+    # beyond-paper: async P2P (XLA collective-permute overlap)
+    ch_async = retime_with_comm(S.chronos(PP, M, 2), TC, sync=False)
+    return {
+        "1f1b": f1.ideal_compute_fraction(),
+        "chronos": ch.ideal_compute_fraction(),
+        "1f1b+R=50%": r50.ideal_compute_fraction(),
+        "chronos+recomp": cr.ideal_compute_fraction(),
+        "chronos_asyncP2P": ch_async.ideal_compute_fraction(),
+    }
+
+
+def run(bench):
+    r = rows()
+    for k, v in r.items():
+        bench.add(f"fig13_icf_{k}", lambda v=v: round(v, 4))
+    bench.add("fig13_chronos_drop_vs_1f1b (paper ~6%)",
+              lambda: round(r["1f1b"] - r["chronos"], 4))
+    bench.add("fig13_recomp_gap_vs_r50 (paper <=3%)",
+              lambda: round(abs(r["1f1b+R=50%"] - r["chronos+recomp"]), 4))
+    bench.add("fig13_async_beats_sync (beyond paper)",
+              lambda: round(r["chronos_asyncP2P"] - r["chronos"], 4))
+    return r

@@ -1,0 +1,69 @@
+"""Fig. 15/16 — design-space exploration.
+
+Fig. 15: Chronos-Recomp at chunk sizes v=2,3,4 under PP4_TP8 with varying
+recompute budget: recomputing the *shallowest* layers first always beats
+uniform recomputation; e.g. v=4, recompute 25% of layers -> up to 43.75%
+activation saving.
+
+Fig. 16: Chronos-Offload with more chunks: diminishing returns (chunk
+count equal to PP stops helping).
+"""
+from __future__ import annotations
+
+from repro.core import schedules as S
+
+PP, M = 4, 32
+
+
+def fig15():
+    out = {}
+    for v in (2, 3, 4):
+        for rc in range(0, v + 1):
+            try:
+                if rc == 0:
+                    sched = S.chronos(PP, M, v)
+                else:
+                    sched = S.chronos_recomp(PP, M, v=v, rho=1.0,
+                                             recomp_chunks=rc)
+                pk = sched.peak_activation(count_transient=False)
+            except Exception:
+                pk = float("nan")
+            out[(v, rc)] = pk
+    # uniform-recompute reference at matched budget (recompute fraction
+    # rc/v of all layers uniformly in 1F1B)
+    for v in (2, 3, 4):
+        for rc in range(1, v):
+            out[("uniform", v, rc)] = S.onef1b(
+                PP, M, recomp=rc / v).peak_activation(count_transient=False)
+    return out
+
+
+def fig16():
+    """Usable cooldown bubble growth with chunk count (paper: chunk=3
+    gives +50% bubbles at PP4; chunk=4 gives no more than chunk=3)."""
+    out = {}
+    for v in (2, 3, 4):
+        sched = S.chronos(PP, M, v)
+        gaps = sched.warmup_cooldown_bubbles(stage=PP - 1)
+        out[v] = sum(b - a for a, b in gaps) / (3 * v)  # in T_fwd units
+    return out
+
+
+def run(bench):
+    f15 = fig15()
+    for k, vfrac in f15.items():
+        bench.add(f"fig15_peak_{k}", lambda v=vfrac: round(v, 4))
+    # headline: v=4, recompute 1 of 4 chunks (25% of layers)
+    want = f15.get((4, 1))
+    base = f15.get((4, 0))
+    if want == want and base == base:      # not NaN
+        bench.add("fig15_v4_25pct_saving (paper up to 43.75%)",
+                  lambda: round(1 - want / base, 4))
+    # chronos (shallow-first) beats uniform at same budget
+    bench.add("fig15_shallow_first_beats_uniform_v2",
+              lambda: bool(f15[(2, 1)] < f15[("uniform", 2, 1)]))
+    f16 = fig16()
+    for v, bub in f16.items():
+        bench.add(f"fig16_cooldown_bubbles_v{v}_Tfwd",
+                  lambda b=bub: round(b, 3))
+    return f15, f16

@@ -1,0 +1,83 @@
+"""Fig. 9 — End-to-end memory & max trainable model size.
+
+(a) 48-layer llama-70b-family model at (PP,TP)=(8,8), global batch 128,
+    micro batch 2, seq 4K: per-device activation + model-state memory for
+    1F1B / interleaved / Chronos-Pipe / +Chronos-Recomp / +Chronos-Offload.
+(b) max trainable layers under 32 GB HBM per schedule:
+    paper: 1F1B 40L, Chronos 48L, 1F1B+R50 64L, Chronos-Recomp 80L,
+    ChronosPipe-ALL 96L  =>  2.4x vs 1F1B, 1.5x vs 1F1B+R50.
+"""
+from __future__ import annotations
+
+from benchmarks.common import GB, memory_model
+from repro.configs.llama70b_paper import with_layers
+from repro.core import schedules as S
+
+PP, TP, MB, SEQ, HBM = 8, 8, 2, 4096, 32 * GB
+M = 128 // MB
+TOKENS = MB * SEQ
+
+
+def schedule_points():
+    """name -> (act fraction of m_a, offload fraction of layers)."""
+    return {
+        "interleave-1f1b": (S.interleaved(PP, 4 * PP, 2).peak_activation(),
+                            0.0),
+        "1f1b": (S.onef1b(PP, 4 * PP).peak_activation(), 0.0),
+        "1f1b+R=50%": (S.onef1b(PP, 4 * PP, recomp=0.5).peak_activation(
+            count_transient=False), 0.0),
+        "chronos": (S.chronos(PP, 4 * PP, 2).peak_activation(), 0.0),
+        "chronos+recomp": (S.chronos_recomp(PP, 4 * PP).peak_activation(
+            count_transient=False), 0.0),
+        "chronosALL(+offload)": (
+            S.chronos_recomp(PP, 4 * PP).peak_activation(
+                count_transient=False), 0.5),
+    }
+
+
+def fig9a(layers: int = 48):
+    cfg = with_layers(layers)
+    mm = memory_model(cfg, tp=TP)
+    rows = {}
+    for name, (frac, off) in schedule_points().items():
+        act = frac * mm.m_a(TOKENS, layers)
+        state = mm.model_state(layers, PP, TP, offload_frac=off)
+        rows[name] = {"act_GB": act / GB, "state_GB": state / GB,
+                      "total_GB": (act + state) / GB}
+    return rows
+
+
+def fig9b():
+    mm = memory_model(with_layers(8), tp=TP)
+    rows = {}
+    for name, (frac, off) in schedule_points().items():
+        L = 8
+        best = 0
+        while L <= 512:
+            act = frac * mm.m_a(TOKENS, L)
+            state = mm.model_state(L, PP, TP, offload_frac=off)
+            if act + state + 1.0 * GB <= HBM:
+                best = L
+                L += 8
+            else:
+                break
+        rows[name] = best
+    return rows
+
+
+def run(bench):
+    a = bench.add("fig9a_memory_48L_chronos_total_GB",
+                  lambda: round(fig9a()["chronos"]["total_GB"], 2))
+    rows = fig9a()
+    for k, v in rows.items():
+        bench.add(f"fig9a_{k}_act_GB", lambda v=v: round(v["act_GB"], 2))
+    b = fig9b()
+    for k, v in b.items():
+        bench.add(f"fig9b_max_layers_{k}", lambda v=v: v)
+    bench.add("fig9b_scale_vs_1f1b (paper 2.4x)",
+              lambda: round(b["chronosALL(+offload)"] / b["1f1b"], 2))
+    bench.add("fig9b_scale_vs_1f1b_r50 (paper 1.5x)",
+              lambda: round(b["chronosALL(+offload)"] / b["1f1b+R=50%"], 2))
+    bench.add("fig9b_chronos_vs_1f1b (paper 1.2x)",
+              lambda: round(b["chronos"] / b["1f1b"], 2))
+    return b

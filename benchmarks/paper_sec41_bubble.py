@@ -1,0 +1,29 @@
+"""§4.1 closed-form bubble-overhead check: the constructed schedules'
+simulated bubbles vs the paper's formulas at the paper's example point
+(Tc = 0.05 T_unit, m = 128, p = 4), plus peak-activation formula checks.
+"""
+from __future__ import annotations
+
+from repro.core import analysis as AN
+from repro.core import schedules as S
+from repro.core.schedule import retime_with_comm
+
+
+def run(bench):
+    P, m, tc = 4, 128, 0.05
+    bench.add("sec41_formula_chronos_bubble (8.27%)",
+              lambda: round(AN.chronos_bubble(P, m, tc), 4))
+    bench.add("sec41_formula_1f1b_bubble (5.37%)",
+              lambda: round(AN.onef1b_bubble(P, m, tc), 4))
+    ch = retime_with_comm(S.chronos(P, m, 2), tc, sync=True)
+    f1 = retime_with_comm(S.onef1b(P, m), tc / 2, sync=True)
+    bench.add("sec41_simulated_chronos_bubble",
+              lambda: round(ch.bubble_ratio(), 4))
+    bench.add("sec41_simulated_1f1b_bubble",
+              lambda: round(f1.bubble_ratio(), 4))
+    for P_ in (4, 8, 16, 32):
+        bench.add(
+            f"sec41_chronos_peak_P{P_} (formula "
+            f"{AN.chronos_peak_frac(P_):.4f})",
+            lambda p=P_: round(S.chronos(p, 4 * p, 2).peak_activation(), 4))
+    return True

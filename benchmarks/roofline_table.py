@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Single-pod cells only, per the task spec; prints per (arch x shape):
+compute / memory / collective terms (seconds), dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs ratio, roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "/root/repo/results/dryrun")
+
+
+def load_cells(multi_pod=False):
+    """Cells with roofline terms recomputed by the CURRENT analyzer from
+    the cached partitioned HLO (see repro.roofline.summarize)."""
+    from repro.roofline.summarize import load
+    tag = "multipod" if multi_pod else "singlepod"
+    return [d for _, d in sorted(load(tag).items())]
+
+
+def table(multi_pod=False):
+    from repro.roofline.summarize import fmt_cell
+    rows = []
+    for c in load_cells(multi_pod):
+        if c["status"] != "ok":
+            rows.append((c["arch"], c["shape"], c["status"],
+                         c.get("reason", c.get("error", ""))[:60],
+                         "", "", "", "", ""))
+            continue
+        f = fmt_cell(c, multi_pod)
+        # fmt_cell: [ok, t_comp, t_mem, t_mem_hloUB, t_coll, dominant,
+        #            useful, frac, GB/dev, frac_hloUB]
+        rows.append((c["arch"], c["shape"], "ok", f[1], f[2], f[4], f[5],
+                     f[6], f[7]))
+    return rows
+
+
+def run(bench):
+    rows = table(multi_pod=False)
+    ok = sum(1 for r in rows if r[2] == "ok")
+    skipped = sum(1 for r in rows if r[2] == "skipped")
+    bench.add("roofline_cells_ok", lambda: ok)
+    bench.add("roofline_cells_skipped", lambda: skipped)
+    for r in rows:
+        if r[2] == "ok":
+            bench.add(
+                f"roofline_{r[0]}_{r[1]}",
+                lambda r=r: f"dom={r[6]} frac={r[8]} useful={r[7]}")
+    return rows

@@ -1,0 +1,25 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+import sys
+
+sys.path.insert(0, "/root/repo")
+sys.path.insert(0, "/root/repo/src")
+
+
+def main() -> None:
+    from benchmarks.common import Bench
+    from benchmarks import (paper_fig9_memory, paper_fig10_recomp,
+                            paper_fig11_seqlen, paper_fig12_models,
+                            paper_fig13_p2p, paper_fig14_offload,
+                            paper_fig15_16_dse, paper_sec41_bubble,
+                            roofline_table)
+    bench = Bench()
+    for mod in (paper_sec41_bubble, paper_fig9_memory, paper_fig10_recomp,
+                paper_fig11_seqlen, paper_fig12_models, paper_fig13_p2p,
+                paper_fig14_offload, paper_fig15_16_dse, roofline_table):
+        mod.run(bench)
+    bench.emit()
+
+
+if __name__ == '__main__':
+    main()

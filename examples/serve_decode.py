@@ -1,0 +1,49 @@
+"""Serving example: batched prefill + autoregressive decode with KV/SSM
+caches, on two different architecture families.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import LM
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 32,
+          gen_len: int = 16):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (batch, prompt_len),
+                                0, cfg.vocab_size)
+    cache = lm.init_cache(batch, prompt_len + gen_len)
+
+    prefill = jax.jit(lm.prefill)
+    decode = jax.jit(lm.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompt, cache)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [tok]
+    for t in range(prompt_len, prompt_len + gen_len - 1):
+        logits, cache = decode(params, tok, cache, t)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out.append(tok)
+    toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"[{arch}] generated {toks.shape} tokens in {dt:.1f}s "
+          f"(incl. compile); sample row: {toks[0, :8].tolist()}")
+    return toks
+
+
+def main():
+    serve("tinyllama-1.1b")        # dense GQA + KV cache
+    serve("mamba2-2.7b")           # attention-free: SSM state cache
+    serve("jamba-v0.1-52b")        # hybrid: KV + SSM + MoE
+
+
+if __name__ == "__main__":
+    main()

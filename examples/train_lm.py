@@ -1,0 +1,65 @@
+"""End-to-end training driver example.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+
+Trains a llama-family LM on the synthetic pipeline with the full
+production driver: prefetching data, Chronos-Recomp remat, AdamW with
+fp32 master weights, async checkpoints, straggler monitor.  The default
+preset is sized so a few hundred steps complete on the single-core CPU
+container; --preset 100m is the ~100M-parameter configuration (same
+code path, more FLOPs).
+"""
+import argparse
+import dataclasses
+
+from repro.configs import (OptimizerConfig, ParallelPlan, RecomputeConfig,
+                           ShapeConfig, TrainConfig, get_reduced)
+from repro.launch.train import train
+
+
+def build(preset: str):
+    base = get_reduced("tinyllama-1.1b")
+    if preset == "100m":
+        model = dataclasses.replace(
+            base, name="llama-100m", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32000)
+        shape = ShapeConfig("train_512", 512, 16, "train")
+    else:
+        model = dataclasses.replace(
+            base, name="llama-10m", num_layers=4, d_model=256,
+            num_heads=8, num_kv_heads=2, d_ff=704, vocab_size=2048)
+        shape = ShapeConfig("train_128", 128, 8, "train")
+    return model, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", default="cpu-small")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    model, shape = build(args.preset)
+    tc = TrainConfig(
+        model=model, shape=shape,
+        plan=ParallelPlan(
+            microbatch_size=shape.global_batch,     # single host demo
+            num_chunks=2,
+            recompute=RecomputeConfig(mode="chronos",
+                                      num_recomp_chunks=1)),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps,
+                                  schedule="cosine"),
+        log_every=10, checkpoint_every=100, checkpoint_dir=args.ckpt)
+    out = train(tc, steps=args.steps)
+    first = sum(out["losses"][:10]) / max(len(out["losses"][:10]), 1)
+    last = sum(out["losses"][-10:]) / max(len(out["losses"][-10:]), 1)
+    print(f"[train_lm] steps={out['steps']} first10={first:.4f} "
+          f"last10={last:.4f} improved={first - last:.4f} "
+          f"({out['wall_s']:.0f}s)")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+The ten assigned architectures (exact ids from the task pool) plus the
+paper's own LLAMA2-70B-like workload.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    LONG_500K, DECODE_32K, PREFILL_32K, TRAIN_4K, SHAPES,
+    EncDecConfig, ModelConfig, MoEConfig, OffloadConfig, OptimizerConfig,
+    ParallelPlan, RecomputeConfig, ShapeConfig, SSMConfig, TrainConfig,
+    VisionStubConfig,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "whisper-base": "repro.configs.whisper_base",
+    "llama70b-paper": "repro.configs.llama70b_paper",
+}
+
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "llama70b-paper")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).reduced()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_skipped(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """Return a reason string if this (arch, shape) cell is skipped, else ''.
+
+    Rules from the task spec:
+    - long_500k needs sub-quadratic attention -> skip pure full-attention.
+    - encoder-only archs have no decode step (none in our pool; whisper's
+      decoder decodes, so its decode shapes run).
+    """
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return "long_500k skipped: pure full-attention arch (O(S) KV cache " \
+               "is fine but the paper-pool rule excludes quadratic-attn archs)"
+    return ""

@@ -1,0 +1,34 @@
+"""whisper-base [audio] — enc-dec, 6L each, d_model=512 8H (MHA kv=8)
+d_ff=2048 vocab=51865, conv mel frontend (STUB). [arXiv:2212.04356;
+unverified]
+
+Per the task spec the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings [batch, 1500, d_model]. Decoder layers carry
+self-attention (causal) + cross-attention into the encoder output.
+Sinusoidal-position/GELU/LayerNorm details follow the whisper family;
+we keep learned RoPE-free absolute positions out of scope and use RoPE
+(documented deviation, attention cost identical).
+"""
+from repro.configs.base import ModelConfig, EncDecConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",
+    encdec=EncDecConfig(num_encoder_layers=6, num_frames=1500),
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="whisper-base-smoke", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=512,
+        encdec=EncDecConfig(num_encoder_layers=2, num_frames=64),
+        param_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,3 @@
+"""ChronosPipe core: schedule IR + generators + analysis + SPMD runtime."""
+from repro.core.schedule import Schedule, Task, retime_with_comm  # noqa: F401
+from repro.core.schedules import get_schedule  # noqa: F401

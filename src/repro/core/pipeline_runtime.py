@@ -1,0 +1,514 @@
+"""SPMD pipeline executor: runs a :class:`TaskTable` under a
+partial-manual ``jax.shard_map`` (manual over the pipeline axis, auto
+TP/DP inside stages).
+
+Layer layout: layers are striped chunk-major — chunk ``c`` on stage ``s``
+holds the contiguous block of ``K = L_pad/(v*P)`` layers starting at
+``(c*P+s)*K``.  K must be a multiple of the arch's *structural* period
+(attention/SSM interleave, MoE cadence); local/global attention patterns
+and padding ("null layers", gate=0 passthrough) ride along as per-layer
+data flags, so e.g. gemma3's 5:1 pattern needs no structural alignment.
+
+Backward is boundary + rematerialize: each stage stores only its chunk's
+input payload and recomputes internals inside ``jax.vjp`` at B-task time
+(Chronos-Recomp semantics; the stored-residual optimization for deep
+chunks is a §Perf item).  Embedding / head / encoder parameters are
+replicated across stages, used only where relevant, and their gradients
+psum over the pipe axis — this also gives tied embeddings for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.schedules import get_schedule
+from repro.core.tasktable import (BWD_FIRST, BWD_LAST, BWD_MID, FWD_FIRST,
+                                  FWD_LAST, FWD_MID, IDLE, SEND_BWD,
+                                  SEND_FWD, SEND_HOPB, SEND_HOPF, TaskTable,
+                                  build_task_table)
+from repro.models import layers as L
+from repro.models.sharding import shard
+from repro.models.transformer import _apply_layer, _init_layer
+
+
+def pipeline_period(cfg: ModelConfig) -> int:
+    """Structural period (param-tree shape changes); attention local/global
+    patterns are data flags, not structure."""
+    p = 1
+    if cfg.ssm is not None and cfg.ssm.attn_period:
+        p = _lcm(p, cfg.ssm.attn_period)
+    if cfg.moe is not None and cfg.moe.layer_period > 1:
+        p = _lcm(p, cfg.moe.layer_period)
+    return p
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+@dataclass(frozen=True)
+class StageLayout:
+    P: int
+    v: int
+    L: int              # real layers
+    L_pad: int
+    K: int              # layers per (stage, chunk) block
+    period: int         # structural period
+    M: int              # periods per block = K // period
+
+    @staticmethod
+    def build(cfg: ModelConfig, P: int, v: int) -> "StageLayout":
+        per = pipeline_period(cfg)
+        quantum = P * v * per
+        L_pad = -(-cfg.num_layers // quantum) * quantum
+        K = L_pad // (P * v)
+        return StageLayout(P=P, v=v, L=cfg.num_layers, L_pad=L_pad, K=K,
+                           period=per, M=K // per)
+
+    def global_idx(self, s: int, c: int, j: int) -> int:
+        return (c * self.P + s) * self.K + j
+
+    def flags(self, cfg: ModelConfig) -> Dict[str, np.ndarray]:
+        """window [P,v,M,period] int32; gate [P,v,M,period] f32."""
+        win = np.zeros((self.P, self.v, self.M, self.period), np.int32)
+        gate = np.zeros((self.P, self.v, self.M, self.period), np.float32)
+        for s in range(self.P):
+            for c in range(self.v):
+                for mi in range(self.M):
+                    for j in range(self.period):
+                        g = self.global_idx(s, c, mi * self.period + j)
+                        if g < self.L:
+                            gate[s, c, mi, j] = 1.0
+                            win[s, c, mi, j] = (
+                                0 if cfg.layer_is_global(g)
+                                else cfg.sliding_window)
+        return {"window": win, "gate": gate}
+
+
+# ---------------------------------------------------------------------------
+# parameter init (stage-stacked)
+# ---------------------------------------------------------------------------
+
+def init_pipeline_params(key, cfg: ModelConfig, layout: StageLayout):
+    """Returns (params, logical_specs).  Block leaves are
+    [P, v, M, ...]; embed/head/final_norm/encoder replicated over pp."""
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    blocks, bspecs = [], []
+    for j in range(layout.period):
+        total = layout.P * layout.v * layout.M
+        keys = jax.random.split(jax.random.fold_in(ks[0], j), total)
+        flat = jax.vmap(lambda k: _init_layer(k, cfg, j)[0])(keys)
+        stacked = jax.tree.map(
+            lambda a: a.reshape((layout.P, layout.v, layout.M) + a.shape[1:]),
+            flat)
+        _, sj = _init_layer(keys[0], cfg, j)
+        blocks.append(stacked)
+        bspecs.append(jax.tree.map(
+            lambda sp: ("pp", None, None) + tuple(sp), sj,
+            is_leaf=lambda x: isinstance(x, tuple)))
+
+    params: Dict[str, Any] = {"blocks": blocks}
+    specs: Dict[str, Any] = {"blocks": bspecs}
+    params["embed"], specs["embed"] = L.init_embed(
+        ks[1], cfg.vocab_size, cfg.d_model, dtype, cfg.tie_embeddings)
+    params["final_norm"], specs["final_norm"] = L.init_rmsnorm(
+        cfg.d_model, dtype)
+    if cfg.encdec is not None:
+        from repro.models.transformer import LM
+        lm = LM(cfg)
+        full, full_specs = lm.init(ks[2])
+        params["encoder"] = full["encoder"]
+        params["enc_norm"] = full["enc_norm"]
+        specs["encoder"] = full_specs["encoder"]
+        specs["enc_norm"] = full_specs["enc_norm"]
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PipelineSpec:
+    cfg: ModelConfig
+    layout: StageLayout
+    table: TaskTable
+    mbB: int                    # global microbatch size (sequences)
+    S: int                      # token positions fed to the stack
+    prefix: int                 # vlm patch prefix length
+    enc_len: int                # whisper encoder positions (0 if none)
+    pp_axis: str = "pp"
+    aux_weight: float = 0.01
+
+
+def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
+                       microbatch: int, seq_len: int, schedule: str,
+                       pp_axis: str = "pp", **sched_kw) -> PipelineSpec:
+    layout = StageLayout.build(cfg, P, v)
+    sched = get_schedule(schedule, P, m, **({"v": v} if schedule in
+                                            ("chronos", "interleaved",
+                                             "chronos_zero2") else {}),
+                         **sched_kw)
+    table = build_task_table(sched)
+    prefix = cfg.vision.num_patches if cfg.vision is not None else 0
+    enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
+    return PipelineSpec(cfg=cfg, layout=layout, table=table, mbB=microbatch,
+                        S=seq_len - 1 + prefix, prefix=prefix,
+                        enc_len=enc_len, pp_axis=pp_axis)
+
+
+def _to_varying(a, axis: str):
+    """pcast to varying over ``axis`` if inside a manual shard_map and not
+    already varying; no-op otherwise."""
+    try:
+        t = jax.typeof(a)
+        if axis in getattr(t, "vma", ()):
+            return a
+        return jax.lax.pcast(a, axis, to="varying")
+    except Exception:
+        return a
+
+
+def _zero_payload(spec: PipelineSpec, dtype):
+    pay = {"x": jnp.zeros((spec.mbB, spec.S, spec.cfg.d_model), dtype),
+           "aux": jnp.zeros((1,), jnp.float32)}
+    if spec.enc_len:
+        pay["enc"] = jnp.zeros((spec.mbB, spec.enc_len, spec.cfg.d_model),
+                               dtype)
+    return pay
+
+
+def _chunk_fwd(spec: PipelineSpec, block_params_c, flags_c, payload):
+    """Run this stage's chunk over the payload. block_params_c: leaves
+    [M, ...]; flags_c: {window, gate} [M, period]."""
+    cfg = spec.cfg
+    x = payload["x"]
+    aux = payload["aux"]
+    Bz, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+    enc = payload.get("enc")
+
+    def body(carry, xs):
+        x, aux = carry
+        ptrees, fl = xs
+        for j in range(spec.layout.period):
+            x, _, aux = _apply_layer(
+                ptrees[j], x, positions, cfg, j,
+                enc_out=enc, prefix_len=spec.prefix, aux_sum=aux,
+                window_override=fl["window"][j], gate=fl["gate"][j])
+        return (x, aux), None
+
+    # FlashAttention semantics under vjp: keep projection outputs, always
+    # recompute attention internals (the Pallas kernel makes this free on
+    # TPU; without it the B-task would resurrect [S,S] scores per layer).
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        prevent_cse=False)
+    init = jax.tree.map(lambda a: _to_varying(a, spec.pp_axis),
+                        (x, aux[0]))
+    (x, aux2), _ = jax.lax.scan(body, init, (block_params_c, flags_c))
+    out = dict(payload)
+    out["x"] = x
+    out["aux"] = jnp.reshape(aux2, (1,))
+    return out
+
+
+def _embed_tokens(spec: PipelineSpec, params, tokens, patch=None,
+                  frames=None):
+    cfg = spec.cfg
+    x = L.embed(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patch is not None:
+        x = jnp.concatenate([patch.astype(x.dtype), x], axis=1)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    x = shard(x, "dp", None, None)
+    pay = {"x": x, "aux": jnp.zeros((1,), jnp.float32)}
+    if spec.enc_len:
+        from repro.models.transformer import LM
+        enc = LM(cfg).encode(params, frames)
+        pay["enc"] = enc
+    return pay
+
+
+def _head_loss(spec: PipelineSpec, params, payload, labels, loss_mask):
+    cfg = spec.cfg
+    x = L.rmsnorm(params["final_norm"], payload["x"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    if spec.prefix:
+        logits = logits[:, spec.prefix:]
+    ce = L.softmax_xent(logits, labels, loss_mask)
+    return ce + spec.aux_weight * payload["aux"][0]
+
+
+def make_train_grads_fn(spec: PipelineSpec, mesh):
+    """Returns fn(params, batch) -> (grads, metrics) running the full
+    pipeline schedule.  batch: tokens [m, mbB, S_tokens] (+ optional
+    patch_embeds [m, mbB, prefix, d], frame_embeds [m, mbB, enc_len, d],
+    loss_mask [m, mbB, S_tokens-1])."""
+    cfg = spec.cfg
+    tab = spec.table
+    P_, v = tab.P, tab.v
+    pp = spec.pp_axis
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 8]
+    act_offsets = np.zeros(v, np.int64)
+    total_act = 0
+    for c in range(v):
+        act_offsets[c] = total_act
+        total_act += tab.act_depth[c]
+    act_offsets = jnp.asarray(act_offsets)
+    flags_np = spec.layout.flags(cfg)
+
+    def spmd(params, batch):
+        s_idx = jax.lax.axis_index(pp)
+        blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
+        # ^ in_specs P("pp") leaves local shape [1, v, M, ...] -> strip
+        flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
+        shared = {k: params[k] for k in params if k != "blocks"}
+        dtype = jnp.dtype(cfg.compute_dtype)
+
+        def to_varying(a):
+            try:
+                if pp in jax.typeof(a).vma:
+                    return a
+            except AttributeError:
+                pass
+            return jax.lax.pcast(a, pp, to="varying")
+
+        def vary(x):
+            return jax.tree.map(to_varying, x)
+
+        def fwd_fn(blocks_c, shared_p, payload, flags_c):
+            return vary(_chunk_fwd(spec, blocks_c, flags_c, payload))
+
+        def first_fn(blocks_c, shared_p, tokens, patch, frames, flags_c):
+            pay = _embed_tokens(spec, shared_p, tokens, patch, frames)
+            return vary(_chunk_fwd(spec, blocks_c, flags_c, pay))
+
+        def last_fn(blocks_c, shared_p, payload, labels, mask, flags_c):
+            out = _chunk_fwd(spec, blocks_c, flags_c, payload)
+            ce = _head_loss(spec, shared_p, out, labels, mask)
+            return to_varying(ce)
+
+        zero_pay = vary(_zero_payload(spec, dtype))
+        zero_blocks_g = jax.tree.map(jnp.zeros_like, blocks)
+        zero_shared_g = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), shared)
+
+        def pin_buf(t):
+            """Payload ring buffers are scan carries; without an explicit
+            constraint XLA replicates them over data/model — pin
+            [slots, mbB, S, d] to batch-over-dp."""
+            def one(a):
+                if a.ndim >= 3:
+                    return shard(a, None, "dp", None, None)
+                return a
+            return jax.tree.map(one, t)
+
+        def carry_init():
+            return {
+                "fq": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((tab.fq_depth,) + a.shape, a.dtype),
+                    zero_pay)),
+                "bq": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((tab.bq_depth,) + a.shape, a.dtype),
+                    zero_pay)),
+                "act": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_act,) + a.shape, a.dtype),
+                    zero_pay)),
+                "gb": zero_blocks_g,
+                "gs": zero_shared_g,
+                "loss": jnp.zeros((), jnp.float32),
+                "nloss": jnp.zeros((), jnp.float32),
+            }
+
+        def get_mb(arr, mb):
+            return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
+
+        def tick(carry, t):
+            row = table_arr[t, s_idx]                  # [8]
+            op, c, mb = row[0], row[1], row[2]
+            src, aslot, snd = row[3], row[4], row[5]
+            rcf, rcb = row[6], row[7]
+
+            blocks_c = [jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, False), t_)
+                for t_ in blocks]
+            flags_c = {k: jax.lax.dynamic_index_in_dim(vv, c, 0, False)
+                       for k, vv in flags.items()}
+            x_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.maximum(src, 0), 0, False), carry["fq"])
+            dy_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.maximum(src, 0), 0, False), carry["bq"])
+            gslot = act_offsets[c] + jnp.maximum(aslot, 0)
+            act_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, gslot, 0, False),
+                carry["act"])
+            tokens = get_mb(batch["tokens"], mb)
+            labels = tokens[:, 1:]
+            tok_in = tokens[:, :-1]
+            patch = (get_mb(batch["patch_embeds"], mb)
+                     if "patch_embeds" in batch else None)
+            frames = (get_mb(batch["frame_embeds"], mb)
+                      if "frame_embeds" in batch else None)
+            mask = (get_mb(batch["loss_mask"], mb)
+                    if "loss_mask" in batch else None)
+
+            def wr_act(carry, pay):
+                return dict(carry, act=jax.tree.map(
+                    lambda buf, p: jax.lax.dynamic_update_index_in_dim(
+                        buf, p, gslot, 0), carry["act"], pay))
+
+            def br_idle(carry):
+                return carry, zero_pay
+
+            def br_fwd_mid(carry):
+                out = fwd_fn(blocks_c, shared, x_in, flags_c)
+                return wr_act(carry, x_in), out
+
+            def br_fwd_first(carry):
+                out = first_fn(blocks_c, shared, tok_in, patch, frames,
+                               flags_c)
+                return carry, out
+
+            def br_fwd_last(carry):
+                out = fwd_fn(blocks_c, shared, x_in, flags_c)
+                ce = _head_loss(spec, shared, out, labels, mask)
+                carry = wr_act(carry, x_in)
+                return dict(carry, loss=carry["loss"] + ce,
+                            nloss=carry["nloss"] + 1.0), zero_pay
+
+            def _add_block_grads(carry, gb_c):
+                gb = jax.tree.map(
+                    lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                        g, jax.lax.dynamic_index_in_dim(g, c, 0, False) + d,
+                        c, 0),
+                    carry["gb"], gb_c)
+                return dict(carry, gb=gb)
+
+            def _add_shared_grads(carry, gs):
+                return dict(carry, gs=jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), carry["gs"], gs))
+
+            def br_bwd_mid(carry):
+                dy = vary(dict(dy_in))
+                _, vjp = jax.vjp(
+                    lambda bp, pay: fwd_fn(bp, shared, pay, flags_c),
+                    vary(blocks_c), vary(act_in))
+                gb_c, dx = vjp(dy)
+                return _add_block_grads(carry, gb_c), dx
+
+            def br_bwd_first(carry):
+                dy = vary(dict(dy_in))
+                _, vjp = jax.vjp(
+                    lambda bp, sp: first_fn(bp, sp, tok_in, patch, frames,
+                                            flags_c),
+                    vary(blocks_c), vary(shared))
+                gb_c, gs = vjp(dy)
+                carry = _add_block_grads(carry, gb_c)
+                return _add_shared_grads(carry, gs), zero_pay
+
+            def br_bwd_last(carry):
+                _, vjp = jax.vjp(
+                    lambda bp, sp, pay: last_fn(bp, sp, pay, labels, mask,
+                                                flags_c),
+                    vary(blocks_c), vary(shared), vary(act_in))
+                gb_c, gs, dx = vjp(to_varying(jnp.ones((), jnp.float32)))
+                carry = _add_block_grads(carry, gb_c)
+                return _add_shared_grads(carry, gs), dx
+
+            carry, out = jax.lax.switch(
+                op, [br_idle, br_fwd_mid, br_fwd_first, br_fwd_last,
+                     br_bwd_mid, br_bwd_first, br_bwd_last], carry)
+
+            # ---- route ----
+            def sel(code):
+                return jax.tree.map(
+                    lambda a: jnp.where(snd == code, a,
+                                        jnp.zeros_like(a)), out)
+            perm_f = [(i, i + 1) for i in range(P_ - 1)]
+            perm_b = [(i + 1, i) for i in range(P_ - 1)]
+            perm_h = ([(P_ - 1, 0), (0, P_ - 1)] if P_ > 1 else [(0, 0)])
+            moved_f = _ppermute(sel(SEND_FWD), pp, perm_f)
+            moved_b = _ppermute(sel(SEND_BWD), pp, perm_b)
+            hop_pay = jax.tree.map(lambda a, b: a + b,
+                                   sel(SEND_HOPF), sel(SEND_HOPB))
+            moved_h = _ppermute(hop_pay, pp, perm_h)
+
+            arrive_f = jax.tree.map(
+                lambda a, b: jnp.where(s_idx == 0, b, a), moved_f, moved_h)
+            arrive_b = jax.tree.map(
+                lambda a, b: jnp.where(s_idx == P_ - 1, b, a),
+                moved_b, moved_h)
+
+            def q_write(q, slot, val):
+                cur = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, jnp.maximum(slot, 0), 0, False), q)
+                val = jax.tree.map(
+                    lambda new, old: jnp.where(slot >= 0, new, old),
+                    val, cur)
+                return jax.tree.map(
+                    lambda a, vv: jax.lax.dynamic_update_index_in_dim(
+                        a, vv, jnp.maximum(slot, 0), 0), q, val)
+
+            carry = dict(carry,
+                         fq=pin_buf(q_write(carry["fq"], rcf, arrive_f)),
+                         bq=pin_buf(q_write(carry["bq"], rcb, arrive_b)),
+                         act=pin_buf(carry["act"]))
+            return carry, None
+
+        def to_varying(a):
+            try:
+                if pp in jax.typeof(a).vma:
+                    return a
+            except AttributeError:
+                pass
+            return jax.lax.pcast(a, pp, to="varying")
+
+        init = jax.tree.map(to_varying, carry_init())
+        carry, _ = jax.lax.scan(tick, init, jnp.arange(tab.T))
+
+        # gradients: block grads stay stage-local; shared grads psum over pp
+        gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
+        gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
+        loss = jax.lax.psum(carry["loss"], pp)
+        n = jax.lax.psum(carry["nloss"], pp)
+        metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
+        return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+
+    def call(params, batch):
+        in_specs = (
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            jax.tree.map(lambda _: P(), batch),
+        )
+        out_specs = (
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            {"loss": P(), "n_microbatches": P()},
+        )
+        return jax.shard_map(spmd, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names={pp})(
+                                 params, batch)
+    return call
+
+
+def _ppermute(x, axis, perm):
+    return jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm), x)

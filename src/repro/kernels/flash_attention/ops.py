@@ -1,0 +1,45 @@
+"""jit'd public wrapper with custom VJP.
+
+Forward runs the Pallas kernel (interpret=True on CPU backends); the
+backward pass recomputes attention via the reference path under
+``jax.vjp`` (flash-style recompute-from-(q,k,v); a dedicated dq/dkv
+Pallas backward kernel is a further TPU optimization, tracked in
+EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, prefix=0, q_offset=0):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               prefix=prefix, q_offset=q_offset,
+                               interpret=_on_cpu())
+    return o
+
+
+def _fwd(q, k, v, causal, window, prefix, q_offset):
+    o = flash_attention(q, k, v, causal, window, prefix, q_offset)
+    return o, (q, k, v)
+
+
+def _bwd(causal, window, prefix, q_offset, res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(
+            q_, k_, v_, causal=causal, window=window, prefix=prefix,
+            q_offset=q_offset)[0], q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=0, prefix=0,
+                  q_offset=0):
+    """q [B,Sq,H,d]; k,v [B,Sk,G,d]. Returns (o [B,Sq,H,d], lse [B,H,Sq])."""
+    B, Sq, H, d = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = scale or 1.0 / math.sqrt(d)
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = k_pos <= q_pos
+    if prefix:
+        ok = ok | (k_pos < prefix)
+    if window:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p / jnp.maximum(l[..., None], 1e-30),
+                   vr.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o.astype(q.dtype), lse

@@ -1,0 +1,2 @@
+from repro.kernels.fused_adamw.ops import adamw_update_leaf  # noqa: F401
+from repro.kernels.fused_adamw.kernel import fused_adamw_flat  # noqa: F401

@@ -1,0 +1,68 @@
+"""Fused AdamW elementwise update (Pallas TPU).
+
+This is the device half of Chronos-Offload's split optimizer: the
+shallow chunks update on-device with one fused VPU pass (one read of
+(g, mu, nu, w), one write of (mu', nu', w')) instead of ~10 separate
+HLO elementwise ops — memory-bound, so fusion is the whole win.
+Scalars (lr, bias corrections) ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sc_ref, g_ref, mu_ref, nu_ref, w_ref, mu_o, nu_o, w_o,
+            *, b1, b2, eps):
+    lr, bc1, bc2, wd = sc_ref[0], sc_ref[1], sc_ref[2], sc_ref[3]
+    g = g_ref[...].astype(jnp.float32)
+    mu = b1 * mu_ref[...] + (1 - b1) * g
+    nu = b2 * nu_ref[...] + (1 - b2) * g * g
+    w = w_ref[...]
+    upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) + wd * w
+    w_o[...] = w - lr * upd
+    mu_o[...] = mu
+    nu_o[...] = nu
+
+
+def fused_adamw_flat(g, mu, nu, w, *, lr, b1, b2, eps, bc1, bc2, wd,
+                     block: int = 65536, interpret=False):
+    """All inputs flat fp32 [n] (g may be any float dtype).
+    Returns (mu', nu', w')."""
+    n = w.shape[0]
+    block = min(block, n)
+    nblk = -(-n // block)
+    pad = nblk * block - n
+    if pad:
+        g, mu, nu, w = (jnp.pad(a, (0, pad)) for a in (g, mu, nu, w))
+    scalars = jnp.stack([lr.astype(jnp.float32) if hasattr(lr, "dtype")
+                         else jnp.float32(lr),
+                         jnp.asarray(bc1, jnp.float32),
+                         jnp.asarray(bc2, jnp.float32),
+                         jnp.asarray(wd, jnp.float32)])
+    kernel = functools.partial(_kernel, b1=b1, b2=b2, eps=eps)
+    mu2, nu2, w2 = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((nblk * block,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(scalars, g.astype(jnp.float32), mu, nu, w)
+    if pad:
+        mu2, nu2, w2 = mu2[:n], nu2[:n], w2[:n]
+    return mu2, nu2, w2

@@ -1,0 +1,18 @@
+"""Wrapper matching optim.adamw's pluggable ``update_fn`` signature."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_adamw.kernel import fused_adamw_flat
+
+
+def adamw_update_leaf(g, mu, nu, w, *, lr, b1, b2, eps, bc1, bc2, wd):
+    """Shape-preserving fused update of one leaf."""
+    shape = w.shape
+    interp = jax.default_backend() == "cpu"
+    mu2, nu2, w2 = fused_adamw_flat(
+        g.reshape(-1), mu.reshape(-1), nu.reshape(-1), w.reshape(-1),
+        lr=lr, b1=b1, b2=b2, eps=eps, bc1=bc1, bc2=bc2, wd=wd,
+        interpret=interp)
+    return mu2.reshape(shape), nu2.reshape(shape), w2.reshape(shape)

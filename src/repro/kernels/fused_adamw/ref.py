@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused AdamW kernel."""
+import jax.numpy as jnp
+
+
+def adamw_ref(g, mu, nu, w, *, lr, b1, b2, eps, bc1, bc2, wd):
+    g = g.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * g * g
+    upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) + wd * w
+    return mu, nu, w - lr * upd

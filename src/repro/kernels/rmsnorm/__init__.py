@@ -1,0 +1,2 @@
+from repro.kernels.rmsnorm.ops import rmsnorm_fused  # noqa: F401
+from repro.kernels.rmsnorm.kernel import rmsnorm_rows  # noqa: F401

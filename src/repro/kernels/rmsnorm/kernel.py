@@ -1,0 +1,36 @@
+"""Fused RMSNorm kernel (Pallas TPU): one pass, fp32 statistics."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                 interpret=False):
+    """x [R, d]; scale [d]."""
+    R, d = x.shape
+    br = min(block_rows, R)
+    nblk = -(-R // br)
+    pad = nblk * br - R
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk * br, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out[:R]

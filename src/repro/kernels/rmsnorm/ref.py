@@ -1,0 +1,6 @@
+"""Oracle: models.layers.rmsnorm reshaped to rows."""
+from repro.models.layers import rmsnorm  # noqa: F401
+
+
+def rmsnorm_rows_ref(x, scale, eps=1e-6):
+    return rmsnorm({"scale": scale}, x, eps)

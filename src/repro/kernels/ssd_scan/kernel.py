@@ -1,0 +1,99 @@
+"""Mamba-2 SSD chunk-scan kernel (Pallas TPU).
+
+TPU adaptation: the chunk dimension is a *sequential* grid axis — TPU
+grids execute in order, so the inter-chunk recurrent state h [P, N]
+lives in VMEM scratch across chunk iterations (the CUDA version uses a
+separate state-passing kernel + global memory).  The intra-chunk
+quadratic term maps onto the MXU as three [Q x Q] / [Q x P] matmuls.
+
+Grid: (B*H, num_chunks)  — chunks sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hout_ref, h_scr,
+            *, Q, nchunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)            # [Q, P]
+    bb = b_ref[0].astype(jnp.float32)           # [Q, N]
+    cc = c_ref[0].astype(jnp.float32)           # [Q, N]
+    dt = dt_ref[0].astype(jnp.float32)          # [Q]
+    A = a_ref[0, 0]                             # scalar
+
+    a = dt * A                                  # [Q]
+    cum = jnp.cumsum(a)
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0) * dt[None, :]
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * L                             # [Q, Q]
+    y_intra = jax.lax.dot(scores, x, preferred_element_type=jnp.float32)
+    h = h_scr[...]                              # [P, N]
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cc, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    dec_end = jnp.exp(cum[-1] - cum) * dt       # [Q]
+    add = jax.lax.dot_general(x * dec_end[:, None], bb,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    h_scr[...] = jnp.exp(cum[-1]) * h + add
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == nchunks - 1)
+    def _fin():
+        hout_ref[0] = h_scr[...]
+
+
+def ssd_scan(x, Bc, Cc, dt, A, *, chunk: int = 64, interpret=False):
+    """x [B,S,H,P]; Bc,Cc [B,S,N]; dt [B,S,H] (fp32 post-softplus);
+    A [H] negative.  Returns (y [B,S,H,P] fp32, h [B,H,P,N] fp32)."""
+    B, S, H, P = x.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "pad sequence to a chunk multiple"
+    nchunks = S // Q
+
+    xt = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    bt = jnp.broadcast_to(Bc[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    ct = jnp.broadcast_to(Cc[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    dtt = dt.transpose(0, 2, 1).reshape(B * H, S)
+    at = jnp.broadcast_to(A[None], (B, H)).reshape(B * H, 1)
+
+    kernel = functools.partial(_kernel, Q=Q, nchunks=nchunks)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B * H, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, bt, ct, dtt, at)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    h = h.reshape(B, H, P, N)
+    return y, h

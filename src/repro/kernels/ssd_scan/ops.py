@@ -1,0 +1,11 @@
+"""jit'd wrapper for the SSD chunk-scan kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+def ssd(x, Bc, Cc, dt, A, *, chunk: int = 64):
+    return ssd_scan(x, Bc, Cc, dt, A, chunk=chunk,
+                    interpret=jax.default_backend() == "cpu")

@@ -1,0 +1,2 @@
+"""Oracle: the naive sequential SSD recurrence (models/mamba.py)."""
+from repro.models.mamba import ssd_reference  # noqa: F401

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" \
+    " --xla_backend_optimization_level=0" \
+    " --xla_llvm_disable_expensive_passes=true"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k --multi-pod
+
+The FIRST TWO LINES of this file set 512 virtual host devices before any
+jax import — jax pins the device count at first init.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, OptimizerConfig,  # noqa: E402
+                           ParallelPlan, RecomputeConfig, cell_is_skipped,
+                           get_config, get_shape)
+from repro.launch.mesh import (make_production_mesh,  # noqa: E402
+                               production_rules)
+from repro.launch.steps import (make_pipeline_train_step,  # noqa: E402
+                                make_serve_steps, make_train_step)
+from repro.roofline import model_flops_for  # noqa: E402
+from repro.roofline.analysis import Roofline, analyze_hlo  # noqa: E402
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "/root/repo/results/dryrun")
+
+
+def default_plan(cfg, multi_pod: bool) -> ParallelPlan:
+    return ParallelPlan(
+        schedule="chronos", num_chunks=2,
+        microbatch_size=int(os.environ.get("DRYRUN_MICROBATCH", "2")),
+        zero_stage=int(os.environ.get("DRYRUN_ZERO_STAGE", "3")),
+        recompute=RecomputeConfig(mode="chronos", num_recomp_chunks=1),
+        pp_axis="pod" if multi_pod else None)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pipeline: bool = True, mesh=None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": skip}
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    chips = mesh.size
+    plan = default_plan(cfg, multi_pod)
+    ocfg = OptimizerConfig()
+    t0 = time.time()
+
+    use_pipeline = (multi_pod and pipeline and shape.kind == "train")
+    rules = production_rules(multi_pod, serving=shape.kind != "train",
+                             pipeline=use_pipeline)
+
+    if shape.kind == "train":
+        builder = make_pipeline_train_step if use_pipeline \
+            else make_train_step
+        step, structs, in_sh, out_sh = builder(cfg, shape, plan, ocfg,
+                                               mesh, rules)
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*structs)
+            compiled = lowered.compile()
+        entry = "train_step"
+    else:
+        steps = make_serve_steps(cfg, shape, mesh, rules)
+        entry, (fn, structs, in_sh, out_sh) = next(iter(steps.items()))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*structs)
+            compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    print(mem)                             # proves it fits
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+    hlo = compiled.as_text()
+    # keep the partitioned HLO for offline re-analysis (hillclimbing)
+    import gzip
+    tag = "multipod" if multi_pod else "singlepod"
+    os.makedirs(RESULTS, exist_ok=True)
+    with gzip.open(os.path.join(
+            RESULTS, f"{arch}__{shape_name}__{tag}.hlo.gz"), "wt") as f:
+        f.write(hlo)
+    # cost_analysis does NOT multiply while-loop trip counts (scans hide
+    # nearly everything) — derive all three roofline terms from the
+    # partitioned HLO instead.
+    st = analyze_hlo(hlo)
+    coll = st.collectives
+    mf = model_flops_for(cfg, shape, shape.kind)
+    roof = Roofline(flops=st.flops, bytes_hbm=st.bytes_traffic,
+                    collective_bytes=coll.total_bytes * chips,
+                    chips=chips, model_flops=mf)
+
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, 0)
+        mem_d["total_per_device"] = (
+            mem_d.get("argument_size_in_bytes", 0)
+            + mem_d.get("temp_size_in_bytes", 0)
+            + mem_d.get("output_size_in_bytes", 0)
+            - mem_d.get("alias_size_in_bytes", 0))
+
+    return {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "entry": entry, "chips": chips,
+        "pipeline": use_pipeline,
+        "seconds_to_compile": round(time.time() - t0, 1),
+        "memory": mem_d,
+        "roofline": roof.as_dict(),
+        "traffic_raw_bytes": st.bytes_traffic_raw,
+        "score_class_bytes": st.score_bytes,
+        "collectives": {"bytes_by_kind": coll.bytes_by_kind,
+                        "count_by_kind": coll.count_by_kind},
+    }
+
+
+def cell_path(arch, shape_name, multi_pod):
+    tag = "multipod" if multi_pod else "singlepod"
+    return os.path.join(RESULTS, f"{arch}__{shape_name}__{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-pipeline", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+
+    cells = []
+    if args.all:
+        # single-pod first (the roofline table), then multi-pod
+        for mp in (False, True):
+            for arch in ARCH_IDS:
+                for shape_name in SHAPES:
+                    cells.append((arch, shape_name, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    mesh_cache = {}
+    failures = 0
+    for arch, shape_name, mp in cells:
+        path = cell_path(arch, shape_name, mp)
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {arch} x {shape_name} x "
+                  f"{'multi' if mp else 'single'}")
+            continue
+        print(f"=== {arch} x {shape_name} x "
+              f"{'multi' if mp else 'single'}pod ===", flush=True)
+        if mp not in mesh_cache:
+            mesh_cache[mp] = make_production_mesh(multi_pod=mp)
+        try:
+            res = run_cell(arch, shape_name, mp,
+                           pipeline=not args.no_pipeline,
+                           mesh=mesh_cache[mp])
+        except Exception:
+            failures += 1
+            res = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                   "status": "error",
+                   "error": traceback.format_exc()[-3000:]}
+            print(res["error"])
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"-> {res['status']}", flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production meshes + logical-axis rules.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod: (16, 16) ("data", "model") = 256
+chips.  Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips; the
+pipeline axis maps onto "pod" (PP across pods is the paper-faithful
+deployment: PP tolerates the thin inter-pod links, TP stays inside the
+pod's ICI).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_study_mesh(pp: int, dp: int, tp: int):
+    """Deeper-pipeline study meshes for §Perf (e.g. (8, 2, 16))."""
+    return jax.make_mesh((pp, dp, tp), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def production_rules(multi_pod: bool, *, serving: bool = False,
+                     pipeline: bool = False) -> Dict[str, object]:
+    """logical axis -> physical axes for the production meshes.
+
+    - training single-pod: FSDP(data) x TP(model) (ZeRO-3 + TP).
+    - training multi-pod:  PP(pod) x FSDP(data) x TP(model) when
+      ``pipeline``; otherwise DP over (pod, data).
+    - serving: batch over (pod, data); kv-seq over "data" for bs=1.
+    """
+    if not multi_pod:
+        return {"dp": "data", "fsdp": "data", "tp": "model", "sp": "data"}
+    if pipeline:
+        return {"dp": "data", "fsdp": "data", "tp": "model", "sp": "data",
+                "pp": "pod"}
+    return {"dp": ("pod", "data"), "fsdp": ("pod", "data"), "tp": "model",
+            "sp": ("pod", "data")}

@@ -1,0 +1,366 @@
+"""Step builders + input specs for training and serving.
+
+Everything here is AOT-friendly: ``input_specs`` returns
+ShapeDtypeStructs (weak-type-correct, shardable, no allocation), and the
+step builders return (fn, in_shardings, out_shardings) tuples ready for
+``jax.jit(...).lower(...)`` — the dry-run path — or real execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParallelPlan,
+                                ShapeConfig)
+from repro.models import LM
+from repro.models.sharding import ShardEnv, sanitize_spec, shard_env
+from repro.optim import adamw_init, adamw_update, cast_like, zero_state_specs
+from repro.optim.adamw import drop_fsdp
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def resolve_shardings(tree, logical_specs, mesh, rules,
+                      shapes: Optional[Any] = None):
+    """logical spec tree -> NamedSharding tree (divisibility-sanitized)."""
+    env = ShardEnv(mesh, rules)
+
+    def one(leaf, spec):
+        pspec = env.resolve(spec) if spec is not None else P()
+        shape = leaf.shape if hasattr(leaf, "shape") else None
+        if shape is not None:
+            pspec = sanitize_spec(pspec, shape, mesh)
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree.map(
+        one, tree, logical_specs,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) or x is None
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      plan: ParallelPlan, mesh, rules):
+    """tokens [m, mb_global, S] (+ modality stubs)."""
+    dp = _axes_size(mesh, rules.get("dp"))
+    mb_global = plan.microbatch_size * dp
+    m = max(1, shape.global_batch // mb_global)
+    structs = {"tokens": jax.ShapeDtypeStruct(
+        (m, mb_global, shape.seq_len), jnp.int32)}
+    shardings = {"tokens": NamedSharding(mesh, sanitize_spec(
+        P(None, _r(rules, "dp")), (m, mb_global, shape.seq_len), mesh))}
+    if cfg.vision is not None:
+        s = (m, mb_global, cfg.vision.num_patches, cfg.d_model)
+        structs["patch_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        shardings["patch_embeds"] = NamedSharding(mesh, sanitize_spec(
+            P(None, _r(rules, "dp")), s, mesh))
+    if cfg.encdec is not None:
+        s = (m, mb_global, cfg.encdec.num_frames, cfg.d_model)
+        structs["frame_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        shardings["frame_embeds"] = NamedSharding(mesh, sanitize_spec(
+            P(None, _r(rules, "dp")), s, mesh))
+    return structs, shardings, m, mb_global
+
+
+def _r(rules, k):
+    return rules.get(k)
+
+
+def _axes_size(mesh, phys):
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int, mesh, rules):
+    """ShapeDtypeStructs + shardings for the KV/SSM cache.  Batch over dp
+    when divisible; kv-sequence over sp (context sharding) otherwise;
+    kv-heads over tp when divisible."""
+    lm = LM(cfg)
+    structs = jax.eval_shape(lambda: lm.init_cache(batch, seq))
+
+    def spec_for(path_shape):
+        shape = path_shape
+        # heuristics by rank: [B, S, G, hd] kv / [B, W, C] conv /
+        # [B, H, P, N] ssm state / [B, S_enc, G, hd] cross
+        if len(shape) == 4 and shape[1] == seq:
+            return P(_r(rules, "dp"), _r(rules, "sp"), _r(rules, "tp"),
+                     None)
+        if len(shape) == 4:                       # ssm state [B,H,P,N]
+            return P(_r(rules, "dp"), _r(rules, "tp"), None, None)
+        if len(shape) == 3:                       # conv cache
+            return P(_r(rules, "dp"), None, _r(rules, "tp"))
+        return P(_r(rules, "dp"))
+
+    def one(leaf):
+        # stacked period caches have a leading periods dim
+        shape = leaf.shape
+        if len(shape) == 5:
+            inner = spec_for(shape[1:])
+            pspec = P(None, *tuple(inner))
+        else:
+            pspec = spec_for(shape)
+        pspec = sanitize_spec(pspec, shape, mesh)
+        return NamedSharding(mesh, pspec)
+
+    shardings = jax.tree.map(one, structs)
+    return structs, shardings
+
+
+# ---------------------------------------------------------------------------
+# dp/tp (+FSDP=ZeRO-3) train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    plan: ParallelPlan, ocfg: OptimizerConfig, mesh, rules):
+    """Returns (step_fn, example_args_structs, in_shardings,
+    out_shardings).  step(params, opt_state, batch) -> (params, opt_state,
+    metrics); grad accumulation over microbatches with Chronos-Recomp
+    remat; ZeRO via sharding specs (stage 3 = params keep fsdp; stage 1/2
+    = params replicated over dp, states fsdp-sharded)."""
+    lm = LM(cfg)
+    params_s = jax.eval_shape(lambda: lm.init(jax.random.key(0))[0])
+    logical = _specs_only(cfg)
+
+    p_logical = logical if plan.zero_stage >= 3 else drop_fsdp(logical)
+    s_logical = zero_state_specs(logical, max(plan.zero_stage, 1))
+
+    p_shard = resolve_shardings(params_s, p_logical, mesh, rules)
+    opt_s = jax.eval_shape(adamw_init, params_s)
+    o_shard = {
+        "step": NamedSharding(mesh, P()),
+        "mu": resolve_shardings(opt_s["mu"], s_logical, mesh, rules),
+        "nu": resolve_shardings(opt_s["nu"], s_logical, mesh, rules),
+        "master": resolve_shardings(opt_s["master"], s_logical, mesh,
+                                    rules),
+    }
+    batch_s, b_shard, m, mbg = train_batch_specs(cfg, shape, plan, mesh,
+                                                 rules)
+    # grad-accumulation buffers live with the ZeRO state sharding; an
+    # unconstrained carry would be replicated (= params-fp32 per device)
+    g_shard = resolve_shardings(opt_s["mu"], s_logical, mesh, rules)
+    g_pspecs = jax.tree.map(lambda s: s.spec, g_shard)
+
+    def step(params, opt_state, batch):
+        with shard_env(mesh, rules):
+            def pin(g):
+                return jax.tree.map(
+                    lambda a, sp: jax.lax.with_sharding_constraint(a, sp),
+                    g, g_pspecs)
+
+            def mb_loss(p, mb):
+                loss, metrics = lm.loss(p, mb, recomp=plan.recompute,
+                                        num_chunks=plan.num_chunks)
+                return loss, metrics
+
+            def acc(carry, i):
+                gsum, lsum = carry
+                mb = jax.tree.map(lambda a: a[i], batch)
+                (l, _), g = jax.value_and_grad(mb_loss,
+                                               has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (pin(gsum), lsum + l), None
+
+            g0 = pin(jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params))
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), jnp.arange(m))
+            grads = jax.tree.map(lambda g: g / m, grads)
+            master, opt_state, om = adamw_update(grads, opt_state, ocfg)
+            params = cast_like(master, params)
+            metrics = {"loss": loss / m, **om}
+            return params, opt_state, metrics
+
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (p_shard, o_shard,
+                     jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                  {"loss": 0, "grad_norm": 0, "lr": 0}))
+    return step, (params_s, opt_s, batch_s), in_shardings, out_shardings
+
+
+def _specs_only(cfg: ModelConfig):
+    """Logical specs without full param materialization (init traced via
+    eval_shape; specs are produced alongside, shapes discarded)."""
+    lm = LM(cfg)
+    holder = {}
+
+    def grab():
+        p, s = lm.init(jax.random.key(0))
+        holder["s"] = s
+        return p
+
+    jax.eval_shape(grab)
+    return holder["s"]
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_serve_steps(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """Returns dict with 'prefill' and/or 'decode':
+    (fn, arg_structs, in_shardings, out_shardings)."""
+    lm = LM(cfg)
+    params_s = jax.eval_shape(lambda: lm.init(jax.random.key(0))[0])
+    logical = _specs_only(cfg)
+    p_shard = resolve_shardings(params_s, logical, mesh, rules)
+    B = shape.global_batch
+    S = shape.seq_len
+    # VLM prefill writes patch-prefix + text positions into the cache
+    n_prefix = cfg.vision.num_patches if cfg.vision is not None else 0
+    cache_s, cache_sh = cache_specs(cfg, B, S + n_prefix, mesh, rules)
+    dp_spec = P(_r(rules, "dp"))
+    out = {}
+
+    extra_s: Dict[str, Any] = {}
+    extra_sh: Dict[str, Any] = {}
+    if cfg.vision is not None:
+        s = (B, cfg.vision.num_patches, cfg.d_model)
+        extra_s["patch_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        extra_sh["patch_embeds"] = NamedSharding(
+            mesh, sanitize_spec(P(_r(rules, "dp")), s, mesh))
+    if cfg.encdec is not None:
+        s = (B, cfg.encdec.num_frames, cfg.d_model)
+        extra_s["frame_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        extra_sh["frame_embeds"] = NamedSharding(
+            mesh, sanitize_spec(P(_r(rules, "dp")), s, mesh))
+
+    if shape.kind == "prefill":
+        tok_s = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_sh = NamedSharding(mesh, sanitize_spec(dp_spec, (B, S), mesh))
+
+        def prefill(params, tokens, cache, extra):
+            with shard_env(mesh, rules):
+                logits, cache = lm.prefill(params, tokens, cache, **extra)
+                return logits, cache
+
+        out["prefill"] = (
+            prefill, (params_s, tok_s, cache_s, extra_s),
+            (p_shard, tok_sh, cache_sh, extra_sh),
+            (NamedSharding(mesh, sanitize_spec(
+                dp_spec, (B, cfg.vocab_size), mesh)), cache_sh))
+    else:
+        tok_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, sanitize_spec(dp_spec, (B, 1), mesh))
+
+        def decode(params, tokens, cache, extra):
+            with shard_env(mesh, rules):
+                # decode at the last cache position (cache pre-filled)
+                logits, cache = lm.decode_step(params, tokens, cache,
+                                               S - 1, **extra)
+                return logits, cache
+
+        out["decode"] = (
+            decode, (params_s, tok_s, cache_s, extra_s),
+            (p_shard, tok_sh, cache_sh, extra_sh),
+            (NamedSharding(mesh, sanitize_spec(
+                dp_spec, (B, cfg.vocab_size), mesh)), cache_sh))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pipeline (multi-pod) train step
+# ---------------------------------------------------------------------------
+
+def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                             plan: ParallelPlan, ocfg: OptimizerConfig,
+                             mesh, rules):
+    """ChronosPipe train step with pp mapped onto rules['pp'] (the "pod"
+    axis in the production multi-pod mesh).  Returns the same 4-tuple as
+    make_train_step."""
+    from repro.core.pipeline_runtime import (init_pipeline_params,
+                                             make_pipeline_spec,
+                                             make_train_grads_fn)
+    pp_axis = rules["pp"]
+    P_ = mesh.shape[pp_axis]
+    dp = _axes_size(mesh, rules.get("dp"))
+    mbg = plan.microbatch_size * dp
+    m = max(2, shape.global_batch // mbg)
+
+    spec = make_pipeline_spec(
+        cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
+        seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis)
+
+    holder = {}
+
+    def grab():
+        p, s = init_pipeline_params(jax.random.key(0), cfg, spec.layout)
+        holder["s"] = s
+        return p
+
+    params_s = jax.eval_shape(grab)
+    logical = holder["s"]
+    # XLA's SPMD partitioner CHECK-fails (spmd_partitioner_util.cc:504)
+    # when pp-replicated operands enter the manual-over-pod region with an
+    # fsdp("data") sharding, so shared params (embed/head/norm/encoder)
+    # and their optimizer states shard over "model" only; block params
+    # keep full FSDP x TP.
+    logical = {k: (v if k == "blocks" else drop_fsdp(v))
+               for k, v in logical.items()}
+    # pipeline block leaves already carry the "pp" logical axis first
+    p_shard = resolve_shardings(params_s, logical, mesh,
+                                {**rules, "pp": pp_axis})
+    opt_s = jax.eval_shape(adamw_init, params_s)
+    s_logical = zero_state_specs(logical, max(plan.zero_stage, 1))
+    s_logical = {k: (v if k == "blocks" else drop_fsdp(logical[k]))
+                 for k, v in s_logical.items()}
+    o_shard = {
+        "step": NamedSharding(mesh, P()),
+        "mu": resolve_shardings(opt_s["mu"], s_logical, mesh,
+                                {**rules, "pp": pp_axis}),
+        "nu": resolve_shardings(opt_s["nu"], s_logical, mesh,
+                                {**rules, "pp": pp_axis}),
+        "master": resolve_shardings(opt_s["master"], s_logical, mesh,
+                                    {**rules, "pp": pp_axis}),
+    }
+    structs = {"tokens": jax.ShapeDtypeStruct((m, mbg, shape.seq_len),
+                                              jnp.int32)}
+    b_shard = {"tokens": NamedSharding(mesh, sanitize_spec(
+        P(None, _r(rules, "dp")), (m, mbg, shape.seq_len), mesh))}
+    if cfg.vision is not None:
+        s = (m, mbg, cfg.vision.num_patches, cfg.d_model)
+        structs["patch_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        b_shard["patch_embeds"] = NamedSharding(
+            mesh, sanitize_spec(P(None, _r(rules, "dp")), s, mesh))
+    if cfg.encdec is not None:
+        s = (m, mbg, cfg.encdec.num_frames, cfg.d_model)
+        structs["frame_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
+        b_shard["frame_embeds"] = NamedSharding(
+            mesh, sanitize_spec(P(None, _r(rules, "dp")), s, mesh))
+
+    grads_fn = make_train_grads_fn(spec, mesh)
+
+    def step(params, opt_state, batch):
+        with shard_env(mesh, rules):
+            grads, metrics = grads_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / m,
+                                 grads)
+            master, opt_state, om = adamw_update(grads, opt_state, ocfg)
+            params = cast_like(master, params)
+            return params, opt_state, {**metrics, **om}
+
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (
+        p_shard, o_shard,
+        jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                     {"loss": 0, "n_microbatches": 0, "grad_norm": 0,
+                      "lr": 0}))
+    return step, (params_s, opt_s, structs), in_shardings, out_shardings

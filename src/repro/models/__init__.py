@@ -1,0 +1,2 @@
+from repro.models.transformer import LM  # noqa: F401
+from repro.models.sharding import ShardEnv, shard, shard_env  # noqa: F401

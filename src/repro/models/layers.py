@@ -1,0 +1,342 @@
+"""Core neural-net building blocks (pure JAX, framework-free).
+
+Conventions:
+- ``init_*`` functions return ``(params, logical_specs)`` where
+  ``logical_specs`` is a matching pytree whose leaves are tuples of
+  *logical* axis names (resolved by models.sharding at run time).
+- activations: [batch, seq, d_model]; attention heads [B, S, H, hd].
+- norms/softmax/losses run in fp32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+# Logical axes:
+#   "dp"   batch               "sp"  sequence (context parallel, serving)
+#   "tp"   tensor (heads/ff/vocab)   "fsdp" ZeRO param shard
+A_DP, A_TP, A_SP, A_FSDP = "dp", "tp", "sp", "fsdp"
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    gated = act in ("silu", "geglu")
+    params = {"wi": dense_init(ks[0], (d, ff), dtype),
+              "wo": dense_init(ks[1], (ff, d), dtype)}
+    specs = {"wi": (A_FSDP, A_TP), "wo": (A_TP, A_FSDP)}
+    if gated:
+        params["wg"] = dense_init(ks[2], (d, ff), dtype)
+        specs["wg"] = (A_FSDP, A_TP)
+    return params, specs
+
+
+def _act(x, act: str):
+    if act in ("silu",):
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+def mlp(params, x, act: str):
+    h = x @ params["wi"]
+    if "wg" in params:
+        h = _act(x @ params["wg"], act) * h
+    else:
+        h = _act(h, act)
+    h = shard(h, A_DP, None, A_TP)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype, tie: bool):
+    ks = jax.random.split(key, 2)
+    params = {"tokens": dense_init(ks[0], (vocab, d), dtype, in_axis=1)}
+    specs = {"tokens": (A_TP, A_FSDP)}
+    if not tie:
+        params["head"] = dense_init(ks[1], (d, vocab), dtype)
+        specs["head"] = (A_FSDP, A_TP)
+    return params, specs
+
+
+def embed(params, tokens):
+    """tokens [B, S] -> [B, S, d] (vocab-sharded table; XLA inserts the
+    collective for the sharded gather)."""
+    out = jnp.take(params["tokens"], tokens, axis=0)
+    return shard(out, A_DP, None, None)
+
+
+def unembed(params, x):
+    if "head" in params:
+        logits = x @ params["head"]
+    else:
+        logits = x @ params["tokens"].T.astype(x.dtype)
+    return shard(logits, A_DP, None, A_TP)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Stable CE in fp32.  The gold-logit lookup is a one-hot contraction
+    (not take_along_axis) so a vocab-sharded logits tensor reduces with a
+    psum instead of an all-gather."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=labels.dtype)
+    onehot = labels[..., None] == vocab_iota
+    gold = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d: int, num_heads: int, num_kv: int, hd: int,
+                   dtype, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, num_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, num_kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, num_kv * hd), dtype),
+        "wo": dense_init(ks[3], (num_heads * hd, d), dtype),
+    }
+    specs = {"wq": (A_FSDP, A_TP), "wk": (A_FSDP, A_TP),
+             "wv": (A_FSDP, A_TP), "wo": (A_TP, A_FSDP)}
+    if qkv_bias:
+        for n, width in (("bq", num_heads * hd), ("bk", num_kv * hd),
+                         ("bv", num_kv * hd)):
+            params[n] = jnp.zeros((width,), dtype=dtype)
+            specs[n] = (A_TP,)
+    return params, specs
+
+
+def make_mask(q_pos, kv_pos, *, causal: bool, window=0,
+              prefix_len: int = 0):
+    """Boolean [.., Sq, Skv] mask. q_pos/kv_pos: [..,S] ints.
+    ``window`` may be a static int or a traced scalar (0 => full)."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = (kp <= qp) if causal else jnp.ones(jnp.broadcast_shapes(
+        qp.shape, kp.shape), dtype=bool)
+    if prefix_len:
+        ok = ok | (kp < prefix_len)
+    if isinstance(window, (int,)):
+        if window:
+            ok = ok & (qp - kp < window)
+    else:  # traced per-layer flag (pipeline blocks)
+        ok = ok & ((window <= 0) | (qp - kp < window))
+    return ok
+
+
+NEG_INF = -2.0 ** 30
+
+
+def dense_attention(q, k, v, mask, scale):
+    """q [B,S,H,hd]; k,v [B,T,G,hd]; mask broadcastable to [B,1,1,S,T]."""
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    R = H // G
+    qg = q.reshape(B, S, G, R, hd)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def blockwise_attention(q, k, v, scale, *, causal: bool, window: int = 0,
+                        prefix_len: int = 0, q_offset=0, block: int = 1024):
+    """Flash-style O(S·block) attention for long sequences (inference path;
+    the Pallas kernel implements the same math for TPU).
+
+    q [B,S,H,hd]; k,v [B,T,G,hd]. q position i corresponds to absolute
+    position q_offset + i; kv positions are 0..T-1.
+    """
+    B, S, H, hd = q.shape
+    T, G = k.shape[1], k.shape[2]
+    R = H // G
+    nblk = -(-T // block)
+    Tpad = nblk * block
+    if Tpad != T:
+        pad = [(0, 0), (0, Tpad - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kb = k.reshape(B, nblk, block, G, hd)
+    vb = v.reshape(B, nblk, block, G, hd)
+    qg = q.reshape(B, S, G, R, hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, bidx = xs
+        kv_pos = bidx * block + jnp.arange(block)
+        s = jnp.einsum("bsgrd,btgd->bgrst", qg,
+                       kblk.astype(jnp.float32)) * scale
+        msk = make_mask(q_pos, kv_pos, causal=causal, window=window,
+                        prefix_len=prefix_len)
+        msk = msk & (kv_pos < T)[None, :]
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrst,btgd->bgrsd", p, vblk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, R, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, R, S), jnp.float32)
+    a0 = jnp.zeros((B, G, R, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nblk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(params, x, positions, *, num_heads: int, num_kv: int, hd: int,
+              rope_theta: float, causal: bool = True, window: int = 0,
+              prefix_len: int = 0, cache: Optional[dict] = None,
+              cache_pos=None, kv_x=None, kv_direct=None,
+              use_rope: bool = True, return_kv: bool = False,
+              dense_threshold: int = 8192) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Unified attention: train / prefill (cache write) / decode (cache
+    read+write) / cross-attention (kv_x = encoder output, or kv_direct =
+    precomputed (k, v) heads)."""
+    B, S, _ = x.shape
+    scale = 1.0 / math.sqrt(hd)
+    q = x @ params["wq"]
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, S, num_heads, hd)
+
+    if kv_direct is not None:
+        k, v = kv_direct
+        Skv = k.shape[1]
+    else:
+        src = x if kv_x is None else kv_x
+        Skv = src.shape[1]
+        k = src @ params["wk"]
+        v = src @ params["wv"]
+        if "bk" in params:
+            k, v = k + params["bk"], v + params["bv"]
+        k = k.reshape(B, Skv, num_kv, hd)
+        v = v.reshape(B, Skv, num_kv, hd)
+
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, rope_theta)
+        else:
+            kv_positions = jnp.broadcast_to(jnp.arange(Skv)[None], (B, Skv))
+            k = apply_rope(k, kv_positions, rope_theta)
+
+    q = shard(q, A_DP, None, A_TP, None)
+    k = shard(k, A_DP, None, A_TP, None)
+    v = shard(v, A_DP, None, A_TP, None)
+
+    new_cache = None
+    if cache is not None and kv_x is None:
+        # write current kv into cache at cache_pos, then attend over cache
+        T = cache["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        k = shard(k, A_DP, A_SP, A_TP, None)
+        v = shard(v, A_DP, A_SP, A_TP, None)
+        kv_len = T
+    else:
+        kv_len = Skv
+
+    cross = kv_x is not None or kv_direct is not None
+    if S == 1 and cache is not None:
+        # decode: one query over the whole cache (flash-decode shape).
+        kv_pos = jnp.arange(kv_len)
+        q_pos = positions[:, -1:]                     # [B, 1]
+        msk = make_mask(q_pos, kv_pos, causal=causal, window=window,
+                        prefix_len=prefix_len)        # [B, 1, T]
+        msk = msk[:, None, None, :, :]                # [B, 1, 1, 1, T]
+        out = dense_attention(q, k, v, msk, scale)
+    elif kv_len > dense_threshold and not cross:
+        out = blockwise_attention(
+            q, k, v, scale, causal=causal, window=window,
+            prefix_len=prefix_len,
+            q_offset=0 if cache is None else cache_pos)
+    else:
+        if not cross:
+            kv_pos = jnp.arange(kv_len)
+            msk = make_mask(positions[0], kv_pos, causal=causal,
+                            window=window, prefix_len=prefix_len)
+        else:
+            msk = jnp.ones((S, kv_len), dtype=bool)   # cross-attn: full
+        out = dense_attention(q, k, v, msk[None, None, None], scale)
+
+    out = shard(out, A_DP, None, A_TP, None)
+    y = out.reshape(B, S, num_heads * hd) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y, new_cache

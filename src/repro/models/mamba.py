@@ -1,0 +1,227 @@
+"""Mamba-2 block via SSD (state-space duality), chunked form.
+
+Recurrence (per head h, state N, head_dim P):
+    h_t = exp(a_t) h_{t-1} + dt_t * B_t (x) x_t        a_t = dt_t * A
+    y_t = C_t . h_t + D * x_t
+Chunked evaluation: intra-chunk quadratic term (the "dual" attention-like
+form) + inter-chunk state carried by a sequential scan over chunks.
+A Pallas kernel (kernels/ssd_scan) implements the chunk kernel for TPU;
+this module is the pure-jnp implementation used as its oracle and as the
+CPU path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import A_DP, A_FSDP, A_TP, dense_init, rmsnorm
+from repro.models.sharding import shard
+
+
+def init_mamba(key, d: int, cfg: SSMConfig, dtype):
+    d_in = cfg.expand * d
+    H = d_in // cfg.head_dim
+    N, W = cfg.state_dim, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    params = {
+        "wz": dense_init(ks[0], (d, d_in), dtype),
+        "wx": dense_init(ks[1], (d, d_in), dtype),
+        "wB": dense_init(ks[2], (d, N), dtype),
+        "wC": dense_init(ks[3], (d, N), dtype),
+        "wdt": dense_init(ks[4], (d, H), dtype),
+        "conv_x": dense_init(ks[5], (W, d_in), dtype, in_axis=0),
+        "conv_B": dense_init(ks[6], (W, N), dtype, in_axis=0),
+        "conv_C": dense_init(ks[7], (W, N), dtype, in_axis=0),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "wo": dense_init(ks[0], (d_in, d), dtype),
+    }
+    specs = {
+        "wz": (A_FSDP, A_TP), "wx": (A_FSDP, A_TP), "wB": (A_FSDP, None),
+        "wC": (A_FSDP, None), "wdt": (A_FSDP, A_TP),
+        "conv_x": (None, A_TP), "conv_B": (None, None), "conv_C": (None, None),
+        "A_log": (A_TP,), "D": (A_TP,), "dt_bias": (A_TP,),
+        "norm_scale": (A_TP,), "wo": (A_TP, A_FSDP),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; cache [B,W-1,C] or None."""
+    W = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def _ssd_chunked(xh, Bc, Cc, dt, A, chunk: int, h0=None):
+    """xh [B,S,H,P]; Bc,Cc [B,S,N]; dt [B,S,H] (fp32, post-softplus);
+    A [H] (negative, fp32). Returns y [B,S,H,P], h_final [B,H,P,N]."""
+    Bsz, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:
+        # zero-pad to a chunk multiple: dt=0 => decay exp(0)=1 and zero
+        # state contribution, so padded steps are state-preserving no-ops.
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    Bb = Bc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cb = Cc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtb = dt.reshape(Bsz, nc, Q, H)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    from repro.models.sharding import match_vma
+    h0 = match_vma(h0, xc)
+
+    def body(h, xs):
+        xq, bq, cq, dq = xs          # [B,Q,H,P],[B,Q,N],[B,Q,N],[B,Q,H]
+        a = dq * A                    # [B,Q,H]
+        cum = jnp.cumsum(a, axis=1)   # inclusive
+        # intra-chunk (dual quadratic form)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]         # [B,Q,Q,H]
+        ii, jj = jnp.tril_indices(Q)
+        mask = jnp.zeros((Q, Q), bool).at[ii, jj].set(True)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        L = L * dq[:, None, :, :]                             # decay * dt_j
+        cb = jnp.einsum("bqn,bkn->bqk", cq, bq)               # [B,Q,Q]
+        scores = cb[..., None] * L                            # [B,Q,Q,H]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xq)
+        # inter-chunk from carried state
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhpn->bqhp", cq, h)
+        # state update
+        dec_to_end = jnp.exp(cum[:, -1:, :] - cum) * dq       # [B,Q,H]
+        add = jnp.einsum("bkh,bkn,bkhp->bhpn", dec_to_end, bq, xq)
+        h_next = jnp.exp(cum[:, -1])[:, :, None, None] * h + add
+        return h_next, y_intra + y_inter
+
+    hf, y = jax.lax.scan(
+        body, h0,
+        (xc.swapaxes(0, 1), Bb.swapaxes(0, 1), Cb.swapaxes(0, 1),
+         dtb.swapaxes(0, 1)))
+    y = y.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y[:, :S0], hf
+
+
+def mamba_block(params, x, cfg: SSMConfig, *, cache: Optional[dict] = None,
+                norm_eps: float = 1e-6) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x [B,S,d] -> (y [B,S,d], new_cache)."""
+    B, S, d = x.shape
+    d_in = cfg.expand * d
+    H = d_in // cfg.head_dim
+    P, N, W = cfg.head_dim, cfg.state_dim, cfg.conv_width
+
+    z = x @ params["wz"]
+    xr = x @ params["wx"]
+    Bc = x @ params["wB"]
+    Cc = x @ params["wC"]
+    dt_raw = x @ params["wdt"]
+    xr = shard(xr, A_DP, None, A_TP)
+    z = shard(z, A_DP, None, A_TP)
+
+    decode = cache is not None and S == 1
+    if decode:
+        conv_in_x = jnp.concatenate([cache["conv_x"].astype(xr.dtype), xr], 1)
+        conv_in_B = jnp.concatenate([cache["conv_B"].astype(Bc.dtype), Bc], 1)
+        conv_in_C = jnp.concatenate([cache["conv_C"].astype(Cc.dtype), Cc], 1)
+        xr_c = jnp.sum(conv_in_x[:, -W:] * params["conv_x"], axis=1,
+                       keepdims=True)
+        Bc_c = jnp.sum(conv_in_B[:, -W:] * params["conv_B"], axis=1,
+                       keepdims=True)
+        Cc_c = jnp.sum(conv_in_C[:, -W:] * params["conv_C"], axis=1,
+                       keepdims=True)
+        new_conv = {"conv_x": conv_in_x[:, -(W - 1):],
+                    "conv_B": conv_in_B[:, -(W - 1):],
+                    "conv_C": conv_in_C[:, -(W - 1):]}
+    else:
+        xr_c = _causal_conv(xr, params["conv_x"])
+        Bc_c = _causal_conv(Bc, params["conv_B"])
+        Cc_c = _causal_conv(Cc, params["conv_C"])
+        new_conv = None
+        if cache is not None:    # prefill: save conv tail
+            pad = max(0, (W - 1) - S)
+            tail = lambda t: jnp.pad(t, ((0, 0), (pad, 0), (0, 0)))[:, -(W - 1):]
+            new_conv = {"conv_x": tail(xr), "conv_B": tail(Bc),
+                        "conv_C": tail(Cc)}
+
+    xr_c = jax.nn.silu(xr_c)
+    Bc_c = jax.nn.silu(Bc_c)
+    Cc_c = jax.nn.silu(Cc_c)
+
+    A = -jnp.exp(params["A_log"])                      # [H], negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    xh = xr_c.reshape(B, S, H, P)
+
+    if decode:
+        h = cache["h"]
+        a = jnp.exp(dt[:, 0] * A)                      # [B,H]
+        add = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bc_c[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h_new = a[:, :, None, None] * h + add
+        y = jnp.einsum("bn,bhpn->bhp", Cc_c[:, 0].astype(jnp.float32),
+                       h_new)[:, None]                 # [B,1,H,P]
+        h_final = h_new
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_final = _ssd_chunked(xh, Bc_c, Cc_c, dt, A, cfg.chunk_len, h0)
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), norm_eps)
+    out = y @ params["wo"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(new_conv or {})
+        new_cache["h"] = h_final
+    return out, new_cache
+
+
+def init_mamba_cache(batch: int, d: int, cfg: SSMConfig, dtype):
+    d_in = cfg.expand * d
+    H = d_in // cfg.head_dim
+    W = cfg.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, cfg.state_dim), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, cfg.state_dim), dtype),
+        "h": jnp.zeros((batch, H, cfg.head_dim, cfg.state_dim), jnp.float32),
+    }
+
+
+def ssd_reference(xh, Bc, Cc, dt, A, h0=None):
+    """Naive sequential recurrence — oracle for tests & the Pallas kernel."""
+    Bsz, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    h = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        a = jnp.exp(dt[:, t] * A)                      # [B,H]
+        add = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t],
+                         Bc[:, t].astype(jnp.float32),
+                         xh[:, t].astype(jnp.float32))
+        h = a[:, :, None, None] * h + add
+        ys.append(jnp.einsum("bn,bhpn->bhp",
+                             Cc[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1), h

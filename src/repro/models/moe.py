@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based
+sort/scatter dispatch.
+
+Dense one-hot dispatch (Mesh-TF style) would materialize [T, E, C]
+combine tensors and count every expert's FLOPs; the sort-based dispatch
+below runs only ``top_k`` experts' FLOPs per token, so the compiled HLO
+reflects *active* compute — which is what the roofline analysis needs.
+
+Expert weights are TP-sharded on the ``d_ff`` dimension (expert-TP); the
+expert dimension itself can additionally be sharded over the fsdp axis
+(set ``A_EXP`` rule) for expert-parallel layouts.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import A_DP, A_FSDP, A_TP, _act, dense_init, init_mlp, mlp
+from repro.models.sharding import shard
+
+A_EXP = "exp"
+
+
+def init_moe(key, d: int, cfg: MoEConfig, act: str, dtype):
+    gated = act in ("silu", "geglu")
+    ks = jax.random.split(key, 5)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    params = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wi": dense_init(ks[1], (E, d, F), dtype, in_axis=1),
+        "wo": dense_init(ks[2], (E, F, d), dtype, in_axis=1),
+    }
+    specs = {
+        "router": (None, None),
+        "wi": (A_EXP, A_FSDP, A_TP),
+        "wo": (A_EXP, A_TP, A_FSDP),
+    }
+    if gated:
+        params["wg"] = dense_init(ks[3], (E, d, F), dtype, in_axis=1)
+        specs["wg"] = (A_EXP, A_FSDP, A_TP)
+    if cfg.num_shared_experts:
+        sh_p, sh_s = init_mlp(ks[4], d, cfg.num_shared_experts * cfg.d_ff_shared,
+                              act, dtype)
+        params["shared"] = sh_p
+        specs["shared"] = sh_s
+    return params, specs
+
+
+def moe_ffn(params, x, cfg: MoEConfig, act: str) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, d] -> (y, aux) with aux = {"lb_loss", "router_entropy"}."""
+    B, S, d = x.shape
+    T = B * S
+    E, K, F = cfg.num_experts, cfg.top_k, cfg.d_ff_expert
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])      # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                              # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    lb_loss = E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----
+    cap = int(max(1, -(-T * K // E) * cfg.capacity_factor))
+    # round capacity to a shard-friendly multiple: an indivisible cap
+    # silently drops the dp sharding of the [E, cap, d] expert buffers
+    # and replicates ALL expert FLOPs on every device (found via the
+    # dry-run roofline: grok-1 useful_ratio 0.15 -> see EXPERIMENTS §Perf)
+    quantum = 128 if cap >= 128 else 16
+    cap = -(-cap // quantum) * quantum
+    flat_exp = gate_idx.reshape(-1)                           # [T*K]
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    flat_w = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_exp, stable=True)
+    sorted_exp = flat_exp[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+
+    counts = jnp.bincount(flat_exp, length=E)                 # [E]
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - offsets[sorted_exp]            # rank in expert
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_exp * cap + rank, E * cap)  # drop slot
+
+    # scatter tokens into [E*cap(+1 drop slot), d]
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(xt[sorted_tok] * keep[:, None].astype(x.dtype))
+    eb = buf[:E * cap].reshape(E, cap, d)
+    eb = shard(eb, A_EXP, A_DP, None)
+
+    # expert FFN (TP on F)
+    h = jnp.einsum("ecd,edf->ecf", eb, params["wi"])
+    if "wg" in params:
+        h = _act(jnp.einsum("ecd,edf->ecf", eb, params["wg"]), act) * h
+    else:
+        h = _act(h, act)
+    h = shard(h, A_EXP, A_DP, A_TP)
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"])         # [E, cap, d]
+
+    # gather back + weighted combine
+    out_flat = jnp.concatenate(
+        [out.reshape(E * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    back = out_flat[dest] * (sorted_w * keep)[:, None].astype(out.dtype)
+    y = jnp.zeros((T, d), out.dtype).at[sorted_tok].add(back)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xt, act)
+
+    y = y.reshape(B, S, d)
+    aux = {"lb_loss": lb_loss,
+           "router_fraction_dropped":
+               1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

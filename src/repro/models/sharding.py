@@ -1,0 +1,168 @@
+"""Logical-axis sharding environment.
+
+Model code annotates tensors with *logical* axes ("dp", "tp", "sp",
+"fsdp"); a ShardEnv installed by the launcher/dry-run resolves them to
+physical mesh axes and applies ``with_sharding_constraint``.  Without an
+installed env (unit tests, single device) annotations are no-ops, so the
+same model code runs everywhere.
+
+Inside a partial-manual shard_map (pipeline mode, manual over "pp"/"pod")
+raw PartitionSpecs still work for the auto axes — validated against
+jax 0.8.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+_STACK: list = []
+
+
+class ShardEnv:
+    """rules: logical axis -> physical mesh axis (str | tuple | None)."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh],
+                 rules: Dict[str, Axes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def resolve(self, logical: Sequence[Axes]) -> P:
+        phys = []
+        used: set = set()
+        for ax in logical:
+            r = self._resolve_one(ax)
+            # drop duplicate physical axes (a mesh axis may appear once)
+            if isinstance(r, tuple):
+                r = tuple(a for a in r if a not in used)
+                used.update(r)
+                phys.append(r if r else None)
+            elif r is not None and r in used:
+                phys.append(None)
+            else:
+                if r is not None:
+                    used.add(r)
+                phys.append(r)
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+    def _resolve_one(self, ax: Axes) -> Axes:
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            out = []
+            for a in ax:
+                r = self._resolve_one(a)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        return self.rules.get(ax, None)
+
+
+@contextlib.contextmanager
+def shard_env(mesh, rules: Dict[str, Axes]):
+    env = ShardEnv(mesh, rules)
+    _STACK.append(env)
+    try:
+        yield env
+    finally:
+        _STACK.pop()
+
+
+def current_env() -> Optional[ShardEnv]:
+    return _STACK[-1] if _STACK else None
+
+
+def axis_size(mesh, phys: Axes) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop sharded axes whose mesh extent doesn't divide the dim, and
+    deduplicate mesh axes (a mesh axis may appear at most once)."""
+    out = []
+    used: set = set()
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None or i >= len(shape):
+            out.append(None if i >= len(shape) else ax)
+            continue
+        if isinstance(ax, tuple):
+            kept = []
+            rem = shape[i]
+            for a in ax:
+                sz = mesh.shape[a]
+                if a not in used and rem % sz == 0:
+                    kept.append(a)
+                    used.add(a)
+                    rem //= sz
+            out.append(tuple(kept) if kept else None)
+        else:
+            if ax in used or shape[i] % mesh.shape[ax] != 0:
+                out.append(None)
+            else:
+                out.append(ax)
+                used.add(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x, *logical: Axes):
+    """Annotate ``x`` with logical axes; no-op without an installed env.
+    Axes that don't divide the dimension are dropped (e.g. whisper's
+    odd 51865 vocab is replicated rather than erroring)."""
+    env = current_env()
+    if env is None:
+        return x
+    spec = env.resolve(logical)
+    if env.mesh is not None:
+        spec = sanitize_spec(spec, x.shape, env.mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def resolve_pspec(logical: Sequence[Axes]) -> P:
+    env = current_env()
+    if env is None:
+        return P()
+    return env.resolve(logical)
+
+
+def match_vma(x, ref):
+    """Make ``x``'s varying-manual-axes (shard_map vma) a superset of
+    ``ref``'s, so scan carries initialized from constants typecheck when
+    the body output is varying.  No-op outside manual shard_map."""
+    try:
+        want = jax.typeof(ref).vma
+        have = jax.typeof(x).vma
+        missing = tuple(a for a in want if a not in have)
+        if missing:
+            return jax.lax.pcast(x, missing, to="varying")
+    except Exception:
+        pass
+    return x
+
+
+def resolve_tree(logical_tree):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    env = current_env()
+
+    def one(spec):
+        if env is None:
+            return P()
+        return env.resolve(spec)
+
+    return jax.tree.map(one, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)

@@ -1,0 +1,435 @@
+"""LM composition: periodic decoder stacks (scan-over-periods), hybrid
+attention/SSM interleaves, MoE FFNs, encoder-decoder (whisper) and
+VLM-prefix (paligemma) variants, KV/SSM caches, chunked Chronos-Recomp
+remat policies.
+
+The decoder is structured as ``num_periods`` repetitions of a structural
+period (cfg.period layers) that is scanned with stacked parameters, plus
+up to period-1 remainder layers that are unrolled.  Chronos chunking
+splits the periods into ``num_chunks`` contiguous groups; each group gets
+its own remat policy (Chronos-Recomp = rematerialize the shallowest
+chunks first).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RecomputeConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, idx: int):
+    """Init one decoder layer; returns (params, specs)."""
+    kind = cfg.layer_kind(idx)
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if kind == "attn":
+        p["attn"], s["attn"] = L.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, dtype, cfg.qkv_bias)
+    else:
+        p["mamba"], s["mamba"] = M.init_mamba(ks[0], cfg.d_model, cfg.ssm, dtype)
+    if cfg.encdec is not None:
+        p["norm_x"], s["norm_x"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"], s["cross"] = L.init_attention(
+            ks[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, dtype, False)
+    if cfg.layer_is_moe(idx):
+        p["norm2"], s["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["moe"], s["moe"] = MOE.init_moe(ks[2], cfg.d_model, cfg.moe,
+                                          cfg.act, dtype)
+    elif cfg.d_ff and kind == "attn" or (cfg.d_ff and cfg.ssm is None):
+        p["norm2"], s["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                        cfg.act, dtype)
+    elif cfg.d_ff and kind == "mamba":
+        # hybrid (jamba): mamba layers also carry an FFN (dense or MoE)
+        p["norm2"], s["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                        cfg.act, dtype)
+    return p, s
+
+
+def _init_cache_layer(cfg: ModelConfig, idx: int, batch: int, seq: int,
+                      enc_len: int = 0):
+    """Cache tree for one layer ('' empty dict if stateless)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    kind = cfg.layer_kind(idx)
+    c: Dict[str, Any] = {}
+    hd = cfg.resolved_head_dim
+    if kind == "attn":
+        c["k"] = jnp.zeros((batch, seq, cfg.num_kv_heads, hd), dtype)
+        c["v"] = jnp.zeros((batch, seq, cfg.num_kv_heads, hd), dtype)
+    else:
+        c.update(M.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype))
+    if cfg.encdec is not None:
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype)
+    return c
+
+
+def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
+                 cache=None, cache_pos=0, enc_out=None, prefix_len=0,
+                 aux_sum=0.0, window_override=None, gate=None):
+    """One decoder layer. Returns (x, new_cache, aux_sum).
+
+    ``window_override``: traced per-layer sliding window (pipeline blocks
+    pass local/global pattern as data).  ``gate``: traced 0/1 multiplier on
+    the residual branches (0 = null/padding layer: passthrough)."""
+    kind = cfg.layer_kind(idx)
+    if window_override is not None:
+        window = window_override
+    else:
+        window = 0 if cfg.layer_is_global(idx) else cfg.sliding_window
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    if kind == "attn":
+        attn_cache = None
+        if cache is not None and "k" in cache:
+            attn_cache = {"k": cache["k"], "v": cache["v"]}
+        y, nc = L.attention(
+            p["attn"], h, positions, num_heads=cfg.num_heads,
+            num_kv=cfg.num_kv_heads, hd=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, causal=True, window=window,
+            prefix_len=prefix_len, cache=attn_cache, cache_pos=cache_pos)
+        if nc is not None:
+            new_cache.update(nc)
+    else:
+        mcache = None
+        if cache is not None and "h" in cache:
+            mcache = {k: cache[k] for k in
+                      ("conv_x", "conv_B", "conv_C", "h")}
+        y, nc = M.mamba_block(p["mamba"], h, cfg.ssm, cache=mcache,
+                              norm_eps=cfg.norm_eps)
+        if nc is not None:
+            new_cache.update(nc)
+    if gate is not None:
+        y = y * gate.astype(y.dtype)
+    x = x + y
+
+    if "cross" in p:
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        if enc_out is not None:
+            # train / prefill: compute cross kv from the encoder output
+            y, xkv = L.attention(
+                p["cross"], h, positions, num_heads=cfg.num_heads,
+                num_kv=cfg.num_kv_heads, hd=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, causal=False, kv_x=enc_out,
+                use_rope=False, return_kv=True)
+            if cache is not None:
+                new_cache["xk"], new_cache["xv"] = xkv
+            x = x + (y * gate.astype(y.dtype) if gate is not None else y)
+        elif cache is not None and "xk" in cache:
+            # decode: reuse cached cross kv
+            y, _ = L.attention(
+                p["cross"], h, positions, num_heads=cfg.num_heads,
+                num_kv=cfg.num_kv_heads, hd=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, causal=False,
+                kv_direct=(cache["xk"], cache["xv"]), use_rope=False)
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+            x = x + (y * gate.astype(y.dtype) if gate is not None else y)
+
+    if "moe" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = MOE.moe_ffn(p["moe"], h, cfg.moe, cfg.act)
+        if gate is not None:
+            y = y * gate.astype(y.dtype)
+            aux_sum = aux_sum + aux["lb_loss"] * jnp.asarray(
+                gate, jnp.float32)
+        else:
+            aux_sum = aux_sum + aux["lb_loss"]
+        x = x + y
+    elif "mlp" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y = L.mlp(p["mlp"], h, cfg.act)
+        if gate is not None:
+            y = y * gate.astype(y.dtype)
+        x = x + y
+    return x, new_cache, aux_sum
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Decoder LM (plus optional encoder for enc-dec archs)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = cfg.period
+        self.num_periods = cfg.num_layers // self.period
+        self.num_rem = cfg.num_layers - self.num_periods * self.period
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        params["embed"], specs["embed"] = L.init_embed(
+            keys[0], cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.param_dtype),
+            cfg.tie_embeddings)
+        params["final_norm"], specs["final_norm"] = L.init_rmsnorm(
+            cfg.d_model, jnp.dtype(cfg.param_dtype))
+
+        # stacked periodic layers
+        stacked, stacked_specs = [], []
+        pkeys = jax.random.split(keys[1], max(self.num_periods, 1))
+        for j in range(self.period):
+            idx = j      # layer kind depends only on j (period structure)
+            if self.num_periods:
+                jkeys = jax.vmap(lambda k: jax.random.fold_in(k, j))(pkeys)
+                pj = jax.vmap(lambda k: _init_layer(k, cfg, idx)[0])(jkeys)
+                _, sj = _init_layer(pkeys[0], cfg, idx)
+                stacked.append(pj)
+                stacked_specs.append(
+                    jax.tree.map(lambda s: (None,) + tuple(s), sj,
+                                 is_leaf=lambda s: isinstance(s, tuple)))
+        params["layers"] = stacked
+        specs["layers"] = stacked_specs
+
+        # remainder layers (unrolled)
+        rem, rem_specs = [], []
+        rkeys = jax.random.split(keys[2], max(self.num_rem, 1))
+        for r in range(self.num_rem):
+            idx = self.num_periods * self.period + r
+            pj, sj = _init_layer(rkeys[r], cfg, idx)
+            rem.append(pj)
+            rem_specs.append(sj)
+        params["rem_layers"] = rem
+        specs["rem_layers"] = rem_specs
+
+        # encoder (whisper)
+        if cfg.encdec is not None:
+            enc, enc_specs = [], []
+            ekeys = jax.random.split(keys[3], cfg.encdec.num_encoder_layers)
+            for i in range(cfg.encdec.num_encoder_layers):
+                ks = jax.random.split(ekeys[i], 2)
+                pe: Dict[str, Any] = {}
+                se: Dict[str, Any] = {}
+                pe["norm1"], se["norm1"] = L.init_rmsnorm(
+                    cfg.d_model, jnp.dtype(cfg.param_dtype))
+                pe["attn"], se["attn"] = L.init_attention(
+                    ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim, jnp.dtype(cfg.param_dtype), False)
+                pe["norm2"], se["norm2"] = L.init_rmsnorm(
+                    cfg.d_model, jnp.dtype(cfg.param_dtype))
+                pe["mlp"], se["mlp"] = L.init_mlp(
+                    ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                    jnp.dtype(cfg.param_dtype))
+                enc.append(pe)
+                enc_specs.append(se)
+            params["encoder"] = enc
+            specs["encoder"] = enc_specs
+            params["enc_norm"], specs["enc_norm"] = L.init_rmsnorm(
+                cfg.d_model, jnp.dtype(cfg.param_dtype))
+        return params, specs
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frame_embeds):
+        """whisper encoder over precomputed frame embeddings [B, T, d]."""
+        cfg = self.cfg
+        x = frame_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        B, T, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        for pe in params["encoder"]:
+            h = L.rmsnorm(pe["norm1"], x, cfg.norm_eps)
+            y, _ = L.attention(
+                pe["attn"], h, positions, num_heads=cfg.num_heads,
+                num_kv=cfg.num_kv_heads, hd=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, causal=False)
+            x = x + y
+            h = L.rmsnorm(pe["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp(pe["mlp"], h, cfg.act)
+        return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # -- decoder stack -------------------------------------------------------
+    def _stack(self, params, x, positions, *, cache=None, cache_pos=0,
+               enc_out=None, prefix_len=0,
+               recomp: Optional[RecomputeConfig] = None,
+               num_chunks: int = 1):
+        """Run all decoder layers. cache: {'periods': [list per position of
+        stacked trees], 'rem': [...]} or None."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+
+        # --- scanned periodic part, split into chronos chunks ---
+        nper = self.num_periods
+        chunk_bounds = [round(c * nper / num_chunks)
+                        for c in range(num_chunks + 1)]
+
+        def period_body(carry, xs):
+            x, aux = carry
+            ptrees, ctrees = xs
+            new_ctrees = []
+            for j in range(self.period):
+                c_j = ctrees[j] if ctrees is not None else None
+                x, nc, aux = _apply_layer(
+                    ptrees[j], x, positions, cfg, j, cache=c_j,
+                    cache_pos=cache_pos, enc_out=enc_out,
+                    prefix_len=prefix_len, aux_sum=aux)
+                new_ctrees.append(nc)
+            return (x, aux), new_ctrees
+
+        new_cache_periods = []
+        for ci in range(num_chunks):
+            lo, hi = chunk_bounds[ci], chunk_bounds[ci + 1]
+            if hi <= lo:
+                continue
+            ptrees = [jax.tree.map(lambda a: a[lo:hi], t)
+                      for t in params["layers"]]
+            if cache is not None:
+                ctrees = [jax.tree.map(lambda a: a[lo:hi], t)
+                          for t in cache["periods"]]
+            else:
+                ctrees = None
+            body = period_body
+            if recomp is not None and cache is None:
+                body = _wrap_remat(period_body, recomp, ci, num_chunks)
+            (x, aux), ncs = jax.lax.scan(
+                body, (x, aux),
+                (ptrees, ctrees) if ctrees is not None else (ptrees, None))
+            new_cache_periods.append(ncs)
+
+        # --- remainder layers (deepest; belong to the last chunk) ---
+        new_rem = []
+        for r in range(self.num_rem):
+            idx = nper * self.period + r
+            c_r = cache["rem"][r] if cache is not None else None
+            x, nc, aux = _apply_layer(
+                params["rem_layers"][r], x, positions, cfg, idx, cache=c_r,
+                cache_pos=cache_pos, enc_out=enc_out, prefix_len=prefix_len,
+                aux_sum=aux)
+            new_rem.append(nc)
+
+        new_cache = None
+        if cache is not None:
+            # stitch chunks back together per period position
+            per_pos = []
+            for j in range(self.period):
+                parts = [nc[j] for nc in new_cache_periods]
+                per_pos.append(jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+                    if len(parts) > 1 else parts[0])
+            new_cache = {"periods": per_pos, "rem": new_rem}
+        return x, new_cache, aux
+
+    # -- public entry points ---------------------------------------------
+    def forward(self, params, tokens, *, positions=None, cache=None,
+                cache_pos=0, frame_embeds=None, patch_embeds=None,
+                recomp: Optional[RecomputeConfig] = None,
+                num_chunks: int = 1):
+        """tokens [B, S] -> (logits [B, S(, +patches)], new_cache, aux).
+
+        - paligemma: ``patch_embeds`` [B, P, d] prepended as prefix.
+        - whisper: ``frame_embeds`` [B, T, d] encoded then cross-attended.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = L.embed(params["embed"], tokens)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        prefix_len = 0
+        if patch_embeds is not None:
+            x = jnp.concatenate(
+                [patch_embeds.astype(x.dtype), x], axis=1)
+            prefix_len = patch_embeds.shape[1]
+            S = S + prefix_len
+        if positions is None:
+            pos0 = cache_pos if cache is not None else 0
+            positions = jnp.broadcast_to(
+                pos0 + jnp.arange(S)[None], (B, S))
+        enc_out = None
+        if frame_embeds is not None:
+            enc_out = self.encode(params, frame_embeds)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        x = shard(x, "dp", None, None)
+        x, new_cache, aux = self._stack(
+            params, x, positions, cache=cache, cache_pos=cache_pos,
+            enc_out=enc_out, prefix_len=prefix_len, recomp=recomp,
+            num_chunks=num_chunks)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        return logits, new_cache, aux
+
+    def loss(self, params, batch, *, recomp=None, num_chunks: int = 1):
+        """batch: {'tokens': [B,S], 'loss_mask': [B,S] optional,
+        'frame_embeds'/'patch_embeds' optional}. Next-token CE."""
+        tokens = batch["tokens"]
+        logits, _, aux = self.forward(
+            params, tokens[:, :-1],
+            frame_embeds=batch.get("frame_embeds"),
+            patch_embeds=batch.get("patch_embeds"),
+            recomp=recomp, num_chunks=num_chunks)
+        labels = tokens[:, 1:]
+        npatch = (0 if batch.get("patch_embeds") is None
+                  else batch["patch_embeds"].shape[1])
+        if npatch:
+            logits = logits[:, npatch:]
+        mask = batch.get("loss_mask")
+        ce = L.softmax_xent(logits, labels,
+                            None if mask is None else mask[:, 1:])
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
+        per_pos = []
+        for j in range(self.period):
+            one = _init_cache_layer(cfg, j, batch, seq, enc_len)
+            per_pos.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (self.num_periods,) + a.shape).copy(), one))
+        rem = []
+        for r in range(self.num_rem):
+            idx = self.num_periods * self.period + r
+            rem.append(_init_cache_layer(cfg, idx, batch, seq, enc_len))
+        return {"periods": per_pos, "rem": rem}
+
+    def prefill(self, params, tokens, cache, **kw):
+        logits, cache, _ = self.forward(params, tokens, cache=cache,
+                                        cache_pos=0, **kw)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, tokens1, cache, pos, **kw):
+        """tokens1 [B,1]; pos: scalar int (same position for the batch)."""
+        B = tokens1.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos)[None, None], (B, 1)).astype(jnp.int32)
+        logits, cache, _ = self.forward(params, tokens1, positions=positions,
+                                        cache=cache, cache_pos=pos, **kw)
+        return logits[:, -1], cache
+
+
+def _wrap_remat(body, recomp: RecomputeConfig, chunk_idx: int,
+                num_chunks: int):
+    """Chronos-Recomp: rematerialize the shallowest chunks fully; other
+    chunks keep projection outputs but recompute attention internals
+    (``dots_with_no_batch_dims_saveable`` == FlashAttention + operator-
+    level recompute, the paper's §6.1 default — scores are never
+    resident)."""
+    selective = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if recomp.mode == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    elif recomp.mode == "chronos" and chunk_idx < recomp.num_recomp_chunks:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if recomp.policy == "full" else selective)
+    else:
+        # "none" / deep chunks: flash-attention semantics only
+        policy = selective
+    return jax.checkpoint(body, policy=policy, prevent_cse=False)

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (adamw_init, adamw_update, cast_like,  # noqa: F401
+                               global_norm, zero_state_specs, drop_fsdp)
+from repro.optim.compression import (compressed_psum, ef_init,  # noqa: F401
+                                     quantize_int8, dequantize_int8)
+from repro.optim.offload import (ChronosOffloadRunner, HostAdamW,  # noqa: F401
+                                 backend_supports_pinned_host,
+                                 merge_deep_shallow, split_deep_shallow)
+from repro.optim.schedules import lr_at  # noqa: F401

@@ -1,0 +1,63 @@
+"""Gradient compression for cross-replica reduction: int8 quantization
+with error feedback (EF-SGD style).
+
+The wire format uses a *shared* scale (one tiny max-allreduce first) so
+the int32-accumulated psum of quantized values is exact; the residual
+quantization error is carried to the next step (error feedback), which
+keeps convergence within noise of fp32 all-reduce in practice.
+
+Used by the pipeline runtime for the shared-parameter gradient psum over
+the pipe axis and by the launcher for DP reductions on slow (DCN)
+links.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(grads_proto) -> Any:
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                        grads_proto)
+
+
+def compressed_psum(grads, axis: str, ef,
+                    bits: int = 8) -> Tuple[Any, Any]:
+    """psum(grads, axis) over an int8 wire with error feedback.
+
+    Returns (reduced fp32 grads, new_ef).  Must run inside shard_map
+    manual over ``axis``.
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        amax = jnp.max(jnp.abs(g))
+        amax = jax.lax.pmax(amax, axis)                # shared scale
+        scale = jnp.maximum(amax, 1e-30) / qmax
+        q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+        new_e = g - q * scale
+        q8 = q.astype(jnp.int8)                        # wire dtype
+        summed = jax.lax.psum(q8.astype(jnp.int32), axis)
+        return summed.astype(jnp.float32) * scale, new_e
+
+    out = jax.tree.map(one, grads, ef)
+    red = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return red, new_ef
+
+
+def quantize_int8(g) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Standalone int8 quantizer (for checkpoint/offload transport)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (CollectiveStats, Roofline,  # noqa: F401
+                                     cost_to_roofline, model_flops_for,
+                                     parse_collectives)

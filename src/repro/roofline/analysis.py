@@ -1,0 +1,391 @@
+"""Roofline terms from AOT-compiled artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() provides FLOPs/bytes (per-device, post-SPMD).
+collective_bytes is parsed from the partitioned HLO text: operand bytes
+of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, multiplied by enclosing while-loop trip counts
+(cost_analysis does NOT multiply, and scans hide most collectives).
+collective_bytes is reported as per-device-sum x chips, so the term's
+``/ chips`` yields per-chip seconds, matching the other two terms.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,1024]{1,0}' -> bytes; tuples handled by caller."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _out_bytes(line: str) -> int:
+    """Bytes of the op's OUTPUT shape (lhs of '='): good proxy for
+    collective payload (all-reduce out == in; all-gather out = full)."""
+    lhs = line.split("=", 1)[0]
+    total = 0
+    for m in _SHAPE_RE.finditer(lhs):
+        total += _shape_bytes(m.group(0))
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+@dataclass
+class HloStats:
+    flops: float                 # dot flops, loop-multiplied
+    bytes_traffic: float         # kernel-adjusted HBM traffic (see below)
+    collectives: CollectiveStats
+    bytes_traffic_raw: float = 0.0   # including score-class tensors
+    score_bytes: float = 0.0         # [.., S, S] attention-score-class
+    #                                  tensors: resident in VMEM under the
+    #                                  validated Pallas flash kernel on
+    #                                  the TPU target; the XLA *CPU*
+    #                                  lowering of the dry-run spills
+    #                                  them, so they are reported
+    #                                  separately and excluded from the
+    #                                  kernel-adjusted memory term.
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Computation headers look like
+    ``%name (params...) -> ret { `` / ``ENTRY %main ... {``."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        st = s.strip()
+        if st.endswith("{") and "->" in st:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", st)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None and st and st != "}":
+            comps[cur].append(st)
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """computation -> product of enclosing while trip counts.  Primary
+    source: XLA's ``backend_config known_trip_count``; fallback: the
+    condition computation's compare-against-constant."""
+    trip: Dict[str, int] = {}
+    cond_const: Dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = []
+        for ln in lines:
+            for mc in re.finditer(r"constant\((\d+)\)", ln):
+                consts.append(int(mc.group(1)))
+        if any("compare" in ln for ln in lines) and consts:
+            cond_const[name] = max(consts)
+    called_by: Dict[str, str] = {}
+    for parent, lines in comps.items():
+        for ln in lines:
+            mw = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                           ln)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                mt = re.search(r'known_trip_count[":{]+n[":]+(\d+)', ln)
+                trip[body] = (int(mt.group(1)) if mt
+                              else cond_const.get(cond, 1))
+                called_by.setdefault(body, parent)
+                called_by.setdefault(cond, parent)
+            else:
+                for mc in re.finditer(
+                        r"(?:to_apply|calls)=%?([\w\.\-]+)", ln):
+                    callee = mc.group(1)
+                    if callee in comps:
+                        called_by.setdefault(callee, parent)
+
+    def mult(comp: str, depth=0) -> int:
+        if depth > 30:
+            return 1
+        m = trip.get(comp, 1)
+        p = called_by.get(comp)
+        return m * (mult(p, depth + 1) if p else 1)
+
+    return {c: mult(c) for c in comps}
+
+
+_DEF_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^=]*?\))|(?:\S+))\s+([\w\-]+)\(")
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    """One pass over the partitioned HLO: dot FLOPs, byte traffic, and
+    collective payloads — all multiplied by enclosing loop trip counts
+    (XLA's cost_analysis does NOT account for while loops, and scans hide
+    nearly all of a training step).
+
+    Byte-traffic model: every op's output is written once; dot operands
+    are read once (looked up in the module-wide symbol table since
+    operands are not inline-typed in optimized dumps).
+    """
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(comps)
+
+    # module-wide symbol table: value name -> type string
+    symtab: Dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            md = _DEF_RE.match(ln)
+            if md:
+                symtab[md.group(1)] = md.group(2)
+
+    def type_bytes(type_str: str) -> int:
+        return sum(_shape_bytes(m.group(0))
+                   for m in _SHAPE_RE.finditer(type_str))
+
+    flops = 0.0
+    traffic = 0.0
+    bytes_by: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    # ops that don't materialize HBM buffers of their own (aliases,
+    # control flow whose bodies are separately counted, bookkeeping) —
+    # and fusion internals are inside called computations we skip below.
+    NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "constant",
+                  "while", "conditional", "call", "bitcast", "copy",
+                  "copy-start", "copy-done", "after-all", "iota",
+                  "broadcast", "reshape", "transpose"}
+    fusion_callees = set()
+    for lines in comps.values():
+        for ln in lines:
+            mfc = re.search(r"calls=%?([\w\.\-]+)", ln)
+            if mfc:
+                fusion_callees.add(mfc.group(1))
+
+    def is_score_class(type_str: str) -> bool:
+        """[.., S, S]-shaped tensors with both trailing dims >= 1024:
+        attention scores/probs/masks — VMEM-resident under the flash
+        kernel on TPU."""
+        for m in _SHAPE_RE.finditer(type_str):
+            dims = ([int(d) for d in m.group(2).split(",")]
+                    if m.group(2) else [])
+            if len(dims) >= 2 and dims[-1] >= 1024 and dims[-2] >= 1024 \
+                    and dims[-1] == dims[-2]:
+                return True
+        return False
+
+    # computations containing dynamic-update-slice: fusions calling them
+    # update loop-carried buffers IN PLACE (XLA aliases input/output), so
+    # charging the full buffer per trip would overcount by the trip count.
+    dus_comps = {name for name, lines in comps.items()
+                 if any("dynamic-update-slice" in ln for ln in lines)}
+
+    score_bytes = 0.0
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        in_fusion = name in fusion_callees
+        for ln in lines:
+            md = _DEF_RE.match(ln)
+            if not md:
+                continue
+            rhs = md.group(2)
+            mo = _OP_RE.match(rhs)
+            if not mo:
+                continue
+            type_str, op = mo.group(1), mo.group(2)
+            ob = type_bytes(type_str)
+            # HBM traffic: top-level op outputs + operand reads (fusion
+            # internals live in registers/VMEM — skip callee bodies)
+            if not in_fusion and op not in NO_TRAFFIC:
+                mfc = re.search(r"calls=%?([\w\.\-]+)", rhs)
+                inplace = (op == "dynamic-update-slice" or
+                           (op == "fusion" and mfc is not None
+                            and mfc.group(1) in dus_comps))
+                row = 0.0 if inplace else ob * mult
+                row_score = (ob * mult if not inplace
+                             and is_score_class(type_str) else 0.0)
+                margs = re.search(rf"{op}\(([^)]*)\)", rhs)
+                if margs:
+                    for a in margs.group(1).split(","):
+                        a = a.strip().lstrip("%")
+                        t = symtab.get(a)
+                        if t is None:
+                            continue
+                        tstr = t.split(" ", 1)[0]
+                        if inplace and tstr.split("{")[0] == \
+                                type_str.split("{")[0]:
+                            continue     # the aliased accumulator
+                        b = type_bytes(tstr) * mult
+                        row += b * (2 if inplace else 1)  # slice r+w
+                        if is_score_class(tstr):
+                            row_score += b
+                traffic += row - row_score
+                score_bytes += row_score
+
+            if op == "dot":
+                margs = re.search(r"dot\(([^)]*)\)", rhs)
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if margs and mcd:
+                    ops = [a.strip().lstrip("%")
+                           for a in margs.group(1).split(",")]
+                    lhs_type = symtab.get(ops[0], "")
+                    msh = _SHAPE_RE.search(lhs_type)
+                    if msh and msh.group(2):
+                        dims = [int(d) for d in msh.group(2).split(",")]
+                        csize = 1
+                        for ci in (int(c) for c in
+                                   mcd.group(1).split(",") if c):
+                            if ci < len(dims):
+                                csize *= dims[ci]
+                        out_elems = _shape_elems(
+                            _SHAPE_RE.search(type_str).group(0))
+                        flops += 2.0 * out_elems * csize * mult
+
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                cb = ob * mult
+                # TPU-target dtype correction: XLA *CPU* lowers bf16
+                # matmuls in f32 (no native bf16 FMA), so TP partial-sum
+                # / weight-gather collectives show up at twice their TPU
+                # width.  Payloads in dot contexts with f32 dtype count
+                # at bf16 width; optimizer/grad reductions keep f32.
+                if "f32[" in type_str and "dot_general" in ln:
+                    cb *= 0.5
+                bytes_by[base_op] += cb
+                count_by[base_op] += mult
+    return HloStats(flops=flops, bytes_traffic=traffic,
+                    collectives=CollectiveStats(bytes_by, count_by),
+                    bytes_traffic_raw=traffic + score_bytes,
+                    score_bytes=score_bytes)
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    return analyze_hlo(hlo_text).collectives
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per device
+    bytes_hbm: float              # per device
+    collective_bytes: float       # per-device-sum x chips
+    chips: int
+    model_flops: float = 0.0      # 6*N*D useful flops (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): <1 means remat/redundancy."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute roofline: useful compute time
+        over the binding term."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / bound if bound else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.bytes_hbm,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def cost_to_roofline(cost: Dict, collectives: CollectiveStats, chips: int,
+                     model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = sum(float(v) for k, v in cost.items()
+                 if k.startswith("bytes accessed"))
+    # 'bytes accessed' (no suffix) is the total; avoid double counting
+    if "bytes accessed" in cost:
+        nbytes = float(cost["bytes accessed"])
+    return Roofline(flops=flops, bytes_hbm=nbytes,
+                    collective_bytes=collectives.total_bytes * chips,
+                    chips=chips, model_flops=model_flops)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for training; 2*N*D for
+    inference forward."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens

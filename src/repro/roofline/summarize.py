@@ -1,0 +1,167 @@
+"""Generate results/dryrun_summary.md from the dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.summarize
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "/root/repo/results/dryrun")
+OUT = os.path.join(os.path.dirname(RESULTS), "dryrun_summary.md")
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def analytic_memory_term(arch: str, shape_name: str, chips: int,
+                         multi_pod: bool) -> float:
+    """First-principles TPU-target HBM traffic per device per step.
+
+    The dry-run HLO is an XLA *CPU* lowering whose fusion granularity
+    writes every small intermediate to memory (30-60 buffers per layer);
+    a TPU lowering fuses those chains.  This model counts what a TPU
+    step actually moves:
+      train:  weights 3 reads/mb (fwd+bwd+remat)  +  activations ~3x
+              stored bytes  +  optimizer state read+write  +  fp32 grad
+              accum read+write per microbatch  +  logits r/w per mb
+      serve:  weights 1 read per step + KV cache read (+write slice)
+    """
+    from repro.configs import get_config, get_shape
+    from repro.core.analysis import MemoryModel
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    tp = 16
+    dp = chips // tp
+    mm = MemoryModel.build(cfg, tp=tp)
+    n = cfg.param_count()
+    nact = cfg.active_param_count()
+    if shape.kind == "train":
+        mb_local_tokens = 2 * shape.seq_len          # microbatch_size=2
+        m = max(1, shape.global_batch // (2 * dp))
+        w_read = 3 * m * (2 * nact / tp)             # bf16 active weights
+        act = 3 * m * mm.act_per_token_layer * mb_local_tokens \
+            * cfg.num_layers
+        states = 2 * 16 * n / chips
+        gacc = 2 * m * 4 * n / chips
+        logits = 2 * m * 4 * mb_local_tokens * cfg.vocab_size / tp
+        total = w_read + act + states + gacc + logits
+    elif shape.kind == "prefill":
+        tokens_local = shape.global_batch * shape.seq_len / dp
+        total = 2 * nact / tp + mm.act_per_token_layer * tokens_local \
+            * cfg.num_layers + 2 * tokens_local * cfg.vocab_size / tp
+    else:                                            # decode: one token
+        hd = cfg.resolved_head_dim
+        attn_layers = sum(1 for i in range(cfg.num_layers)
+                          if cfg.layer_kind(i) == "attn")
+        kv = (2 * 2 * attn_layers * cfg.num_kv_heads * hd
+              * shape.seq_len * shape.global_batch) / chips
+        total = 2 * nact / tp + kv
+    return total / HBM_BW
+
+
+def load(tag, reanalyze=True):
+    """Load cell JSONs; if the gzipped partitioned HLO is cached,
+    recompute the roofline terms with the CURRENT analyzer (so parser
+    improvements don't require recompiling)."""
+    import gzip
+    from repro.roofline.analysis import Roofline, analyze_hlo
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*__{tag}.json"))):
+        d = json.load(open(p))
+        hp = p.replace(".json", ".hlo.gz")
+        if reanalyze and d["status"] == "ok" and os.path.exists(hp):
+            st = analyze_hlo(gzip.open(hp, "rt").read())
+            roof = Roofline(
+                flops=st.flops, bytes_hbm=st.bytes_traffic,
+                collective_bytes=st.collectives.total_bytes * d["chips"],
+                chips=d["chips"],
+                model_flops=d["roofline"]["model_flops"])
+            d["roofline"] = roof.as_dict()
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def fmt_cell(d, multi_pod=False):
+    if d["status"] == "skipped":
+        return ["skip"] + [""] * 9
+    if d["status"] != "ok":
+        return ["ERROR"] + [""] * 9
+    r = d["roofline"]
+    mem = d["memory"].get("total_per_device", 0) / 1e9
+    t_mm = analytic_memory_term(d["arch"], d["shape"], d["chips"],
+                                multi_pod)
+    t_useful = (r["model_flops"] / d["chips"]) / PEAK
+    t_comp = r["t_compute_s"]
+    useful = r["useful_ratio"]
+    if d.get("pipeline"):
+        # the pipeline executor dispatches fwd/bwd via lax.switch; the
+        # static HLO enumerates all 7 branches once per tick, so the
+        # HLO dot count is meaningless for this cell.  Use the schedule
+        # model instead: fwd(1) + bwd(2) + boundary-remat(1) = 4 units
+        # per 3 useful -> t_comp = model_flops * 4/3.
+        t_comp = t_useful * 4.0 / 3.0
+        useful = 0.75
+    bound = max(t_comp, t_mm, r["t_collective_s"])
+    frac = t_useful / bound if bound else 0.0
+    terms = {"compute": t_comp, "memory": t_mm,
+             "collective": r["t_collective_s"]}
+    dom = max(terms, key=terms.get)
+    return ["ok", f"{t_comp:.3g}", f"{t_mm:.3g}",
+            f"{r['t_memory_s']:.3g}", f"{r['t_collective_s']:.3g}", dom,
+            f"{useful:.3f}", f"{frac:.3f}", f"{mem:.1f}",
+            f"{r['roofline_fraction']:.3f}"]
+
+
+def main():
+    lines = ["# Dry-run + roofline summary (generated)", ""]
+    for tag, title in (("singlepod", "Single-pod (16,16) = 256 chips "
+                        "— the roofline table"),
+                       ("multipod", "Multi-pod (2,16,16) = 512 chips "
+                        "— pp over the pod axis")):
+        cells = load(tag)
+        if not cells:
+            continue
+        lines += [f"## {title}", "",
+                  "| arch | shape | status | t_comp(s) | t_mem(s) | "
+                  "t_mem_hloUB(s) | t_coll(s) | dominant | useful | "
+                  "roofline_frac | GB/dev | frac_hloUB |",
+                  "|" + "---|" * 12]
+        for (arch, shape), d in sorted(cells.items()):
+            lines.append("| " + " | ".join(
+                [arch, shape] + fmt_cell(d, tag == "multipod")) + " |")
+        ok = sum(1 for d in cells.values() if d["status"] == "ok")
+        sk = sum(1 for d in cells.values() if d["status"] == "skipped")
+        er = sum(1 for d in cells.values() if d["status"] == "error")
+        lines += ["", f"cells: ok={ok} skipped={sk} error={er}", ""]
+
+    # per-cell one-line bottleneck notes (single-pod)
+    cells = load("singlepod")
+    if cells:
+        lines += ["## Bottleneck notes (single-pod)", ""]
+        for (arch, shape), d in sorted(cells.items()):
+            if d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            dom = r["dominant"]
+            if dom == "compute":
+                note = ("compute-bound: raise useful_ratio (less remat / "
+                        "sparser MoE dispatch) or grow per-chip batch")
+            elif dom == "memory":
+                note = ("HBM-bound: fuse elementwise chains, bf16 "
+                        "residuals, larger microbatch to amortize "
+                        "weight reads")
+            else:
+                note = ("collective-bound: shift FSDP all-gathers off the "
+                        "critical path (overlap with compute), or trade "
+                        "dp-shard for tp")
+            lines.append(f"- **{arch} × {shape}**: dominant={dom}, "
+                         f"useful={r['useful_ratio']:.2f} → {note}")
+    with open(OUT, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Subprocess helper: numerical-equivalence check of the SPMD pipeline
+executor against single-device autodiff.
+
+Usage: python pipeline_check.py <arch> <schedule> <P> <v> <m> [ndev] [dp] [tp]
+Exits 0 on success; prints MAXERR=... for the parent test to parse.
+"""
+import os
+import sys
+
+arch, schedule = sys.argv[1], sys.argv[2]
+P_, v, m = int(sys.argv[3]), int(sys.argv[4]), int(sys.argv[5])
+ndev = int(sys.argv[6]) if len(sys.argv) > 6 else P_
+dp = int(sys.argv[7]) if len(sys.argv) > 7 else 1
+tp = int(sys.argv[8]) if len(sys.argv) > 8 else 1
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+
+import dataclasses  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.configs.base import MoEConfig, SSMConfig  # noqa: E402
+from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
+                                         make_pipeline_spec,
+                                         make_train_grads_fn)
+from repro.models import LM, shard_env  # noqa: E402
+
+if arch == "jamba-pipe":
+    cfg = dataclasses.replace(
+        get_reduced("jamba-v0.1-52b"), name="jamba-pipe", num_layers=8,
+        ssm=SSMConfig(state_dim=16, head_dim=32, expand=2, conv_width=4,
+                      chunk_len=16, attn_period=2, attn_offset=1),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=256,
+                      layer_period=2, layer_offset=0, capacity_factor=8.0))
+else:
+    cfg = get_reduced(arch)
+
+mbB, S = 2, 17
+axes = ("pp",) if dp * tp == 1 else ("pp", "data", "model")
+shape = (P_,) if dp * tp == 1 else (P_, dp, tp)
+mesh = jax.make_mesh(shape, axes,
+                     axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+rules = {"dp": "data", "tp": "model", "fsdp": None} if dp * tp > 1 else {}
+
+spec = make_pipeline_spec(cfg, P=P_, v=v, m=m, microbatch=mbB, seq_len=S,
+                          schedule=schedule)
+params, _ = init_pipeline_params(jax.random.key(0), cfg, spec.layout)
+tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
+                            cfg.vocab_size)
+batch = {"tokens": tokens}
+if cfg.vision is not None:
+    batch["patch_embeds"] = 0.02 * jax.random.normal(
+        jax.random.key(2), (m, mbB, cfg.vision.num_patches, cfg.d_model))
+if cfg.encdec is not None:
+    batch["frame_embeds"] = 0.02 * jax.random.normal(
+        jax.random.key(3), (m, mbB, cfg.encdec.num_frames, cfg.d_model))
+
+with shard_env(mesh, rules):
+    fn = make_train_grads_fn(spec, mesh)
+    grads, metrics = jax.jit(fn)(params, batch)
+
+# ---- single-device reference ----
+lm = LM(cfg)
+L_, K, M = spec.layout.L, spec.layout.K, spec.layout.M
+per = spec.layout.period
+
+lm_params, _ = lm.init(jax.random.key(9))
+
+
+def to_lm_stack(pipe_leaf, j):
+    """pipeline leaf [P, v, M, ...] (period position j) -> lm stacked
+    [num_periods, ...] in global layer order (real layers only)."""
+    a = np.asarray(pipe_leaf)
+    nper = L_ // per
+    out = np.zeros((nper,) + a.shape[3:], a.dtype)
+    for s in range(P_):
+        for c in range(v):
+            for mi in range(M):
+                g = (c * P_ + s) * K + mi * per + j
+                if g < L_ and g % per == j:
+                    out[g // per] = a[s, c, mi]
+    return jnp.asarray(out)
+
+
+lm_params = dict(lm_params)
+lm_params["layers"] = [jax.tree.map(lambda x, jj=j: to_lm_stack(x, jj),
+                                    params["blocks"][j])
+                       for j in range(per)]
+lm_params["rem_layers"] = []
+lm_params["embed"] = params["embed"]
+lm_params["final_norm"] = params["final_norm"]
+if cfg.encdec is not None:
+    lm_params["encoder"] = params["encoder"]
+    lm_params["enc_norm"] = params["enc_norm"]
+
+
+def ref_loss(p):
+    tot = 0.0
+    for i in range(m):
+        mb = {"tokens": tokens[i]}
+        if "patch_embeds" in batch:
+            mb["patch_embeds"] = batch["patch_embeds"][i]
+        if "frame_embeds" in batch:
+            mb["frame_embeds"] = batch["frame_embeds"][i]
+        tot = tot + lm.loss(p, mb)[0]
+    return tot
+
+
+ref_l = float(ref_loss(lm_params)) / m
+got_l = float(metrics["loss"])
+ref_g = jax.grad(ref_loss)(lm_params)
+
+errs = [abs(ref_l - got_l)]
+ge_p, ge_r = grads["embed"]["tokens"], ref_g["embed"]["tokens"]
+errs.append(float(jnp.max(jnp.abs(ge_p - ge_r))))
+for j in range(per):
+    gb_p = jax.tree.map(lambda x, jj=j: to_lm_stack(x, jj),
+                        grads["blocks"][j])
+    for a, b in zip(jax.tree.leaves(gb_p),
+                    jax.tree.leaves(ref_g["layers"][j])):
+        errs.append(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))))
+if cfg.encdec is not None:
+    for a, b in zip(jax.tree.leaves(grads["encoder"]),
+                    jax.tree.leaves(ref_g["encoder"])):
+        errs.append(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))))
+
+maxerr = max(errs)
+print(f"MAXERR={maxerr:.3e} loss={got_l:.5f} ref={ref_l:.5f}")
+sys.exit(0 if maxerr < 5e-3 else 1)

@@ -1,0 +1,166 @@
+"""Pallas kernel tests: shape/dtype sweeps, assert_allclose vs the pure
+jnp oracle (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_adamw.kernel import fused_adamw_flat
+from repro.kernels.fused_adamw.ref import adamw_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_rows
+from repro.kernels.rmsnorm.ref import rmsnorm_rows_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.models.mamba import ssd_reference
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Sk, H, G, d, blk)
+    (1, 32, 32, 2, 2, 16, 16),       # MHA, even blocks
+    (2, 48, 48, 4, 2, 32, 32),       # GQA, ragged blocks (pad path)
+    (1, 64, 64, 4, 1, 64, 32),       # MQA
+])
+def test_flash_attention_fwd_sweep(dtype, shape):
+    B, Sq, Sk, H, G, d, blk = shape
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, G, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, G, d)).astype(dtype)
+    o, lse = flash_attention_fwd(q, k, v, blk_q=blk, blk_k=blk,
+                                 interpret=True)
+    o_ref, lse_ref = attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True, window=8),
+    dict(causal=True, prefix=8),
+    dict(causal=False),
+    dict(causal=True, window=8, prefix=4),
+])
+def test_flash_attention_masks(kwargs):
+    B, S, H, G, d = 1, 40, 2, 2, 16
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, G, d))
+    v = jax.random.normal(ks[2], (B, S, G, d))
+    o, _ = flash_attention_fwd(q, k, v, blk_q=16, blk_k=16, interpret=True,
+                               **kwargs)
+    o_ref, _ = attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """q_offset path = flash-decode with a partial query window."""
+    B, Sk, H, G, d = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, 8, H, d))
+    k = jax.random.normal(ks[1], (B, Sk, G, d))
+    v = jax.random.normal(ks[2], (B, Sk, G, d))
+    o, _ = flash_attention_fwd(q, k, v, q_offset=56, blk_q=8, blk_k=32,
+                               interpret=True)
+    o_ref, _ = attention_ref(q, k, v, q_offset=56)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+def test_flash_attention_grads_match_ref():
+    B, S, H, G, d = 1, 32, 2, 2, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, G, d))
+    v = jax.random.normal(ks[2], (B, S, G, d))
+    g1 = jax.grad(lambda q_: flash_attention(q_, k, v).sum())(q)
+    g2 = jax.grad(lambda q_: attention_ref(q_, k, v)[0].sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    # (B, S, H, P, N, chunk)
+    (1, 32, 2, 8, 16, 8),
+    (2, 64, 4, 16, 8, 16),
+    (1, 48, 1, 8, 8, 16),
+])
+def test_ssd_scan_matches_recurrence(shape):
+    B, S, H, P, N, chunk = shape
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    Bc = jax.random.normal(ks[1], (B, S, N))
+    Cc = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[4], (H,)))
+    y, h = ssd_scan(x, Bc, Cc, dt, A, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_reference(x, Bc, Cc, dt, A)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [100, 65536, 70000])
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adamw_sweep(n, gdtype):
+    ks = jax.random.split(jax.random.key(0), 4)
+    g = jax.random.normal(ks[0], (n,)).astype(gdtype)
+    mu = jax.random.normal(ks[1], (n,))
+    nu = jnp.abs(jax.random.normal(ks[2], (n,)))
+    w = jax.random.normal(ks[3], (n,))
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, bc1=0.1, bc2=0.05,
+              wd=0.1)
+    mu2, nu2, w2 = fused_adamw_flat(g, mu, nu, w, interpret=True, **kw)
+    mu_r, nu_r, w_r = adamw_ref(g, mu, nu, w, **kw)
+    np.testing.assert_allclose(np.asarray(mu2), np.asarray(mu_r),
+                               rtol=2e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nu2), np.asarray(nu_r),
+                               rtol=2e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w_r),
+                               rtol=2e-6, atol=1e-6)
+
+
+def test_fused_adamw_plugs_into_optimizer():
+    from repro.configs.base import OptimizerConfig
+    from repro.kernels.fused_adamw.ops import adamw_update_leaf
+    from repro.optim import adamw_init, adamw_update
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0, schedule="constant",
+                          weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.ones((8, 8))}
+    g = {"w": 0.1 * jnp.ones((8, 8))}
+    st = adamw_init(params)
+    m1, _, _ = adamw_update(g, st, cfg)
+    st2 = adamw_init(params)
+    m2, _, _ = adamw_update(g, st2, cfg, update_fn=adamw_update_leaf)
+    np.testing.assert_allclose(np.asarray(m1["w"]), np.asarray(m2["w"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 64), (300, 128), (1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.key(0), 2)
+    x = jax.random.normal(ks[0], shape).astype(dtype)
+    s = (1 + 0.1 * jax.random.normal(ks[1], (shape[-1],))).astype(dtype)
+    y = rmsnorm_rows(x, s, block_rows=64, interpret=True)
+    y_ref = rmsnorm_rows_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol)

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For each of the 10 assigned architectures: instantiate a reduced config of
+the same family, run one forward + one train (grad) step, assert output
+shapes and absence of NaNs; check decode == full-forward numerics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, RecomputeConfig, get_reduced
+from repro.models import LM
+
+
+def _batch(cfg, key, B=2, S=17):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if cfg.vision is not None:
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            ks[1], (B, cfg.vision.num_patches, cfg.d_model))
+    if cfg.encdec is not None:
+        batch["frame_embeds"] = 0.02 * jax.random.normal(
+            ks[2], (B, cfg.encdec.num_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, specs = lm.init(jax.random.key(0))
+    # spec tree matches param tree structure
+    assert (jax.tree.structure(jax.tree.map(lambda _: 0, params)) ==
+            jax.tree.structure(jax.tree.map(
+                lambda _: 0, specs,
+                is_leaf=lambda s: isinstance(s, tuple) or s is None)))
+    batch = _batch(cfg, jax.random.key(1))
+    logits, _, aux = lm.forward(
+        params, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"),
+        frame_embeds=batch.get("frame_embeds"))
+    npatch = cfg.vision.num_patches if cfg.vision else 0
+    assert logits.shape == (2, 17 + npatch, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = lm.loss(params, batch)
+    assert np.isfinite(float(loss))
+    # random init: CE should be near ln(V)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_no_nans(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    rc = RecomputeConfig(mode="chronos", num_recomp_chunks=1)
+    grads = jax.jit(jax.grad(
+        lambda p: lm.loss(p, batch, recomp=rc, num_chunks=2)[0]))(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no grads"
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in leaves)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    assert 1e-4 < float(gn) < 1e4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = _batch(cfg, jax.random.key(1), B=B, S=S)
+    tokens = batch["tokens"]
+    kw = {k: v for k, v in batch.items()
+          if k in ("patch_embeds", "frame_embeds")}
+    logits_full, _, _ = lm.forward(params, tokens, **kw)
+    npatch = cfg.vision.num_patches if cfg.vision else 0
+
+    cache = lm.init_cache(B, S + npatch)
+    half = S // 2
+    _, cache = lm.prefill(params, tokens[:, :half], cache, **kw)
+    dkw = {} if cfg.encdec is not None else {}
+    outs = []
+    for t in range(half, S):
+        lg, cache = lm.decode_step(params, tokens[:, t:t + 1], cache,
+                                   t + npatch, **dkw)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    ref = logits_full[:, npatch + half:]
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_remat_chunks_change_nothing_numerically():
+    """Chronos-Recomp must be numerics-preserving (pure recompute)."""
+    cfg = get_reduced("tinyllama-1.1b")
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    g0 = jax.grad(lambda p: lm.loss(p, batch)[0])(params)
+    rc = RecomputeConfig(mode="chronos", num_recomp_chunks=1)
+    g1 = jax.grad(lambda p: lm.loss(p, batch, recomp=rc,
+                                    num_chunks=2)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_param_counts_match_published_sizes():
+    """Full configs should land near their published parameter counts."""
+    from repro.configs import get_config
+    expected = {
+        "qwen2-72b": 72.7e9, "tinyllama-1.1b": 1.1e9, "deepseek-7b": 6.9e9,
+        "grok-1-314b": 314e9, "qwen2-moe-a2.7b": 14.3e9,
+        "jamba-v0.1-52b": 52e9, "mamba2-2.7b": 2.7e9,
+        "gemma3-27b": 27e9, "paligemma-3b": 2.9e9, "whisper-base": 72e6,
+    }
+    for arch, want in expected.items():
+        got = get_config(arch).param_count()
+        assert 0.65 * want < got < 1.45 * want, \
+            f"{arch}: param_count {got/1e9:.2f}B vs published {want/1e9:.2f}B"
+
+
+def test_ssd_chunked_matches_reference():
+    from repro.models.mamba import _ssd_chunked, ssd_reference
+    B, S, H, P, N = 2, 32, 4, 8, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    Bc = jax.random.normal(ks[1], (B, S, N))
+    Cc = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[4], (H,)))
+    y_ref, h_ref = ssd_reference(xh, Bc, Cc, dt, A)
+    for chunk in (4, 8, 16, 32):
+        y, h = _ssd_chunked(xh, Bc, Cc, dt, A, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   atol=1e-4)

@@ -1,0 +1,210 @@
+"""Schedule-compiler tests: validity invariants (hypothesis) + exact
+reproduction of the paper's §4.1/§4.2 closed-form numbers."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis as AN
+from repro.core import schedules as S
+from repro.core.schedule import B, F, retime_with_comm
+
+
+# ---------------------------------------------------------------------------
+# paper-number reproduction
+# ---------------------------------------------------------------------------
+
+def test_1f1b_peak_matches_paper():
+    for P in (4, 8, 16):
+        sched = S.onef1b(P, 4 * P)
+        pk = sched.peak_activation(per_stage=True)
+        assert abs(pk[0] - 1.0) < 1e-9            # stage 0: m_a
+        assert abs(pk[-1] - 1.0 / P) < 1e-9       # last stage: m_a / P
+
+
+def test_interleaved_peak_matches_paper():
+    for P in (4, 8, 16):
+        for v in (2, 4):
+            sched = S.interleaved(P, 4 * P, v)
+            want = 1 + (P - 1) / (P * v)
+            assert abs(sched.peak_activation() - want) < 1e-9, (P, v)
+
+
+def test_chronos_peak_matches_paper_formula():
+    # the ceil-based closed form is tight for these P
+    for P in (4, 6, 8, 16, 32):
+        sched = S.chronos(P, 4 * P, 2)
+        assert abs(sched.peak_activation()
+                   - AN.chronos_peak_frac(P)) < 1e-9, P
+    # and never worse than the paper's bound for the others
+    for P in (3, 5, 7, 13):
+        sched = S.chronos(P, 4 * P, 2)
+        assert sched.peak_activation() <= AN.chronos_peak_frac(P) + 1e-9
+
+
+def test_chronos_approaches_75_percent():
+    assert abs(S.chronos(32, 128, 2).peak_activation() - 0.75) < 0.02
+
+
+def test_chronos_recomp_hits_25_percent():
+    for P in (4, 8, 16, 32):
+        sched = S.chronos_recomp(P, 4 * P)
+        pk = sched.peak_activation(count_transient=False)
+        assert abs(pk - AN.chronos_recomp_peak_frac(P)) < 1e-9, P
+        assert abs(pk - 0.25) < 1e-9
+        assert sched.meta.get("cycle") == 7.0      # paper's steady cycle
+
+
+def test_chronos_recomp_1p5x_better_than_1f1b_r50():
+    """Headline claim: 25% vs 50% at the same recompute budget."""
+    for P in (8, 16):
+        cr = S.chronos_recomp(P, 4 * P).peak_activation(
+            count_transient=False)
+        r50 = S.onef1b(P, 4 * P, recomp=0.5).peak_activation(
+            count_transient=False)
+        assert abs(r50 / cr - 2.0) < 1e-6
+
+
+def test_chronos_bubble_formula_point():
+    """Paper §4.1: tc=0.05, m=128, p=4 -> 8.27% vs 5.37%."""
+    assert abs(AN.chronos_bubble(4, 128, 0.05) - 0.0827) < 2e-3
+    assert abs(AN.onef1b_bubble(4, 128, 0.05) - 0.0537) < 2e-3
+
+
+def test_retime_with_comm_matches_bubble_trend():
+    """Paper point (tc=0.05 T_unit, m=128, p=4): chronos 8.27% vs 1F1B
+    5.37% under synchronous P2P; simulated schedules land within ~1.5pp
+    (slightly longer constructed ramps) with the same ~1.5-1.6x ratio."""
+    P, m, tc = 4, 128, 0.05            # tc in T_unit (= chronos grain)
+    ch = retime_with_comm(S.chronos(P, m, 2), tc, sync=True)
+    f1 = retime_with_comm(S.onef1b(P, m), tc / 2, sync=True)  # grain=2 T_unit
+    assert abs(ch.bubble_ratio() - 0.0827) < 0.02
+    assert abs(f1.bubble_ratio() - 0.0537) < 0.015
+    assert 1.3 < ch.bubble_ratio() / f1.bubble_ratio() < 1.9
+    # beyond-paper: with fully-async P2P (XLA collective-permute overlap)
+    # chronos hides latency *better* than 1F1B
+    cha = retime_with_comm(S.chronos(P, m, 2), tc)
+    f1a = retime_with_comm(S.onef1b(P, m), tc / 2)
+    assert cha.bubble_ratio() < ch.bubble_ratio()
+    # zero comm => same total time as 1F1B (paper: "Set Tc=0, the bubble
+    # overhead for Chronos-Pipe matches that of 1F1B")
+    b_ch = S.chronos(P, 1024, 2).total_time_rel()
+    b_f1 = S.onef1b(P, 1024).total_time_rel()
+    assert abs(b_ch - b_f1) / b_f1 < 0.01
+
+
+def test_chronos_zero2_activation_near_chronos():
+    base = S.chronos(8, 32, 2)
+    z2 = S.chronos_zero2(8, 32, 2, group=2)
+    # "minimal impact on activation storage": within ~2 blocks of chronos
+    # (vs Breadth-First-PP's ~group x blowup)
+    assert z2.peak_activation() <= base.peak_activation() + 2.5 / 16
+    # the extra idle is the *designed* DP reduce-scatter overlap window,
+    # bounded (not BF-PP's full-mini-batch residency)
+    assert z2.total_time_rel() <= base.total_time_rel() * 1.5
+    # grouped adjacency: same-chunk B tasks of a group run back-to-back
+    ts = [t for t in z2.stage_tasks(0) if t.kind == "B" and t.chunk == 1]
+    gaps_adjacent = sum(
+        1 for a, b in zip(ts[::2], ts[1::2]) if b.mb == a.mb + 1)
+    assert gaps_adjacent >= len(ts) // 2 - 1
+
+
+def test_schedule_comparability_total_times():
+    """Chronos total ~ 1F1B total in T_fwd units; GPipe is fast but pays
+    m/P x activation memory."""
+    P, m = 8, 32
+    t1 = S.onef1b(P, m).total_time_rel()
+    tc = S.chronos(P, m, 2).total_time_rel()
+    assert abs(tc - t1) / t1 < 0.05
+    assert S.gpipe(P, m).peak_activation() >= m / P - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+schedule_cases = st.sampled_from([
+    ("gpipe", {}), ("1f1b", {}), ("1f1b", {"recomp": 0.5}),
+    ("interleaved", {"v": 2}), ("interleaved", {"v": 4}),
+    ("chronos", {"v": 2}), ("chronos", {"v": 3}), ("chronos", {"v": 4}),
+    ("chronos_recomp", {}), ("chronos_zero2", {"v": 2, "group": 2}),
+])
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=schedule_cases, P=st.integers(2, 12),
+       mmul=st.integers(1, 3))
+def test_schedule_validity_invariants(case, P, mmul):
+    name, kw = case
+    m = P * 2 * mmul          # interleaved needs m % P == 0
+    if name == "chronos_recomp" and P < 3:
+        return
+    sched = S.get_schedule(name, P, m, **kw)
+    sched.check()                                  # deps + no overlap
+    # every (mb, chunk, stage) appears exactly once per kind
+    keys = set()
+    for t in sched.tasks:
+        assert t.key() not in keys
+        keys.add(t.key())
+    assert len(keys) == 2 * P * sched.v * m
+    # peak activation sane (gpipe worst case holds all m microbatches)
+    pk = sched.peak_activation()
+    assert 0 < pk <= m / P + 2.0 + 1e-9
+    # total busy time per stage == total work
+    total_work = sum(t.dur for t in sched.tasks)
+    assert total_work >= 3 * sched.v * m * P - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(P=st.integers(2, 10), mmul=st.integers(1, 3),
+       tc=st.floats(0.0, 0.5))
+def test_retime_preserves_validity_and_order(P, mmul, tc):
+    sched = S.chronos(P, P * 2 * mmul, 2)
+    rt = retime_with_comm(sched, tc)
+    rt.check(tc=tc)
+    # per-stage order preserved
+    for s in range(P):
+        a = [t.key() for t in sched.stage_tasks(s)]
+        b = [t.key() for t in rt.stage_tasks(s)]
+        assert a == b
+    # comm can only slow things down relative to the compacted (tc=0)
+    # retiming (retime also removes class-alignment slack, so compare
+    # against the compacted baseline rather than the constructed one)
+    rt0 = retime_with_comm(sched, 0.0)
+    assert rt.total_time() >= rt0.total_time() - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(P=st.integers(3, 10))
+def test_chronos_beats_1f1b_memory_uniformly(P):
+    m = 4 * P
+    ch = S.chronos(P, m, 2).peak_activation()
+    f1 = S.onef1b(P, m).peak_activation()
+    il = S.interleaved(P, m, 2).peak_activation()
+    assert ch < f1 < il
+
+
+# ---------------------------------------------------------------------------
+# Chronos-Offload model (§5.1)
+# ---------------------------------------------------------------------------
+
+def test_offload_conditions_scale_with_p_and_seq():
+    from repro.configs import get_config
+    import dataclasses
+    cfg = dataclasses.replace(get_config("llama70b-paper"), num_layers=16)
+    base = AN.offload_timing(cfg, seq_len=4096, microbatch=2, pp=4, tp=8)
+    more_p = AN.offload_timing(cfg, seq_len=4096, microbatch=2, pp=8, tp=8)
+    more_s = AN.offload_timing(cfg, seq_len=8192, microbatch=2, pp=4, tp=8)
+    assert more_p.overlap_ratio >= base.overlap_ratio
+    assert more_s.overlap_ratio >= base.overlap_ratio
+    # Fig. 14 shape: doubling P doubles the ratio (ceil terms aside)
+    assert more_p.overlap_ratio / max(base.overlap_ratio, 1e-9) > 1.7 \
+        or more_p.overlap_ratio == 1.0
+
+
+def test_offload_bubble_exists_in_chronos_not_interleaved():
+    """Chronos-Pipe's cooldown bubbles (the Offload windows) are a
+    structural property; interleaved-1F1B's cooldown is tight."""
+    ch = S.chronos(8, 32, 2)
+    gaps = ch.warmup_cooldown_bubbles(stage=7)
+    assert sum(b - a for a, b in gaps) > 0
