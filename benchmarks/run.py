@@ -1,22 +1,45 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.
+
+``python benchmarks/run.py --check`` runs the fast tier-1 test suite
+instead (slow marker deselected) — the exact invocation scripts/ci.sh
+uses, so the bench harness and CI share one entry path.
+"""
+import os
+import subprocess
 import sys
 
-sys.path.insert(0, "/root/repo")
-sys.path.insert(0, "/root/repo/src")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def run_tier1(extra_args=()) -> int:
+    """Fast tier-1 suite: collect everything, deselect @slow."""
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.call(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow",
+         *extra_args], env=env, cwd=REPO)
 
 
 def main() -> None:
+    if "--check" in sys.argv:
+        extra = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(run_tier1(extra))
     from benchmarks.common import Bench
     from benchmarks import (paper_fig9_memory, paper_fig10_recomp,
                             paper_fig11_seqlen, paper_fig12_models,
                             paper_fig13_p2p, paper_fig14_offload,
                             paper_fig15_16_dse, paper_sec41_bubble,
-                            roofline_table)
+                            roofline_table, zb_schedules)
     bench = Bench()
     for mod in (paper_sec41_bubble, paper_fig9_memory, paper_fig10_recomp,
                 paper_fig11_seqlen, paper_fig12_models, paper_fig13_p2p,
-                paper_fig14_offload, paper_fig15_16_dse, roofline_table):
+                paper_fig14_offload, paper_fig15_16_dse, zb_schedules,
+                roofline_table):
         mod.run(bench)
     bench.emit()
 

@@ -1,0 +1,58 @@
+"""Split-backward (B/W) schedule family vs the fused baselines.
+
+Beyond-paper table: for P in {4, 8} at m = 4P, compare 1F1B / Chronos /
+ZB-H1 / Chronos-ZB on steady-state bubble, peak activation (units of
+m_a), and total time (units of T_fwd).  Expected shape:
+
+- ``zb_h1``      : ~1/3 of 1F1B's bubble at identical peak activation
+                   (the ZB-H1 bound (p-1)(f+b_in-w), hit exactly).
+- ``chronos_zb`` : chronos' span and chronos' peak activation, with the
+                   fused backward split so the freed grains + alignment
+                   bubbles run deferred W tasks — same bubble ratio,
+                   strictly less of it on the critical path between B
+                   tasks (weight grads move off the grad dependency
+                   chain, which is what lets DP overlap / offload eat
+                   the W slots).
+"""
+from __future__ import annotations
+
+from repro.core import analysis as AN
+from repro.core import schedules as S
+
+PP_LIST = (4, 8)
+
+
+def rows():
+    out = {}
+    for P in PP_LIST:
+        m = 4 * P
+        scheds = {
+            "1f1b": S.onef1b(P, m),
+            "chronos": S.chronos(P, m, 2),
+            "zb_h1": S.zb_h1(P, m),
+            "chronos_zb": S.chronos_zb(P, m, 2),
+        }
+        for name, sc in scheds.items():
+            out[(P, name)] = {
+                "bubble": sc.bubble_ratio(),
+                "peak_act": sc.peak_activation(),
+                "time_rel": sc.total_time_rel(),
+            }
+    return out
+
+
+def run(bench):
+    r = rows()
+    for (P, name), d in sorted(r.items()):
+        bench.add(f"zb_P{P}_{name}",
+                  lambda d=d: {k: round(v, 4) for k, v in d.items()})
+    for P in PP_LIST:
+        bench.add(
+            f"zb_P{P}_h1_bubble_vs_formula ((p-1)/((p-1)+3m))",
+            lambda P=P: (round(r[(P, 'zb_h1')]['bubble'], 4),
+                         round(AN.zb_h1_bubble(P, 4 * P), 4)))
+        bench.add(
+            f"zb_P{P}_h1_vs_1f1b_bubble_ratio (paper ~1/3)",
+            lambda P=P: round(r[(P, 'zb_h1')]['bubble']
+                              / r[(P, '1f1b')]['bubble'], 3))
+    return r

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Fast tier-1 CI entry.
+#
+# 1. Best-effort install of the package + `test` extra (hypothesis).
+#    The pinned accelerator container has no network: the suite then
+#    falls back to tests/helpers/hypcompat.py's degraded deterministic
+#    sampling, so collection never breaks on the missing dev dep.
+# 2. Run the fast suite (slow marker deselected) through the same entry
+#    the benchmark harness uses (benchmarks/run.py --check).
+#
+# Full suite (all @slow cases, ~10+ min on CPU):
+#   RUN_SLOW=1 PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -e ".[test]" >/dev/null 2>&1 \
+    || echo "ci.sh: pip install skipped (offline?) — using installed deps"
+
+exec python benchmarks/run.py --check "$@"

@@ -53,6 +53,24 @@ def onef1b_bubble(P: int, m: int, tc: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# split-backward (zero-bubble family) closed forms
+# ---------------------------------------------------------------------------
+
+def zb_h1_bubble(P: int, m: int, f: float = 1.0, b_in: float = 1.0,
+                 w: float = 1.0) -> float:
+    """Ideal ZB-H1 steady-state bubble ratio at zero P2P cost (Qi et al.,
+    *Zero Bubble Pipeline Parallelism*): per-stage idle is
+    ``(P-1)(f + b_in - w)`` grains against ``(f + b_in + w) m`` of work.
+    With the repo's grain convention (f = b_in = w = 1, i.e. the fused
+    2-grain backward split in half) this is one third of 1F1B's
+    ``3 (P-1)`` idle.  The constructed :func:`repro.core.schedules.zb_h1`
+    achieves this bound exactly for m >= P."""
+    idle = (P - 1) * (f + b_in - w)
+    work = (f + b_in + w) * m
+    return idle / (idle + work)
+
+
+# ---------------------------------------------------------------------------
 # byte-level memory model
 # ---------------------------------------------------------------------------
 

@@ -15,6 +15,16 @@ input payload and recomputes internals inside ``jax.vjp`` at B-task time
 chunks is a §Perf item).  Embedding / head / encoder parameters are
 replicated across stages, used only where relevant, and their gradients
 psum over the pipe axis — this also gives tied embeddings for free.
+
+Split backward (schedules with ``W`` tasks, e.g. ``zb_h1`` /
+``chronos_zb``): the B tick runs ``jax.vjp`` w.r.t. the *boundary
+payload only* — producing the input gradient that unblocks the upstream
+stage — and stashes its residuals (boundary payload + upstream gradient)
+into a W-stash ring sized by the task-table compiler.  The matching W
+tick re-linearizes w.r.t. the *parameters only* from the stash and
+accumulates weight gradients.  Both halves linearize the identical
+forward function at the identical primal point, so split gradients match
+the fused path to float determinism.
 """
 from __future__ import annotations
 
@@ -29,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import jax_compat
 from repro.configs.base import ModelConfig
 from repro.core.schedules import get_schedule
 from repro.core.tasktable import (BWD_FIRST, BWD_LAST, BWD_MID, FWD_FIRST,
@@ -158,8 +169,11 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
     layout = StageLayout.build(cfg, P, v)
     sched = get_schedule(schedule, P, m, **({"v": v} if schedule in
                                             ("chronos", "interleaved",
-                                             "chronos_zero2") else {}),
+                                             "chronos_zero2", "chronos_zb")
+                                            else {}),
                          **sched_kw)
+    if schedule in ("1f1b", "zb_h1"):
+        assert v == 1, f"{schedule} is a v=1 schedule, got v={v}"
     table = build_task_table(sched)
     prefix = cfg.vision.num_patches if cfg.vision is not None else 0
     enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
@@ -170,14 +184,8 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
 
 def _to_varying(a, axis: str):
     """pcast to varying over ``axis`` if inside a manual shard_map and not
-    already varying; no-op otherwise."""
-    try:
-        t = jax.typeof(a)
-        if axis in getattr(t, "vma", ()):
-            return a
-        return jax.lax.pcast(a, axis, to="varying")
-    except Exception:
-        return a
+    already varying; no-op otherwise (incl. JAX without vma tracking)."""
+    return jax_compat.to_varying(a, axis)
 
 
 def _zero_payload(spec: PipelineSpec, dtype):
@@ -260,17 +268,29 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
     tab = spec.table
     P_, v = tab.P, tab.v
     pp = spec.pp_axis
-    table_arr = jnp.asarray(tab.arrays())              # [T, P, 8]
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 9]
     act_offsets = np.zeros(v, np.int64)
     total_act = 0
     for c in range(v):
         act_offsets[c] = total_act
         total_act += tab.act_depth[c]
     act_offsets = jnp.asarray(act_offsets)
+    split = tab.has_w                     # split-backward (B/W) schedule
+    w_offsets = np.zeros(v, np.int64)
+    total_wstash = 0
+    if split:
+        for c in range(v):
+            w_offsets[c] = total_wstash
+            total_wstash += tab.wstash_depth[c]
+    w_offsets = jnp.asarray(w_offsets)
     flags_np = spec.layout.flags(cfg)
 
-    def spmd(params, batch):
-        s_idx = jax.lax.axis_index(pp)
+    def spmd(stage_iota, params, batch):
+        # stage index from a pp-sharded iota (local shape [1]) rather
+        # than lax.axis_index: the latter lowers to a PartitionId op
+        # that older XLA SPMD partitioners reject under partial-auto
+        # shard_map (the dp/tp axes stay auto).
+        s_idx = stage_iota[0]
         blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
         # ^ in_specs P("pp") leaves local shape [1, v, M, ...] -> strip
         flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
@@ -278,12 +298,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
         dtype = jnp.dtype(cfg.compute_dtype)
 
         def to_varying(a):
-            try:
-                if pp in jax.typeof(a).vma:
-                    return a
-            except AttributeError:
-                pass
-            return jax.lax.pcast(a, pp, to="varying")
+            return jax_compat.to_varying(a, pp)
 
         def vary(x):
             return jax.tree.map(to_varying, x)
@@ -316,7 +331,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             return jax.tree.map(one, t)
 
         def carry_init():
-            return {
+            carry = {
                 "fq": pin_buf(jax.tree.map(
                     lambda a: jnp.zeros((tab.fq_depth,) + a.shape, a.dtype),
                     zero_pay)),
@@ -331,12 +346,22 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 "loss": jnp.zeros((), jnp.float32),
                 "nloss": jnp.zeros((), jnp.float32),
             }
+            if split:
+                # W-stash rings: boundary payload + upstream gradient,
+                # resident from the B tick until the matching W tick
+                carry["wx"] = pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_wstash,) + a.shape, a.dtype),
+                    zero_pay))
+                carry["wdy"] = pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_wstash,) + a.shape, a.dtype),
+                    zero_pay))
+            return carry
 
         def get_mb(arr, mb):
             return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
 
         def tick(carry, t):
-            row = table_arr[t, s_idx]                  # [8]
+            row = table_arr[t, s_idx]                  # [9]
             op, c, mb = row[0], row[1], row[2]
             src, aslot, snd = row[3], row[4], row[5]
             rcf, rcb = row[6], row[7]
@@ -429,9 +454,88 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 carry = _add_block_grads(carry, gb_c)
                 return _add_shared_grads(carry, gs), dx
 
-            carry, out = jax.lax.switch(
-                op, [br_idle, br_fwd_mid, br_fwd_first, br_fwd_last,
-                     br_bwd_mid, br_bwd_first, br_bwd_last], carry)
+            branches = [br_idle, br_fwd_mid, br_fwd_first, br_fwd_last]
+            if not split:
+                branches += [br_bwd_mid, br_bwd_first, br_bwd_last]
+            else:
+                # ---- split backward: B = input grad + stash, W = weight
+                # grad from stash.  Both halves linearize the same forward
+                # at the same primal point as the fused path.
+                gw = w_offsets[c] + jnp.maximum(row[8], 0)
+
+                def stash_rd(buf):
+                    return jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, gw, 0, False), buf)
+
+                def upd_stash(buf, p):
+                    return jax.tree.map(
+                        lambda bb, q: jax.lax.dynamic_update_index_in_dim(
+                            bb, q, gw, 0), buf, p)
+
+                def br_bwdi_mid(carry):
+                    dy = vary(dict(dy_in))
+                    _, vjp = jax.vjp(
+                        lambda pay: fwd_fn(blocks_c, shared, pay, flags_c),
+                        vary(act_in))
+                    (dx,) = vjp(dy)
+                    carry = dict(carry, wx=upd_stash(carry["wx"],
+                                                     vary(act_in)),
+                                 wdy=upd_stash(carry["wdy"], dy))
+                    return carry, dx
+
+                def br_bwdi_first(carry):
+                    # stage-0 shallow chunk: the block input is the token
+                    # batch (re-fetched at W time), so the B tick only
+                    # stashes the upstream gradient.
+                    dy = vary(dict(dy_in))
+                    return dict(carry, wdy=upd_stash(carry["wdy"], dy)), \
+                        zero_pay
+
+                def br_bwdi_last(carry):
+                    # loss head: the W seed is the constant 1.0, so only
+                    # the boundary payload needs stashing.
+                    _, vjp = jax.vjp(
+                        lambda pay: last_fn(blocks_c, shared, pay, labels,
+                                            mask, flags_c),
+                        vary(act_in))
+                    (dx,) = vjp(to_varying(jnp.ones((), jnp.float32)))
+                    return dict(carry, wx=upd_stash(carry["wx"],
+                                                    vary(act_in))), dx
+
+                def br_w_mid(carry):
+                    pay = vary(stash_rd(carry["wx"]))
+                    dy = vary(stash_rd(carry["wdy"]))
+                    _, vjp = jax.vjp(
+                        lambda bp: fwd_fn(bp, shared, pay, flags_c),
+                        vary(blocks_c))
+                    (gb_c,) = vjp(dy)
+                    return _add_block_grads(carry, gb_c), zero_pay
+
+                def br_w_first(carry):
+                    dy = vary(stash_rd(carry["wdy"]))
+                    _, vjp = jax.vjp(
+                        lambda bp, sp: first_fn(bp, sp, tok_in, patch,
+                                                frames, flags_c),
+                        vary(blocks_c), vary(shared))
+                    gb_c, gs = vjp(dy)
+                    carry = _add_block_grads(carry, gb_c)
+                    return _add_shared_grads(carry, gs), zero_pay
+
+                def br_w_last(carry):
+                    pay = vary(stash_rd(carry["wx"]))
+                    _, vjp = jax.vjp(
+                        lambda bp, sp: last_fn(bp, sp, pay, labels, mask,
+                                               flags_c),
+                        vary(blocks_c), vary(shared))
+                    gb_c, gs = vjp(to_varying(jnp.ones((), jnp.float32)))
+                    carry = _add_block_grads(carry, gb_c)
+                    return _add_shared_grads(carry, gs), zero_pay
+
+                branches += [br_bwdi_mid, br_bwdi_first, br_bwdi_last,
+                             br_w_mid, br_w_first, br_w_last]
+
+            carry, out = jax.lax.switch(op, branches, carry)
 
             # ---- route ----
             def sel(code):
@@ -468,15 +572,10 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                          fq=pin_buf(q_write(carry["fq"], rcf, arrive_f)),
                          bq=pin_buf(q_write(carry["bq"], rcb, arrive_b)),
                          act=pin_buf(carry["act"]))
+            if split:
+                carry = dict(carry, wx=pin_buf(carry["wx"]),
+                             wdy=pin_buf(carry["wdy"]))
             return carry, None
-
-        def to_varying(a):
-            try:
-                if pp in jax.typeof(a).vma:
-                    return a
-            except AttributeError:
-                pass
-            return jax.lax.pcast(a, pp, to="varying")
 
         init = jax.tree.map(to_varying, carry_init())
         carry, _ = jax.lax.scan(tick, init, jnp.arange(tab.T))
@@ -491,6 +590,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
 
     def call(params, batch):
         in_specs = (
+            P(pp),
             {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
                         params["blocks"]],
              **{k: jax.tree.map(lambda _: P(), params[k])
@@ -504,9 +604,19 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 for k in params if k != "blocks"}},
             {"loss": P(), "n_microbatches": P()},
         )
-        return jax.shard_map(spmd, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names={pp})(
-                                 params, batch)
+        def spmd_entry(stage_iota, params, batch):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():      # see no_shard_hints docstring
+                return spmd(stage_iota, params, batch)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes={pp})(stage_iota, params,
+                                                      batch)
     return call
 
 

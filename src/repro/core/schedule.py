@@ -19,6 +19,23 @@ Dependencies:
 For tasks with a recompute prefix (dur = recomp + b), only the *backward
 sub-block* (the last ``b`` grains) needs the upstream gradient; the
 recompute prefix depends only on the stored boundary checkpoint.
+
+Split backward (zero-bubble family, ZB-H1 / OptPipe lineage): a schedule
+may carry a third task kind ``W`` (weight-gradient).  There the ``B``
+task is the *input-gradient* step only (it unblocks the upstream stage
+and releases the block's activation), while ``W(i,c,s)`` computes the
+weight gradients later from stashed residuals:
+
+    W(i,c,s)  <- B(i,c,s)              (same stage, any later slot)
+
+``W`` has no cross-stage edges and sends nothing.  Activation accounting
+is unchanged — the activation is released at the end of ``B``, not ``W``
+(the W residual stash is the boundary payload + upstream gradient, whose
+ring depth the task-table compiler sizes separately).
+
+All constructed start times are exact multiples of half a grain; the
+module-level :data:`HALF`/:func:`to_half` helpers let schedule builders
+do occupancy arithmetic in integer half-grains with no float slop.
 """
 from __future__ import annotations
 
@@ -26,12 +43,31 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
-F, B = "F", "B"
+F, B, W = "F", "B", "W"
+
+HALF = 2          # integer half-grains per grain
+
+
+def to_half(t: float) -> int:
+    """Exact conversion of a grain time to integer half-grains.
+
+    Raises if ``t`` is not (numerically) on the half-grain lattice —
+    schedule builders are required to stay on it, which is what lets
+    occupancy checks use exact integer comparisons instead of 1e-9 slop.
+    """
+    h = round(t * HALF)
+    if abs(h - t * HALF) > 1e-6:
+        raise ValueError(f"time {t} is not a multiple of half a grain")
+    return h
+
+
+def from_half(h: int) -> float:
+    return h / HALF
 
 
 @dataclass
 class Task:
-    kind: str                    # "F" | "B"
+    kind: str                    # "F" | "B" | "W"
     mb: int
     chunk: int
     stage: int
@@ -70,6 +106,14 @@ class Schedule:
     # residuals, ~0 = checkpoint-only because the chunk is recomputed)
     stored_frac: Dict[int, float] = dataclasses.field(default_factory=dict)
     meta: Dict = dataclasses.field(default_factory=dict)
+    # weight-gradient duration (split-backward schedules only).  When the
+    # schedule has W tasks, ``b`` is the input-gradient duration and
+    # ``b + w`` must equal the fused backward cost.
+    w: float = 0.0
+
+    @property
+    def has_w(self) -> bool:
+        return any(t.kind == W for t in self.tasks)
 
     # -- indexing ---------------------------------------------------------
     def by_key(self) -> Dict[Tuple, Task]:
@@ -83,8 +127,9 @@ class Schedule:
     def check(self, tc: float = 0.0) -> None:
         idx = self.by_key()
         P, v, m = self.P, self.v, self.m
-        assert len(self.tasks) == 2 * P * v * m, \
-            f"expected {2*P*v*m} tasks, got {len(self.tasks)}"
+        kinds = 3 if self.has_w else 2
+        assert len(self.tasks) == kinds * P * v * m, \
+            f"expected {kinds*P*v*m} tasks, got {len(self.tasks)}"
         for t in self.tasks:
             deps: List[Tuple[float, str]] = []
             if t.kind == F:
@@ -94,6 +139,9 @@ class Schedule:
                 elif t.chunk > 0:
                     deps.append((idx[(F, t.mb, t.chunk - 1, P - 1)].end + tc,
                                  "fwd chunk hop"))
+                ok_at = t.start
+            elif t.kind == W:
+                deps.append((idx[(B, t.mb, t.chunk, t.stage)].end, "own bwd"))
                 ok_at = t.start
             else:
                 deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd"))
@@ -150,7 +198,12 @@ class Schedule:
         the end of its B.  Recomputed chunks additionally materialize
         their own block activation transiently during the B task; the
         paper's figures ignore this transient (Fig. 15 caption) — pass
-        ``count_transient=False`` for paper-comparable numbers."""
+        ``count_transient=False`` for paper-comparable numbers.
+
+        Split-backward schedules: the activation is released at the end
+        of the input-gradient ``B`` task; deferred ``W`` tasks hold no
+        block activation (their residual stash is boundary-payload
+        sized and accounted by the task-table compiler, not here)."""
         idx = self.by_key()
         unit = 1.0 / (self.v * self.P)
         peaks = []
@@ -220,6 +273,9 @@ def retime_with_comm(sched: Schedule, tc: float,
             elif t.chunk > 0:
                 es = done[(F, t.mb, t.chunk - 1, P - 1)] + tc
             return es, es
+        if t.kind == W:
+            es = done[(B, t.mb, t.chunk, t.stage)]
+            return es, es
         es = done[(F, t.mb, t.chunk, t.stage)]
         if t.stage < P - 1:
             g = done[(B, t.mb, t.chunk, t.stage + 1)] + tc
@@ -235,7 +291,7 @@ def retime_with_comm(sched: Schedule, tc: float,
         if t.kind == F:
             if t.stage < P - 1 or t.chunk < v - 1:
                 n += 1                      # sends activation onward
-        else:
+        elif t.kind == B:
             if t.stage > 0 or t.chunk > 0:
                 n += 1                      # sends gradient onward
         return n
@@ -275,6 +331,8 @@ def _dep_keys(t: Task, P: int, v: int):
         if t.chunk > 0:
             return [(F, t.mb, t.chunk - 1, P - 1)]
         return []
+    if t.kind == W:
+        return [(B, t.mb, t.chunk, t.stage)]
     deps = [(F, t.mb, t.chunk, t.stage)]
     if t.stage < P - 1:
         deps.append((B, t.mb, t.chunk, t.stage + 1))

@@ -19,21 +19,44 @@ paper's constructions:
                      greedy periodic placement for other configs.
 - ``chronos_zero2`` : §4.3 grouped chunk re-launches for micro-batch-
                      granularity DP collectives.
+
+Split-backward (zero-bubble) family — the backward is split into a
+1-grain input-gradient task ``B`` and a 1-grain deferred weight-gradient
+task ``W`` (B + W = the fused 2-grain backward):
+
+- ``zb_h1``     : the handcrafted ZB-H1 schedule (Qi et al., *Zero
+                  Bubble Pipeline Parallelism* / *Pipeline Parallelism
+                  with Controllable Memory*): 1F1B warm-up counts (same
+                  peak activation), W tasks fill the cool-down bubbles.
+- ``chronos_zb``: Chronos-Pipe with split backward — the periodic §4.1
+                  slot classes are kept, each backward slot shrinks to
+                  its input-gradient grain, and the freed grains plus
+                  the warm-up/cool-down alignment bubbles are filled
+                  with deferred W tasks.
+
+All time arithmetic runs on an exact integer half-grain lattice
+(:data:`repro.core.schedule.HALF`); there is deliberately no float
+epsilon anywhere in alignment or occupancy checks, so ``Schedule.check``
+cannot flake on accumulated drift at large ``m``.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional
 
-from repro.core.schedule import B, F, Schedule, Task, retime_with_comm
+from repro.core.schedule import (B, F, HALF, Schedule, Task, W, from_half,
+                                 retime_with_comm, to_half)
 
 FWD, BWD = 1.0, 2.0
+BWD_IN, BWD_W = 1.0, 1.0     # split backward: input-grad + weight-grad
 
 
 def _align(t: float, cls: int, cyc: int) -> float:
-    k = math.ceil((t - cls) / cyc - 1e-9)
-    return cls + k * cyc
+    """Smallest time >= t in periodic slot class ``cls`` (mod ``cyc``),
+    computed exactly in integer half-grains (no 1e-9 slop)."""
+    th, ch, cyh = to_half(t), cls * HALF, cyc * HALF
+    k = -((ch - th) // cyh)          # ceil((th - ch) / cyh)
+    return from_half(ch + k * cyh)
 
 
 # ---------------------------------------------------------------------------
@@ -196,39 +219,44 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
     """Greedy periodic placement: place microbatch-0 tasks in dependency
     order onto per-stage periodic occupancy masks (period = steady-state
     cycle); all other microbatches are cycle-shifted copies.  If perfect
-    packing fails the cycle is inflated (honest steady-state bubble)."""
-    rext = rho * FWD
-    base_cyc = 3 * v + recomp_chunks * rext
+    packing fails the cycle is inflated (honest steady-state bubble).
 
-    def try_build(cyc: float, delays=()) -> Optional[Schedule]:
+    All occupancy arithmetic is exact integer half-grains: the recompute
+    extension ``rho * FWD`` is quantized onto the half-grain lattice, and
+    interval overlap tests are integer comparisons (no epsilon)."""
+    rext = round(rho * FWD * HALF) / HALF
+    base_cyc_h = 3 * v * HALF + recomp_chunks * to_half(rext)
+
+    def try_build(cyc_h: int, delays=()) -> Optional[Schedule]:
         """delays[c-1]: extra launch delay (grains) for chunk c's first F
-        — the paper's Appendix-A round delay, generalized."""
-        occ: List[List] = [[] for _ in range(P)]   # intervals mod cyc
+        — the paper's Appendix-A round delay, generalized.  ``cyc_h`` is
+        the steady-state cycle in half-grains."""
+        occ: List[List] = [[] for _ in range(P)]   # int intervals mod cyc
 
-        def fits(s, t0, dur):
-            a0 = t0 % cyc
-            segs = [(a0, min(a0 + dur, cyc))]
-            if a0 + dur > cyc:
-                segs.append((0.0, a0 + dur - cyc))
+        def fits(s, t0h, durh):
+            a0 = t0h % cyc_h
+            segs = [(a0, min(a0 + durh, cyc_h))]
+            if a0 + durh > cyc_h:
+                segs.append((0, a0 + durh - cyc_h))
             for (x0, x1) in segs:
                 for (y0, y1) in occ[s]:
-                    if x0 < y1 - 1e-9 and y0 < x1 - 1e-9:
+                    if x0 < y1 and y0 < x1:
                         return False
             return True
 
-        def claim(s, t0, dur):
-            a0 = t0 % cyc
-            occ[s].append((a0, min(a0 + dur, cyc)))
-            if a0 + dur > cyc:
-                occ[s].append((0.0, a0 + dur - cyc))
+        def claim(s, t0h, durh):
+            a0 = t0h % cyc_h
+            occ[s].append((a0, min(a0 + durh, cyc_h)))
+            if a0 + durh > cyc_h:
+                occ[s].append((0, a0 + durh - cyc_h))
 
-        def place(s, earliest, dur, horizon=6):
-            t = earliest
-            lim = earliest + horizon * cyc
-            while t < lim:
-                if fits(s, t, dur):
-                    return t
-                t += 0.5  # half-grain granularity
+        def place(s, earliest_h, durh, horizon=6):
+            th = earliest_h
+            lim = earliest_h + horizon * cyc_h
+            while th < lim:
+                if fits(s, th, durh):
+                    return th
+                th += 1  # half-grain granularity
             return None
 
         idx: Dict = {}
@@ -236,40 +264,42 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
         for c in range(v):
             for s in range(P):
                 if c == 0 and s == 0:
-                    dep = 0.0
+                    dep = 0
                 elif s == 0:
-                    dep = idx[(F, 0, c - 1, P - 1)].end
+                    dep = to_half(idx[(F, 0, c - 1, P - 1)].end)
                     if c - 1 < len(delays):
-                        dep += delays[c - 1]
+                        dep += delays[c - 1] * HALF
                 else:
-                    dep = idx[(F, 0, c, s - 1)].end
-                t = place(s, dep, FWD)
-                if t is None:
+                    dep = to_half(idx[(F, 0, c, s - 1)].end)
+                th = place(s, dep, to_half(FWD))
+                if th is None:
                     return None
-                tk = Task(F, 0, c, s, t, FWD)
+                tk = Task(F, 0, c, s, from_half(th), FWD)
                 idx[tk.key()] = tk
                 t0_tasks.append(tk)
-                claim(s, t, FWD)
+                claim(s, th, to_half(FWD))
         for c in reversed(range(v)):
             rec = rext if c < recomp_chunks else 0.0
             dur = BWD + rec
+            durh, rech = to_half(dur), to_half(rec)
             for s in reversed(range(P)):
                 if c == v - 1 and s == P - 1:
-                    dep = idx[(F, 0, c, P - 1)].end
+                    dep = to_half(idx[(F, 0, c, P - 1)].end)
                 elif s == P - 1:
-                    dep = idx[(B, 0, c + 1, 0)].end
+                    dep = to_half(idx[(B, 0, c + 1, 0)].end)
                 else:
-                    dep = idx[(B, 0, c, s + 1)].end
+                    dep = to_half(idx[(B, 0, c, s + 1)].end)
                 # recompute prefix may start before the gradient arrives
-                t = place(s, dep - rec, dur)
-                if t is None or t + rec < dep - 1e-9:
-                    t = place(s, dep, dur)
-                if t is None:
+                th = place(s, dep - rech, durh)
+                if th is None or th + rech < dep:
+                    th = place(s, dep, durh)
+                if th is None:
                     return None
-                tk = Task(B, 0, c, s, t, dur, recomp=rec)
+                tk = Task(B, 0, c, s, from_half(th), dur, recomp=rec)
                 idx[tk.key()] = tk
                 t0_tasks.append(tk)
-                claim(s, t, dur)
+                claim(s, th, durh)
+        cyc = from_half(cyc_h)
         tasks = []
         for i in range(m):
             for tk in t0_tasks:
@@ -285,19 +315,19 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
         return sched
 
     import itertools
-    cyc = base_cyc
+    cyc_h = base_cyc_h
     for _ in range(8):
         # prefer minimal launch delay at the nominal cycle before inflating
         # (the Appendix-A adjustment "does not impact the critical path").
-        cands = sorted(itertools.product(range(0, 2 * int(base_cyc) + 1),
+        cands = sorted(itertools.product(range(0, base_cyc_h + 1),
                                          repeat=max(v - 1, 0)),
                        key=lambda d: sum(d))
         for delays in cands:
-            out = try_build(cyc, delays)
+            out = try_build(cyc_h, delays)
             if out is not None:
                 out.meta["delays"] = delays
                 return out
-        cyc += 0.5
+        cyc_h += 1                       # inflate by half a grain
     raise RuntimeError(f"greedy chronos failed P={P} v={v} rho={rho}")
 
 
@@ -346,6 +376,106 @@ def chronos_zero2(P: int, m: int, v: int = 2, group: int = 2) -> Schedule:
     return sched
 
 
+# ---------------------------------------------------------------------------
+# split-backward (zero-bubble) family
+# ---------------------------------------------------------------------------
+
+def zb_h1(P: int, m: int) -> Schedule:
+    """ZB-H1 handcrafted split-backward schedule (Qi et al., *Zero Bubble
+    Pipeline Parallelism*; the memory-controlled variant of *Pipeline
+    Parallelism with Controllable Memory*).
+
+    The fused 2-grain backward splits into a 1-grain input-gradient ``B``
+    (unblocks the upstream stage, releases the activation) and a 1-grain
+    deferred weight-gradient ``W``.  Warm-up forward counts match 1F1B,
+    so peak activation is <= 1F1B's; in the cool-down each stage fills
+    its former bubble with pending W tasks, shrinking the bubble from
+    1F1B's (P-1)(f+b) grains toward (P-1)(f + b_in - w).
+    """
+    tasks = []
+    for s in range(P):
+        warm = min(P - s, m)
+        order = [(F, i) for i in range(warm)]
+        nf, nb, nw = warm, 0, 0
+        while nb < m:
+            order.append((B, nb)); nb += 1
+            if nf < m:
+                order.append((F, nf)); nf += 1
+            elif nw < nb:
+                order.append((W, nw)); nw += 1
+        while nw < m:
+            order.append((W, nw)); nw += 1
+        t = 0.0
+        for kind, i in order:
+            dur = FWD if kind == F else (BWD_IN if kind == B else BWD_W)
+            tasks.append(Task(kind, i, 0, s, t, dur))
+            t += dur
+    sched = Schedule("zb-h1", P, 1, m, FWD, BWD_IN, tasks, w=BWD_W)
+    sched = retime_with_comm(sched, 0.0)
+    sched.check()
+    return sched
+
+
+def chronos_zb(P: int, m: int, v: int = 2) -> Schedule:
+    """Chronos-Pipe with split backward (beyond-paper hybrid).
+
+    Keeps the §4.1 periodic slot classes — so temporal locality and the
+    chronos peak-activation profile are untouched — but every fused
+    2-grain backward shrinks to its 1-grain input-gradient ``B`` at the
+    same slot, and the freed grains plus the warm-up/cool-down alignment
+    bubbles absorb the deferred weight-gradient ``W`` tasks (each placed
+    at the earliest idle slot at/after its own B's end).  Because every
+    shrunk B frees exactly the grain a W needs, earliest-fit never
+    extends the span: total time == ``chronos`` with strictly more of it
+    spent on useful compute.
+    """
+    base = chronos(P, m, v)
+    bih = to_half(BWD_IN)
+    wdh = to_half(BWD_W)
+    tasks: List[Task] = []
+    for s in range(P):
+        sts = base.stage_tasks(s)
+        occ: List[tuple] = []            # occupied [h0, h1) half-grains
+        pend: List[tuple] = []           # (B end half, mb, chunk)
+        for t in sts:
+            h0 = to_half(t.start)
+            if t.kind == B:
+                tasks.append(dataclasses.replace(t, dur=BWD_IN))
+                occ.append((h0, h0 + bih))
+                pend.append((h0 + bih, t.mb, t.chunk))
+            else:
+                tasks.append(t)
+                occ.append((h0, h0 + to_half(t.dur)))
+        occ.sort()
+        # merged free gaps; the timeline is open-ended past the last task
+        gaps: List[List[int]] = []
+        cur = 0
+        for (a, b_) in occ:
+            if a > cur:
+                gaps.append([cur, a])
+            cur = max(cur, b_)
+        gaps.append([cur, None])         # open tail
+        pend.sort()
+        for (ready, mb, c) in pend:
+            for g in gaps:
+                hi = g[1]
+                lo = max(g[0], ready)
+                if hi is not None and hi - lo < wdh:
+                    continue
+                tasks.append(Task(W, mb, c, s, from_half(lo), BWD_W))
+                pos = gaps.index(g)
+                g[1] = lo                # left remnant [g0, lo)
+                if hi is None or hi - (lo + wdh) > 0:
+                    gaps.insert(pos + 1, [lo + wdh, hi])
+                if g[1] - g[0] <= 0:
+                    gaps.remove(g)
+                break
+    sched = Schedule(f"chronos-zb(v={v})", P, v, m, FWD, BWD_IN, tasks,
+                     w=BWD_W, meta=dict(base.meta, split_backward=True))
+    sched.check()
+    return sched
+
+
 REGISTRY = {
     "gpipe": gpipe,
     "1f1b": onef1b,
@@ -353,8 +483,20 @@ REGISTRY = {
     "chronos": chronos,
     "chronos_recomp": chronos_recomp,
     "chronos_zero2": chronos_zero2,
+    "zb_h1": zb_h1,
+    "chronos_zb": chronos_zb,
 }
 
 
 def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
+    """Build a validated schedule from :data:`REGISTRY`.
+
+    Fused-backward generators: ``gpipe``, ``1f1b`` (``recomp=``),
+    ``interleaved`` (``v=``), ``chronos`` (``v=``), ``chronos_recomp``
+    (``v=, rho=, recomp_chunks=``), ``chronos_zero2`` (``v=, group=``).
+    Split-backward (B/W) generators: ``zb_h1`` (v=1) and ``chronos_zb``
+    (``v=``) — their schedules carry the third task kind ``W`` and set
+    ``Schedule.w``; the task-table compiler and SPMD runtime switch to
+    the input-grad/weight-grad split automatically.
+    """
     return REGISTRY[name](P, m, **kw)

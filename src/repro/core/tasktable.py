@@ -15,9 +15,18 @@ shift, backward shift, chunk hops).  The table compiler:
    transfer has a static slot.
 
 Op codes: 0 idle | 1 fwd-mid | 2 fwd-first | 3 fwd-last (turnaround) |
-          4 bwd-mid | 5 bwd-first | 6 bwd-last
+          4 bwd-mid | 5 bwd-first | 6 bwd-last |
+          7 wgrad-mid | 8 wgrad-first | 9 wgrad-last
 Send codes: 0 none | 1 fwd-shift | 2 hop F (P-1 -> 0) |
             3 bwd-shift | 4 hop B (0 -> P-1)
+
+Split-backward schedules (those carrying ``W`` tasks) compile the bwd
+op codes as *input-gradient only* steps: the B tick computes dx, sends
+it upstream, and stashes its residuals (boundary payload + upstream
+gradient) into a W-stash ring; the matching wgrad tick (op 7-9) reads
+the stash and accumulates the weight gradients.  ``wstash_depth`` sizes
+that ring per chunk exactly like ``act_depth`` sizes the activation
+ring — from the schedule's max B->W in-flight count.
 """
 from __future__ import annotations
 
@@ -27,9 +36,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.schedule import B, F, Schedule, _dep_keys
+from repro.core.schedule import B, F, Schedule, W, _dep_keys
 
-IDLE, FWD_MID, FWD_FIRST, FWD_LAST, BWD_MID, BWD_FIRST, BWD_LAST = range(7)
+(IDLE, FWD_MID, FWD_FIRST, FWD_LAST, BWD_MID, BWD_FIRST, BWD_LAST,
+ WGT_MID, WGT_FIRST, WGT_LAST) = range(10)
 SEND_NONE, SEND_FWD, SEND_HOPF, SEND_BWD, SEND_HOPB = range(5)
 
 
@@ -47,16 +57,22 @@ class TaskTable:
     send: np.ndarray             # [T, P] send code
     recv_f: np.ndarray           # [T, P] F-queue slot written this tick (-1)
     recv_b: np.ndarray           # [T, P] B-queue slot written this tick (-1)
+    w_slot: np.ndarray           # [T, P] W-stash slot: write at B, read at W
     fq_depth: int                # F payload queue depth
     bq_depth: int
     act_depth: Dict[int, int]    # chunk -> activation slots
+    wstash_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
     name: str = ""
 
+    @property
+    def has_w(self) -> bool:
+        return bool(self.wstash_depth)
+
     def arrays(self):
-        """Stacked int32 [T, P, 8] for device transfer."""
+        """Stacked int32 [T, P, 9] for device transfer."""
         return np.stack([self.op, self.chunk, self.mb, self.src_slot,
                          self.act_slot, self.send, self.recv_f,
-                         self.recv_b], axis=-1).astype(np.int32)
+                         self.recv_b, self.w_slot], axis=-1).astype(np.int32)
 
 
 def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
@@ -66,9 +82,12 @@ def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
         if chunk == v - 1 and stage == P - 1:
             return FWD_LAST
         return FWD_MID
-    if chunk == 0 and stage == 0:
+    first, last = chunk == 0 and stage == 0, chunk == v - 1 and stage == P - 1
+    if kind == W:
+        return WGT_FIRST if first else (WGT_LAST if last else WGT_MID)
+    if first:
         return BWD_FIRST
-    if chunk == v - 1 and stage == P - 1:
+    if last:
         return BWD_LAST
     return BWD_MID
 
@@ -78,6 +97,8 @@ def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
         if stage < P - 1:
             return SEND_FWD
         return SEND_HOPF if chunk < v - 1 else SEND_NONE
+    if kind == W:
+        return SEND_NONE
     if stage > 0:
         return SEND_BWD
     return SEND_HOPB if chunk > 0 else SEND_NONE
@@ -102,22 +123,31 @@ def build_task_table(sched: Schedule) -> TaskTable:
         stage_last[t.stage] = lo
     T = max(tick.values()) + 1
 
-    # ---- activation ring depths per chunk (max in-flight over stages) ----
-    act_depth: Dict[int, int] = {}
-    for c in range(v):
-        worst = 1
-        for s in range(P):
-            events = []
-            for i in range(m):
-                events.append((tick[(F, i, c, s)], 1))
-                events.append((tick[(B, i, c, s)], -1))
-            events.sort()
-            cur = peak = 0
-            for _, d in events:
-                cur += d
-                peak = max(peak, cur)
-            worst = max(worst, peak)
-        act_depth[c] = worst
+    def ring_depth(open_kind, close_kind):
+        """chunk -> max slots live between open_kind and close_kind ticks
+        (the worst in-flight count over all stages)."""
+        depth: Dict[int, int] = {}
+        for c in range(v):
+            worst = 1
+            for s in range(P):
+                events = []
+                for i in range(m):
+                    events.append((tick[(open_kind, i, c, s)], 1))
+                    events.append((tick[(close_kind, i, c, s)], -1))
+                events.sort()
+                cur = peak = 0
+                for _, d in events:
+                    cur += d
+                    peak = max(peak, cur)
+                worst = max(worst, peak)
+            depth[c] = worst
+        return depth
+
+    # activation rings live F -> B; W-stash rings (split backward:
+    # boundary payload + upstream grad residuals) live B -> W
+    act_depth = ring_depth(F, B)
+    has_w = sched.has_w
+    wstash_depth: Dict[int, int] = ring_depth(B, W) if has_w else {}
 
     # ---- payload edges & queue coloring ----
     # F payload: F(i,c,s) -> F(i,c,s+1) | F(i,c,P-1) -> F(i,c+1,0)
@@ -183,6 +213,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
     snd = np.zeros(shape, np.int32)
     rcf = -np.ones(shape, np.int32)
     rcb = -np.ones(shape, np.int32)
+    wsl = -np.ones(shape, np.int32)
 
     for t in sched.tasks:
         tt, s = tick[t.key()], t.stage
@@ -191,8 +222,11 @@ def build_task_table(sched: Schedule) -> TaskTable:
         chunk[tt, s] = t.chunk
         mbt[tt, s] = t.mb
         snd[tt, s] = _send_code(t.kind, t.chunk, s, P, v)
+        # W-stash slot (FIFO by mb): written at the B tick, read at W
+        if has_w and t.kind in (B, W):
+            wsl[tt, s] = t.mb % wstash_depth[t.chunk]
         # boundary activation slot (FIFO by mb)
-        if oc not in (FWD_FIRST, BWD_FIRST):
+        if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST):
             act[tt, s] = t.mb % act_depth[t.chunk]
         # input queue slot
         if t.kind == F and oc not in (FWD_FIRST,):
@@ -213,8 +247,9 @@ def build_task_table(sched: Schedule) -> TaskTable:
 
     return TaskTable(P=P, v=v, m=m, T=T, op=op, chunk=chunk, mb=mbt,
                      src_slot=src, act_slot=act, send=snd, recv_f=rcf,
-                     recv_b=rcb, fq_depth=fq_depth, bq_depth=bq_depth,
-                     act_depth=act_depth, name=sched.name)
+                     recv_b=rcb, w_slot=wsl, fq_depth=fq_depth,
+                     bq_depth=bq_depth, act_depth=act_depth,
+                     wstash_depth=wstash_depth, name=sched.name)
 
 
 def validate_table(tab: TaskTable) -> None:
@@ -226,11 +261,39 @@ def validate_table(tab: TaskTable) -> None:
             o = tab.op[t, s]
             if o == IDLE:
                 continue
-            kind = F if o in (FWD_MID, FWD_FIRST, FWD_LAST) else B
+            if o in (FWD_MID, FWD_FIRST, FWD_LAST):
+                kind = F
+            elif o in (WGT_MID, WGT_FIRST, WGT_LAST):
+                kind = W
+            else:
+                kind = B
             key = (kind, int(tab.mb[t, s]), int(tab.chunk[t, s]), s)
             assert key not in seen, f"duplicate {key}"
             seen.add(key)
-    assert len(seen) == 2 * P * v * m
+    kinds = 3 if tab.has_w else 2
+    assert len(seen) == kinds * P * v * m
+    # W-stash ring: the slot written at a B tick must stay live (not be
+    # overwritten by a later B) until its matching W tick reads it.
+    # mb % depth is only sound for FIFO retirement — enforce it here
+    # rather than assume it of future split-backward generators.
+    if tab.has_w:
+        for s in range(P):
+            live: Dict[Tuple[int, int], int] = {}   # (chunk, slot) -> mb
+            for t in range(tab.T):
+                o = tab.op[t, s]
+                if o in (BWD_MID, BWD_FIRST, BWD_LAST):
+                    key = (int(tab.chunk[t, s]), int(tab.w_slot[t, s]))
+                    assert key not in live, \
+                        f"stage {s} tick {t}: W-stash {key} overwritten " \
+                        f"before W of mb {live[key]} read it"
+                    live[key] = int(tab.mb[t, s])
+                elif o in (WGT_MID, WGT_FIRST, WGT_LAST):
+                    key = (int(tab.chunk[t, s]), int(tab.w_slot[t, s]))
+                    assert live.get(key) == int(tab.mb[t, s]), \
+                        f"stage {s} tick {t}: W reads stash {key} not " \
+                        f"holding its mb"
+                    del live[key]
+            assert not live, f"stage {s}: unread W-stash slots {live}"
     # queue write-before-read per slot
     for qname, rc, depth in (("F", tab.recv_f, tab.fq_depth),
                              ("B", tab.recv_b, tab.bq_depth)):

@@ -1,0 +1,71 @@
+"""Version-compatibility shims for the JAX APIs this repo straddles.
+
+The SPMD executor targets the partial-manual ``shard_map`` programming
+model.  Newer JAX (>= 0.6) exposes it as ``jax.shard_map(...,
+axis_names={...})`` with explicit varying-manual-axes (``jax.typeof(x)
+.vma`` / ``jax.lax.pcast``) and typed meshes (``jax.sharding.AxisType``).
+Older JAX (0.4.x, what the pinned toolchain ships) spells the same thing
+``jax.experimental.shard_map.shard_map(..., auto=frozenset(...))`` with
+no vma tracking at all.  Everything in this module is a thin adapter so
+the rest of the codebase is written once against the new spelling:
+
+- :func:`make_mesh` — ``jax.make_mesh`` with Auto axis types when the
+  installed JAX has typed meshes, plain otherwise.
+- :func:`shard_map` — partial-manual shard_map: manual over
+  ``manual_axes``, auto over the rest.
+- :func:`to_varying` — pcast an array to varying over an axis when vma
+  tracking exists; identity otherwise (0.4.x shard_map treats every
+  value as varying already).
+"""
+from __future__ import annotations
+
+import jax
+
+#: True when the installed JAX tracks varying-manual-axes explicitly.
+HAS_VMA = hasattr(jax.lax, "pcast") and hasattr(jax, "typeof")
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions (Auto axis types when the
+    installed version has typed meshes)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
+    """Partial-manual shard_map: manual over ``manual_axes``, auto over
+    every other mesh axis, on either JAX API generation."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes))
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)
+
+
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` where available; on older JAX the Mesh
+    object itself is the context manager."""
+    sm = getattr(jax.sharding, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh
+
+
+def to_varying(a, axis: str):
+    """pcast ``a`` to varying over ``axis`` if inside a manual shard_map
+    and not already varying; identity on JAX without vma tracking."""
+    if not HAS_VMA:
+        return a
+    try:
+        t = jax.typeof(a)
+        if axis in getattr(t, "vma", ()):
+            return a
+        return jax.lax.pcast(a, axis, to="varying")
+    except Exception:
+        return a

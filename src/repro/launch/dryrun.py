@@ -23,6 +23,7 @@ import jax  # noqa: E402
 from repro.configs import (ARCH_IDS, SHAPES, OptimizerConfig,  # noqa: E402
                            ParallelPlan, RecomputeConfig, cell_is_skipped,
                            get_config, get_shape)
+from repro.jax_compat import set_mesh  # noqa: E402
 from repro.launch.mesh import (make_production_mesh,  # noqa: E402
                                production_rules)
 from repro.launch.steps import (make_pipeline_train_step,  # noqa: E402
@@ -67,7 +68,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             else make_train_step
         step, structs, in_sh, out_sh = builder(cfg, shape, plan, ocfg,
                                                mesh, rules)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*structs)
             compiled = lowered.compile()
@@ -75,7 +76,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     else:
         steps = make_serve_steps(cfg, shape, mesh, rules)
         entry, (fn, structs, in_sh, out_sh) = next(iter(steps.items()))
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*structs)
             compiled = lowered.compile()

@@ -11,20 +11,18 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
-import jax
+from repro.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_study_mesh(pp: int, dp: int, tp: int):
     """Deeper-pipeline study meshes for §Perf (e.g. (8, 2, 16))."""
-    return jax.make_mesh((pp, dp, tp), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((pp, dp, tp), ("pod", "data", "model"))
 
 
 def production_rules(multi_pod: bool, *, serving: bool = False,

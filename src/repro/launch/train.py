@@ -36,14 +36,13 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
     checkpoint exists (crash recovery / elastic restart)."""
     cfg, shape, plan, ocfg = tc.model, tc.shape, tc.plan, tc.optimizer
     steps = steps or ocfg.total_steps
-    mesh = mesh or jax.make_mesh(
-        (jax.device_count(),), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.jax_compat import make_mesh, set_mesh
+    mesh = mesh or make_mesh((jax.device_count(),), ("data",))
     rules = rules if rules is not None else {"dp": "data", "fsdp": "data",
                                              "tp": None}
 
     lm = LM(cfg)
-    mesh_ctx = jax.sharding.set_mesh(mesh)
+    mesh_ctx = set_mesh(mesh)
     mesh_ctx.__enter__()
     with shard_env(mesh, rules):
         params, _ = lm.init(jax.random.key(tc.seed))

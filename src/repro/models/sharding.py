@@ -70,13 +70,37 @@ def shard_env(mesh, rules: Dict[str, Axes]):
     env = ShardEnv(mesh, rules)
     _STACK.append(env)
     try:
-        yield env
+        # Older JAX (no jax.sharding.set_mesh) resolves bare
+        # PartitionSpecs in with_sharding_constraint via the Mesh
+        # context manager; newer JAX gets the mesh from the specs'
+        # environment, where entering the context is unnecessary.
+        if mesh is not None and not hasattr(jax.sharding, "set_mesh"):
+            with mesh:
+                yield env
+        else:
+            yield env
     finally:
         _STACK.pop()
 
 
 def current_env() -> Optional[ShardEnv]:
     return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def no_shard_hints():
+    """Suspend ``shard()`` annotations for the enclosed trace.
+
+    Used by the pipeline executor on old JAX (0.4.x): its XLA SPMD
+    partitioner CHECK-fails on with_sharding_constraint ops inside a
+    partial-manual shard_map region, and the hints are only a placement
+    optimization — without them buffers may replicate over the auto
+    axes (correct, just less memory-tight)."""
+    _STACK.append(None)
+    try:
+        yield
+    finally:
+        _STACK.pop()
 
 
 def axis_size(mesh, phys: Axes) -> int:

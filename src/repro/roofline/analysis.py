@@ -152,6 +152,37 @@ _DEF_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(.*)$")
 _OP_RE = re.compile(r"^((?:\([^=]*?\))|(?:\S+))\s+([\w\-]+)\(")
 
 
+def _split_args(s: str):
+    """Split an HLO operand list on top-level commas only (shape dims
+    ``f32[64,64]`` and layouts ``{1,0}`` contain commas of their own)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [a.strip() for a in out if a.strip()]
+
+
+def _operand(a: str, symtab: Dict[str, str]):
+    """Resolve one operand to (name, type_str).  Newer XLA dumps inline
+    the operand type (``f32[64,64]{1,0} %x``); optimized dumps may not
+    (``%x``), in which case the module symbol table is consulted."""
+    parts = a.split()
+    name = parts[-1].lstrip("%")
+    if len(parts) > 1:
+        return name, parts[0]
+    t = symtab.get(name)
+    return name, (t.split(" ", 1)[0] if t else None)
+
+
 def analyze_hlo(hlo_text: str) -> HloStats:
     """One pass over the partitioned HLO: dot FLOPs, byte traffic, and
     collective payloads — all multiplied by enclosing loop trip counts
@@ -240,12 +271,10 @@ def analyze_hlo(hlo_text: str) -> HloStats:
                              and is_score_class(type_str) else 0.0)
                 margs = re.search(rf"{op}\(([^)]*)\)", rhs)
                 if margs:
-                    for a in margs.group(1).split(","):
-                        a = a.strip().lstrip("%")
-                        t = symtab.get(a)
-                        if t is None:
+                    for a in _split_args(margs.group(1)):
+                        _, tstr = _operand(a, symtab)
+                        if tstr is None:
                             continue
-                        tstr = t.split(" ", 1)[0]
                         if inplace and tstr.split("{")[0] == \
                                 type_str.split("{")[0]:
                             continue     # the aliased accumulator
@@ -260,10 +289,9 @@ def analyze_hlo(hlo_text: str) -> HloStats:
                 margs = re.search(r"dot\(([^)]*)\)", rhs)
                 mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
                 if margs and mcd:
-                    ops = [a.strip().lstrip("%")
-                           for a in margs.group(1).split(",")]
-                    lhs_type = symtab.get(ops[0], "")
-                    msh = _SHAPE_RE.search(lhs_type)
+                    ops = _split_args(margs.group(1))
+                    _, lhs_type = _operand(ops[0], symtab)
+                    msh = _SHAPE_RE.search(lhs_type or "")
                     if msh and msh.group(2):
                         dims = [int(d) for d in msh.group(2).split(",")]
                         csize = 1

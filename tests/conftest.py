@@ -1,0 +1,31 @@
+"""Pytest configuration: the ``slow`` marker.
+
+Tier-1 (`PYTHONPATH=src python -m pytest -q`) must stay fast on CPU, so
+tests marked ``@pytest.mark.slow`` are skipped by default.  Run them
+with ``--runslow`` (or ``RUN_SLOW=1``), or deselect them explicitly with
+``-m "not slow"`` — `scripts/ci.sh` does the latter.
+"""
+import os
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy case, excluded from the fast tier-1 pass "
+        "(enable with --runslow or RUN_SLOW=1)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow") or os.environ.get("RUN_SLOW"):
+        return
+    skip = pytest.mark.skip(reason="slow; enable with --runslow/RUN_SLOW=1")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,77 @@
+"""Graceful degradation for the optional ``hypothesis`` test dependency.
+
+When ``hypothesis`` is installed (the ``test`` extra in pyproject.toml),
+this module re-exports the real ``given`` / ``settings`` / ``st``.  When
+it is not — e.g. the pinned accelerator container, which has no network
+— a deterministic fallback runs each property test over the strategy
+edge cases plus a fixed-seed random sample.  Coverage is reduced but the
+invariants still execute, so tier-1 collection never breaks on a missing
+dev-only dependency.
+
+Only the strategy surface the test suite actually uses is implemented:
+``st.integers``, ``st.floats``, ``st.sampled_from``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # degraded fallback
+    HAVE_HYPOTHESIS = False
+    import random
+
+    class _Strategy:
+        """A draw function plus a list of edge cases tried first."""
+
+        def __init__(self, draw, edges=()):
+            self.draw = draw
+            self.edges = list(edges)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             [min_value, max_value])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             [min_value, max_value])
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda r: r.choice(seq), seq)
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801  (mirror hypothesis' lowercase class)
+        def __init__(self, max_examples=12, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._fallback_max_examples = self.max_examples
+            return fn
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            # NB: no functools.wraps — pytest would follow __wrapped__
+            # and mistake the strategy parameters for fixtures.
+            def run(*fargs, **fkw):
+                n = min(getattr(run, "_fallback_max_examples", 12), 16)
+                rng = random.Random(0)
+
+                def value(s, i):
+                    return s.edges[i] if i < len(s.edges) else s.draw(rng)
+
+                for i in range(n):
+                    if arg_strats:
+                        fn(*fargs, *(value(s, i) for s in arg_strats),
+                           **fkw)
+                    else:
+                        fn(*fargs, **fkw,
+                           **{k: value(s, i) for k, s in kw_strats.items()})
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

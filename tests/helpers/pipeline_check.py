@@ -24,6 +24,7 @@ from repro.configs.base import MoEConfig, SSMConfig  # noqa: E402
 from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
                                          make_pipeline_spec,
                                          make_train_grads_fn)
+from repro.jax_compat import make_mesh  # noqa: E402
 from repro.models import LM, shard_env  # noqa: E402
 
 if arch == "jamba-pipe":
@@ -39,8 +40,7 @@ else:
 mbB, S = 2, 17
 axes = ("pp",) if dp * tp == 1 else ("pp", "data", "model")
 shape = (P_,) if dp * tp == 1 else (P_, dp, tp)
-mesh = jax.make_mesh(shape, axes,
-                     axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+mesh = make_mesh(shape, axes)
 rules = {"dp": "data", "tp": "model", "fsdp": None} if dp * tp > 1 else {}
 
 spec = make_pipeline_spec(cfg, P=P_, v=v, m=m, microbatch=mbB, seq_len=S,

@@ -1,0 +1,55 @@
+"""Subprocess helper: split-backward pipeline gradients (zb_h1: B =
+input-grad + residual stash, W = deferred weight-grad) must match the
+fused-backward pipeline gradients (1f1b: one jax.vjp per B task) on the
+same parameters and batch.
+
+Usage: python split_fused_check.py [P] [m]
+Exits 0 when max |g_split - g_fused| <= 1e-5; prints MAXERR=... for the
+parent test to parse.
+"""
+import os
+import sys
+
+P_ = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+m = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
+                                         make_pipeline_spec,
+                                         make_train_grads_fn)
+from repro.jax_compat import make_mesh  # noqa: E402
+from repro.models import shard_env  # noqa: E402
+
+cfg = get_reduced("tinyllama-1.1b")
+mbB, S = 2, 17
+mesh = make_mesh((P_,), ("pp",))
+
+spec_fused = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
+                                seq_len=S, schedule="1f1b")
+spec_split = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
+                                seq_len=S, schedule="zb_h1")
+assert spec_split.table.has_w and not spec_fused.table.has_w
+
+params, _ = init_pipeline_params(jax.random.key(0), cfg, spec_fused.layout)
+tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
+                            cfg.vocab_size)
+batch = {"tokens": tokens}
+
+with shard_env(mesh, {}):
+    g_fused, met_f = jax.jit(make_train_grads_fn(spec_fused, mesh))(
+        params, batch)
+    g_split, met_s = jax.jit(make_train_grads_fn(spec_split, mesh))(
+        params, batch)
+
+errs = [abs(float(met_f["loss"]) - float(met_s["loss"]))]
+for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_split)):
+    errs.append(float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))))
+maxerr = max(errs)
+print(f"MAXERR={maxerr:.3e} loss_fused={float(met_f['loss']):.6f} "
+      f"loss_split={float(met_s['loss']):.6f}")
+sys.exit(0 if maxerr <= 1e-5 else 1)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypcompat import given, settings, st
 
 from repro.data import DataPipeline, SyntheticLM, TokenShardDataset
 from repro.data.tokenshards import write_synthetic_shards

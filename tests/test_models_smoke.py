@@ -12,6 +12,14 @@ import pytest
 from repro.configs import ARCH_IDS, RecomputeConfig, get_reduced
 from repro.models import LM
 
+# Fast tier-1 keeps one small dense arch per code path; the remaining
+# eight (MoE, SSM, hybrid, enc-dec, VLM, big-d_model) run only with
+# --runslow / RUN_SLOW=1 — they cost ~4 min of CPU jit time combined.
+FAST_ARCHS = ("tinyllama-1.1b", "deepseek-7b")
+ARCH_PARAMS = [a if a in FAST_ARCHS
+               else pytest.param(a, marks=pytest.mark.slow)
+               for a in ARCH_IDS]
+
 
 def _batch(cfg, key, B=2, S=17):
     ks = jax.random.split(key, 3)
@@ -25,7 +33,7 @@ def _batch(cfg, key, B=2, S=17):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_and_loss(arch):
     cfg = get_reduced(arch)
     lm = LM(cfg)
@@ -49,7 +57,7 @@ def test_forward_and_loss(arch):
     assert abs(float(metrics["ce"]) - np.log(cfg.vocab_size)) < 2.0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_no_nans(arch):
     cfg = get_reduced(arch)
     lm = LM(cfg)
@@ -66,7 +74,7 @@ def test_train_step_no_nans(arch):
     assert 1e-4 < float(gn) < 1e4
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_full_forward(arch):
     cfg = get_reduced(arch)
     lm = LM(cfg)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypcompat import given, settings, st
 
 from repro.configs.base import OptimizerConfig
 from repro.optim import (ChronosOffloadRunner, HostAdamW, adamw_init,

@@ -52,8 +52,10 @@ def test_offload_scalability_claims():
     assert r["pp4_seq8k (paper 100%)"] > 0.9
 
 
+@pytest.mark.slow
 def test_recompute_shallow_first_beats_uniform():
-    """Fig. 15: chronos budget allocation dominates uniform recompute."""
+    """Fig. 15: chronos budget allocation dominates uniform recompute.
+    (slow: the v=4 greedy placer sweeps a large launch-delay space)"""
     from benchmarks.paper_fig15_16_dse import fig15
     f = fig15()
     for v in (2, 3):

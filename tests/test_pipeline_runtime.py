@@ -5,6 +5,13 @@ so virtual-device tests can't share the pytest process).  The helper
 checks numerical equivalence of pipeline gradients against single-device
 autodiff — the strongest invariant: every schedule must produce the SAME
 gradients, only with different memory/time profiles.
+
+Fast tier-1 runs one fused schedule (chronos), one split-backward
+schedule (chronos_zb, which exercises the B/W stash path including the
+mid/first/last op variants), and the direct split-vs-fused gradient
+comparison.  Everything else — more schedules, deeper pipelines, the
+exotic architectures, dp/tp meshes — is ``@pytest.mark.slow``
+(~30-90 s of CPU jit each; run with --runslow or RUN_SLOW=1).
 """
 import os
 import subprocess
@@ -14,51 +21,96 @@ import pytest
 
 HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                       "pipeline_check.py")
+SPLIT_HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                            "split_fused_check.py")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_case(arch, schedule, P, v, m, ndev=None, dp=1, tp=1, timeout=600):
+def _run(args, timeout=600):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env.pop("XLA_FLAGS", None)
+    return subprocess.run(args, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def run_case(arch, schedule, P, v, m, ndev=None, dp=1, tp=1, timeout=600):
     args = [sys.executable, HELPER, arch, schedule, str(P), str(v), str(m)]
     if ndev:
         args += [str(ndev), str(dp), str(tp)]
-    r = subprocess.run(args, env=env, capture_output=True, text=True,
-                       timeout=timeout)
+    r = _run(args, timeout=timeout)
     assert r.returncode == 0, \
         f"{arch}/{schedule} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
     assert "MAXERR=" in r.stdout
 
 
-@pytest.mark.parametrize("schedule", ["chronos", "1f1b", "interleaved",
-                                      "chronos_recomp", "chronos_zero2"])
+@pytest.mark.parametrize("schedule", [
+    "chronos",
+    "chronos_zb",                     # split backward, v=2 (B/W mid ops)
+    pytest.param("1f1b", marks=pytest.mark.slow),
+    pytest.param("zb_h1", marks=pytest.mark.slow),
+    pytest.param("interleaved", marks=pytest.mark.slow),
+    pytest.param("chronos_recomp", marks=pytest.mark.slow),
+    pytest.param("chronos_zero2", marks=pytest.mark.slow),
+])
 def test_dense_schedules_grad_equivalence(schedule):
-    v = 1 if schedule == "1f1b" else 2
+    v = 1 if schedule in ("1f1b", "zb_h1") else 2
     run_case("tinyllama-1.1b", schedule, P=2, v=v, m=4)
 
 
+def test_split_backward_matches_fused_runtime():
+    """zb_h1 (B = input grad + stash, W = deferred weight grad) must
+    reproduce the fused 1f1b pipeline gradients to <= 1e-5."""
+    r = _run([sys.executable, SPLIT_HELPER, "2", "4"])
+    assert r.returncode == 0, \
+        f"split-vs-fused failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "MAXERR=" in r.stdout
+
+
+@pytest.mark.slow
 def test_deeper_pipeline_p4():
     run_case("tinyllama-1.1b", "chronos", P=4, v=2, m=8)
 
 
+@pytest.mark.slow
+def test_deeper_split_pipeline_p4():
+    """P=4 exercises zb_h1's BWD/WGT mid-stage op codes."""
+    run_case("tinyllama-1.1b", "zb_h1", P=4, v=1, m=8)
+
+
+@pytest.mark.slow
 def test_moe_pipeline():
     run_case("qwen2-moe-a2.7b", "chronos", P=2, v=2, m=4)
 
 
+@pytest.mark.slow
 def test_hybrid_mamba_moe_pipeline():
     run_case("jamba-pipe", "chronos", P=2, v=2, m=4)
 
 
+@pytest.mark.slow
 def test_encdec_pipeline_with_padding():
     # whisper smoke: 2 decoder layers padded to 4 (2 null layers)
     run_case("whisper-base", "chronos", P=2, v=2, m=4)
 
 
+@pytest.mark.slow
 def test_vlm_prefix_pipeline():
     run_case("paligemma-3b", "chronos", P=2, v=2, m=4)
 
 
+@pytest.mark.slow
 def test_pipeline_with_tp_dp_auto_axes():
-    """pp manual + dp/tp auto on an 8-device mesh."""
+    """pp manual + dp/tp auto on an 8-device mesh.
+
+    Requires the new-JAX shard_map: jaxlib 0.4.x's SPMD partitioner
+    CHECK-fails (spmd_partitioner.cc IsManualSubgroup) on any
+    collective-permute over the manual axis when auto axes exist —
+    reproducible with a 10-line partial-manual ppermute, independent of
+    this repo's executor.  Full-manual (pp-only) meshes are unaffected.
+    """
+    from repro.jax_compat import HAS_VMA
+    if not HAS_VMA:
+        pytest.skip("partial-manual ppermute crashes jaxlib 0.4.x "
+                    "(XLA IsManualSubgroup CHECK failure)")
     run_case("tinyllama-1.1b", "chronos", P=2, v=2, m=4, ndev=8, dp=2, tp=2)

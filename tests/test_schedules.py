@@ -3,11 +3,11 @@ reproduction of the paper's §4.1/§4.2 closed-form numbers."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypcompat import given, settings, st
 
 from repro.core import analysis as AN
 from repro.core import schedules as S
-from repro.core.schedule import B, F, retime_with_comm
+from repro.core.schedule import B, F, W, retime_with_comm
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +128,7 @@ schedule_cases = st.sampled_from([
     ("interleaved", {"v": 2}), ("interleaved", {"v": 4}),
     ("chronos", {"v": 2}), ("chronos", {"v": 3}), ("chronos", {"v": 4}),
     ("chronos_recomp", {}), ("chronos_zero2", {"v": 2, "group": 2}),
+    ("zb_h1", {}), ("chronos_zb", {"v": 2}), ("chronos_zb", {"v": 3}),
 ])
 
 
@@ -146,7 +147,8 @@ def test_schedule_validity_invariants(case, P, mmul):
     for t in sched.tasks:
         assert t.key() not in keys
         keys.add(t.key())
-    assert len(keys) == 2 * P * sched.v * m
+    kinds = 3 if sched.has_w else 2
+    assert len(keys) == kinds * P * sched.v * m
     # peak activation sane (gpipe worst case holds all m microbatches)
     pk = sched.peak_activation()
     assert 0 < pk <= m / P + 2.0 + 1e-9
@@ -182,6 +184,95 @@ def test_chronos_beats_1f1b_memory_uniformly(P):
     f1 = S.onef1b(P, m).peak_activation()
     il = S.interleaved(P, m, 2).peak_activation()
     assert ch < f1 < il
+
+
+# ---------------------------------------------------------------------------
+# split backward (B/W zero-bubble family)
+# ---------------------------------------------------------------------------
+
+def _by_key(sched):
+    return {t.key(): t for t in sched.tasks}
+
+
+@settings(max_examples=16, deadline=None)
+@given(P=st.integers(2, 10), mmul=st.integers(1, 3))
+def test_zb_h1_invariants(P, mmul):
+    m = P * mmul
+    sched = S.zb_h1(P, m)
+    sched.check()              # deps (incl. W after own B) + no overlap
+    idx = _by_key(sched)
+    assert sched.has_w
+    # exactly one F, B, W per (mb, stage); F -> B -> W in time
+    for i in range(m):
+        for s in range(P):
+            f, b, w = idx[(F, i, 0, s)], idx[(B, i, 0, s)], idx[(W, i, 0, s)]
+            assert f.end <= b.start + 1e-9 < w.start + 1e-9
+            assert b.end <= w.start + 1e-9
+    # split budget: B + W == fused backward
+    assert sched.b + sched.w == 2 * sched.f
+
+
+@settings(max_examples=10, deadline=None)
+@given(P=st.integers(2, 8), v=st.integers(2, 3), mmul=st.integers(1, 2))
+def test_chronos_zb_invariants(P, v, mmul):
+    m = 2 * P * mmul
+    sched = S.chronos_zb(P, m, v)
+    sched.check()
+    base = S.chronos(P, m, v)
+    # same span, same peak activation (W fills freed/bubble grains only)
+    assert sched.total_time() <= base.total_time() + 1e-9
+    assert abs(sched.peak_activation() - base.peak_activation()) < 1e-9
+    # strictly more useful compute in the same span than fused chronos
+    # would get if its backward were only the input-grad half
+    assert sched.bubble_ratio() <= base.bubble_ratio() + 1e-9
+
+
+def test_zb_h1_beats_1f1b_bubble_at_equal_memory():
+    """Acceptance: steady-state bubble <= 1F1B's and peak activation <=
+    1F1B's for P in {4, 8}."""
+    for P in (4, 8):
+        m = 4 * P
+        zb, f1 = S.zb_h1(P, m), S.onef1b(P, m)
+        assert zb.bubble_ratio() < f1.bubble_ratio()
+        assert zb.peak_activation() <= f1.peak_activation() + 1e-9
+        assert zb.total_time_rel() < f1.total_time_rel()
+        # the construction achieves the ideal ZB-H1 bound exactly
+        assert abs(zb.bubble_ratio() - AN.zb_h1_bubble(P, m)) < 1e-9
+
+
+def test_activation_released_at_B_not_W():
+    """Deferring W must not extend activation lifetime: a split schedule
+    with the same F/B timeline as its fused counterpart has the same
+    peak; delaying W's further changes nothing."""
+    import dataclasses as dc
+    sched = S.zb_h1(4, 8)
+    late = dc.replace(sched, tasks=[
+        dc.replace(t, start=t.start + 100.0) if t.kind == W else t
+        for t in sched.tasks])
+    assert abs(late.peak_activation() - sched.peak_activation()) < 1e-9
+
+
+def test_w_kind_in_registry_and_tasktable():
+    from repro.core.tasktable import build_task_table, validate_table
+    for name, kw in (("zb_h1", {}), ("chronos_zb", {"v": 2})):
+        sched = S.get_schedule(name, 4, 8, **kw)
+        tab = build_task_table(sched)
+        validate_table(tab)
+        assert tab.has_w and set(tab.wstash_depth) == set(range(sched.v))
+
+
+def test_half_grain_alignment_exact_at_large_m():
+    """Integer half-grain arithmetic: no float drift at large m — every
+    constructed start sits exactly on the half-grain lattice."""
+    from repro.core.schedule import to_half
+    sched = S.chronos(7, 256, 3)
+    for t in sched.tasks:
+        to_half(t.start)       # raises off-lattice
+    sched.check()
+    sched2 = S.chronos_recomp(5, 128)
+    for t in sched2.tasks:
+        to_half(t.start)
+    sched2.check()
 
 
 # ---------------------------------------------------------------------------
