@@ -1,0 +1,58 @@
+"""Design-space planner sweep (`repro.plan`) on the paper's llama70b
+testbed: for a ladder of per-device HBM budgets, what (schedule,
+recompute depth, offload depth) does the planner pick, and how many
+layers does each family train?
+
+Reproduces the Fig. 9(b)/15/16 decision structure from the planner
+rather than hand-picked points: recompute-on (chronos_recomp) must beat
+1F1B+R=50% in max trainable layers by >= 1.5x at 32 GB, and the picks
+shift from plain chronos (roomy budgets) toward recomp+offload (tight
+budgets).
+"""
+from __future__ import annotations
+
+from benchmarks.common import GB, PAPER_ACT_SCALE
+from repro.configs.llama70b_paper import with_layers
+from repro.plan import PlannerQuery, enumerate_points, plan_under_budget
+
+PP, TP = 8, 8
+CFG = with_layers(48)            # the Fig. 9(a) 48-layer testbed
+
+
+def ladder(hbm_gb: float = 32.0):
+    """Family -> max trainable layers under the budget (paper ladder)."""
+    q = PlannerQuery(cfg=CFG, pp=PP, tp=TP, hbm_bytes=hbm_gb * GB,
+                     reserve=1 * GB, act_scale=PAPER_ACT_SCALE)
+    out = {}
+    for p in enumerate_points(q):
+        out.setdefault(p.describe(), p.max_layers)
+    return out
+
+
+def picks(budgets=(16.0, 24.0, 32.0, 48.0, 64.0)):
+    """HBM budget (GB) -> the planner's executable pick summary."""
+    out = {}
+    for hbm in budgets:
+        try:
+            ep = plan_under_budget(CFG, pp=PP, tp=TP, hbm_bytes=hbm * GB,
+                                   reserve=1 * GB,
+                                   act_scale=PAPER_ACT_SCALE)
+            out[hbm] = ep.summary()
+        except ValueError as e:
+            out[hbm] = {"pick": "none-fits", "error": str(e)}
+    return out
+
+
+def run(bench):
+    lad = ladder()
+    for name in ("1f1b", "1f1b+R=50%", "chronos(v=2)",
+                 "chronos_recomp(v=2)+rc=1",
+                 "chronos_recomp(v=2)+rc=1+offload=1/2"):
+        bench.add(f"dse_max_layers_{name}", lambda n=name: lad.get(n))
+    bench.add("dse_recomp_on_vs_1f1b_r50 (>=1.5x)",
+              lambda: round(lad["chronos_recomp(v=2)+rc=1+offload=1/2"]
+                            / lad["1f1b+R=50%"], 3))
+    pk = picks()
+    for hbm, s in pk.items():
+        bench.add(f"dse_pick_{int(hbm)}GB", lambda s=s: s["pick"])
+    return lad, pk

@@ -34,12 +34,12 @@ def main() -> None:
                             paper_fig11_seqlen, paper_fig12_models,
                             paper_fig13_p2p, paper_fig14_offload,
                             paper_fig15_16_dse, paper_sec41_bubble,
-                            roofline_table, zb_schedules)
+                            planner_dse, roofline_table, zb_schedules)
     bench = Bench()
     for mod in (paper_sec41_bubble, paper_fig9_memory, paper_fig10_recomp,
                 paper_fig11_seqlen, paper_fig12_models, paper_fig13_p2p,
-                paper_fig14_offload, paper_fig15_16_dse, zb_schedules,
-                roofline_table):
+                paper_fig14_offload, paper_fig15_16_dse, planner_dse,
+                zb_schedules, roofline_table):
         mod.run(bench)
     bench.emit()
 

@@ -1,0 +1,73 @@
+"""Plan-then-train: the memory-budget planner driving the pipeline
+executor end-to-end on the CPU container.
+
+    PYTHONPATH=src python examples/plan_pipeline.py
+    PYTHONPATH=src python examples/plan_pipeline.py --hbm-gb 0.15 --steps 3
+
+1. asks ``repro.plan`` what fits a per-device HBM budget for a reduced
+   llama config on a P=2 pipeline (try shrinking --hbm-gb until the
+   planner reaches for recompute/offload),
+2. prints the evaluated design space,
+3. plays the winning plan through ``train_pipeline`` — the SPMD
+   executor, plus the Chronos-Offload host optimizer when the plan
+   says so.
+"""
+import argparse
+import os
+import tempfile
+
+P = 2
+os.environ.setdefault("XLA_FLAGS",
+                      f"--xla_force_host_platform_device_count={P}")
+
+from repro.configs import (OptimizerConfig, ShapeConfig,  # noqa: E402
+                           TrainConfig, get_reduced)
+from repro.jax_compat import make_mesh  # noqa: E402
+from repro.launch.train import train  # noqa: E402
+from repro.plan import PlannerQuery, enumerate_points  # noqa: E402
+from repro.plan import plan_under_budget  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--hbm-gb", type=float, default=0.2,
+                    help="pretend per-device HBM budget (reduced model!)")
+    args = ap.parse_args()
+
+    cfg = get_reduced("tinyllama-1.1b")
+    shape = ShapeConfig("smoke", seq_len=18, global_batch=8, kind="train")
+
+    q = PlannerQuery(cfg=cfg, pp=P, tp=1, hbm_bytes=args.hbm_gb * 1e9,
+                     microbatch=2, seq_len=shape.seq_len, reserve=0.0,
+                     max_v=2)
+    print(f"design space under {args.hbm_gb} GB:")
+    for p in enumerate_points(q):
+        mark = "fits" if p.fits else "    "
+        print(f"  [{mark}] {p.describe():32s} "
+              f"total={p.total_bytes / 1e6:8.1f} MB "
+              f"compute_frac={p.compute_frac:.3f}")
+
+    ep = plan_under_budget(cfg, pp=P, tp=1, hbm_bytes=args.hbm_gb * 1e9,
+                           microbatch=2, seq_len=shape.seq_len,
+                           reserve=0.0, max_v=2)
+    print(f"pick: {ep.summary()}")
+
+    tc = TrainConfig(
+        model=cfg, shape=shape, plan=ep.parallel_plan(pp_axis="pp"),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                  total_steps=args.steps),
+        log_every=1, checkpoint_every=10 ** 9,
+        checkpoint_dir=tempfile.mkdtemp(prefix="plan_pipeline_"))
+    mesh = make_mesh((P,), ("pp",))
+    out = train(tc, mesh=mesh,
+                rules={"pp": "pp", "dp": None, "tp": None, "fsdp": None},
+                steps=args.steps)
+    print(f"[plan_pipeline] schedule={out['schedule']} "
+          f"losses={['%.3f' % l for l in out['losses']]}")
+    if "offload" in out:
+        print(f"[plan_pipeline] offload report: {out['offload']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,10 @@
 #    The pinned accelerator container has no network: the suite then
 #    falls back to tests/helpers/hypcompat.py's degraded deterministic
 #    sampling, so collection never breaks on the missing dev dep.
-# 2. Run the fast suite (slow marker deselected) through the same entry
+# 2. Docs step: the schedule gallery (docs/SCHEDULES.md) is generated
+#    from the registered generators — regenerate and fail on diff —
+#    and the docs' `>>>` code blocks run under doctest.
+# 3. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).
 #
 # Full suite (all @slow cases, ~10+ min on CPU):
@@ -15,5 +18,9 @@ cd "$(dirname "$0")/.."
 
 python -m pip install -e ".[test]" >/dev/null 2>&1 \
     || echo "ci.sh: pip install skipped (offline?) — using installed deps"
+
+PYTHONPATH=src python scripts/render_schedules.py --check
+PYTHONPATH=src python -m doctest docs/ARCHITECTURE.md docs/SCHEDULES.md
+echo "ci.sh: docs gallery in sync; doctests passed"
 
 exec python benchmarks/run.py --check "$@"

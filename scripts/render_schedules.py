@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Render the schedule gallery (docs/SCHEDULES.md) from the registered
+generators, so the docs regenerate from code and cannot go stale.
+
+    PYTHONPATH=src python scripts/render_schedules.py          # rewrite
+    PYTHONPATH=src python scripts/render_schedules.py --check  # CI diff
+
+Timeline notation (one character per half-grain, time left to right,
+one row per pipeline stage):
+
+    F0 / f1   forward of microbatch 0 / 1 (upper case = chunk 0,
+              lower case = chunk 1; the kind letter marks the first
+              half-grain, the microbatch digit fills the rest)
+    B0 / b0   backward (input-gradient step for split-backward
+              schedules; rB000 = legacy recompute *prefix* inside B)
+    W0 / w0   deferred weight-gradient (split-backward family)
+    R0 / r0   explicit rematerialization replay (Chronos-Recomp)
+    .         idle (bubble)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import schedules as S  # noqa: E402
+from repro.core.schedule import Schedule, to_half  # noqa: E402
+
+DOC = os.path.join(os.path.dirname(__file__), "..", "docs", "SCHEDULES.md")
+
+# every REGISTRY generator appears at least once (checked below)
+GALLERY = [
+    ("gpipe", dict(P=4, m=6),
+     "All forwards, flush, all backwards — m/P x activation residency."),
+    ("1f1b", dict(P=4, m=6),
+     "DAPPLE one-forward-one-backward; peak activation m_a on stage 0."),
+    ("1f1b", dict(P=4, m=6, recomp=0.5),
+     "1F1B + uniform 50% recompute: every backward carries a replay "
+     "prefix (`r`), halving stored activations."),
+    ("interleaved", dict(P=4, m=4, v=2),
+     "Megatron interleaved 1F1B (virtual pipeline) — lower bubble, "
+     "*higher* peak activation than 1F1B."),
+    ("chronos", dict(P=4, m=4, v=2),
+     "Paper section 4.1 periodic slot classes: shallow chunk (upper case) "
+     "launched late / retired early => ~75% m_a at large P."),
+    ("chronos_recomp", dict(P=4, m=4),
+     "Paper section 4.2: the shallowest chunk replays from its boundary "
+     "checkpoint — explicit `R` ticks right before each `B` => 25% m_a."),
+    ("chronos_zero2", dict(P=4, m=4, v=2, group=2),
+     "Paper section 4.3 grouped chunk re-launches: same-(kind, chunk) "
+     "tasks of a microbatch group run back-to-back for ZeRO-2 DP "
+     "collectives."),
+    ("zb_h1", dict(P=4, m=6),
+     "ZB-H1 split backward: `B` = input-gradient (releases the "
+     "activation), `W` = deferred weight-gradient filling the cooldown "
+     "bubble at 1F1B's peak activation."),
+    ("chronos_zb", dict(P=4, m=4, v=2),
+     "Chronos slot classes with the backward split: freed grains plus "
+     "the alignment bubbles absorb the `W` tasks — same span, more "
+     "useful compute."),
+]
+
+KIND_GLYPH = {"F": "F", "B": "B", "W": "W", "R": "R"}
+
+
+def render_timeline(sched: Schedule) -> str:
+    """ASCII timeline, one row per stage, one char per half-grain."""
+    t0 = min(to_half(t.start) for t in sched.tasks)
+    t1 = max(to_half(t.end) for t in sched.tasks)
+    rows = []
+    for s in range(sched.P):
+        row = ["."] * (t1 - t0)
+        for t in sched.stage_tasks(s):
+            a, b = to_half(t.start) - t0, to_half(t.end) - t0
+            glyph = KIND_GLYPH[t.kind]
+            if t.chunk % 2 == 1:
+                glyph = glyph.lower()
+            rech = to_half(t.recomp)
+            cells = ["r"] * rech + [glyph] + \
+                [str(t.mb % 10)] * (b - a - rech - 1)
+            for i, ch in enumerate(cells):
+                assert row[a + i] == ".", \
+                    f"overlap at stage {s}, half-grain {a + i}"
+                row[a + i] = ch
+        rows.append(f"stage {s} |" + "".join(row) + "|")
+    return "\n".join(rows)
+
+
+def metrics_block(sched: Schedule) -> str:
+    lines = [
+        f"- span: {sched.total_time():g} grains "
+        f"({sched.total_time_rel():.3g} T_fwd); "
+        f"bubble {sched.bubble_ratio():.1%}; "
+        f"ideal-compute {sched.ideal_compute_fraction():.1%}",
+        f"- peak activation: {sched.peak_activation(count_transient=False):.4g}"
+        f" m_a (per-stage max, paper accounting)",
+    ]
+    extra = []
+    if sched.has_w:
+        extra.append("split backward (B/W)")
+    if sched.has_r:
+        extra.append(f"explicit recompute of chunks "
+                     f"{sorted(sched.r_chunks())} (R tasks)")
+    if extra:
+        lines.append(f"- {'; '.join(extra)}")
+    return "\n".join(lines)
+
+
+def render_doc() -> str:
+    out = [
+        "# Schedule gallery",
+        "",
+        "<!-- GENERATED FILE — edit scripts/render_schedules.py, then run",
+        "     `PYTHONPATH=src python scripts/render_schedules.py`.",
+        "     CI regenerates and fails on diff. -->",
+        "",
+        "Every generator registered in `repro.core.schedules.REGISTRY`,",
+        "constructed small and rendered as ASCII timelines (one row per",
+        "stage, one character per half-grain, time left to right).",
+        "",
+        "Notation: `F0`/`f1` forward of microbatch 0/1 (upper case =",
+        "chunk 0, lower = chunk 1; the letter marks the first half-grain,",
+        "the microbatch digit fills the rest), `B`/`b` backward",
+        "(input-gradient only in the split-backward family), `W`/`w`",
+        "deferred weight-gradient, `R`/`r`-followed-by-digits explicit",
+        "rematerialization replay, a leading `r` inside a backward the",
+        "legacy uniform-recompute prefix, `.` idle.",
+        "",
+    ]
+    covered = set()
+    for name, kw, blurb in GALLERY:
+        covered.add(name)
+        sched = S.get_schedule(name, **kw)
+        args = ", ".join(f"{k}={v}" for k, v in kw.items())
+        out += [f"## `{sched.name}` — `get_schedule(\"{name}\", {args})`",
+                "", blurb, "", "```text", render_timeline(sched), "```",
+                "", metrics_block(sched), ""]
+    missing = set(S.REGISTRY) - covered
+    assert not missing, f"gallery missing registered generators: {missing}"
+    return "\n".join(out) + "\n"
+
+
+def main() -> int:
+    doc = render_doc()
+    check = "--check" in sys.argv
+    if check:
+        old = open(DOC).read() if os.path.exists(DOC) else ""
+        if old != doc:
+            sys.stderr.write(
+                "docs/SCHEDULES.md is stale — run "
+                "`PYTHONPATH=src python scripts/render_schedules.py`\n")
+            return 1
+        print("docs/SCHEDULES.md up to date")
+        return 0
+    os.makedirs(os.path.dirname(DOC), exist_ok=True)
+    with open(DOC, "w") as f:
+        f.write(doc)
+    print(f"wrote {os.path.normpath(DOC)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -233,6 +233,8 @@ class RecomputeConfig:
     mode: str = "none"              # none | chronos | uniform | full
     # chronos: recompute the ``num_recomp_chunks`` *shallowest* chunks
     num_recomp_chunks: int = 1
+    # uniform: recompute this fraction of every layer (1F1B+R baseline)
+    uniform_frac: float = 0.5
     # per-chunk policy when rematerializing: "full" drops everything,
     # "selective" keeps flash-attention outputs (Megatron-style).
     policy: str = "full"

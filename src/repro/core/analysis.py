@@ -165,10 +165,14 @@ def max_trainable_layers(cfg: ModelConfig, *, hbm_bytes: float, pp: int,
                          act_frac_of_ma: float,
                          offload_frac: float = 0.0,
                          reserve: float = 2.0e9,
-                         layer_step: int = 8) -> int:
+                         layer_step: int = 8,
+                         memory_model: Optional[MemoryModel] = None) -> int:
     """Largest layer count trainable under ``hbm_bytes`` per device given a
-    schedule's peak-activation fraction (units of m_a)."""
-    mm = MemoryModel.build(cfg, tp=tp)
+    schedule's peak-activation fraction (units of m_a).  Pass
+    ``memory_model`` to reuse a (possibly calibrated) estimator — e.g.
+    the paper-accounting scale of ``benchmarks.common.memory_model``."""
+    mm = memory_model if memory_model is not None \
+        else MemoryModel.build(cfg, tp=tp)
     best = 0
     L = layer_step
     while L <= 4096:

@@ -25,6 +25,20 @@ tick re-linearizes w.r.t. the *parameters only* from the stash and
 accumulates weight gradients.  Both halves linearize the identical
 forward function at the identical primal point, so split gradients match
 the fused path to float determinism.
+
+Explicit recompute (schedules with ``R`` tasks, e.g. ``chronos_recomp``):
+the R tick retires the chunk's boundary checkpoint from the activation
+ring (F->R lifetime) and hands it to the rematerialization ring (R->B)
+that the chunk's backward consumes.  Because JAX autodiff is functional,
+the forward replay itself is fused into the B tick's ``jax.vjp`` — the
+same boundary-plus-rematerialize linearization every backward here runs
+under ``jax.checkpoint`` — so the compiled gradient math is *identical*
+to the no-recompute path and ``chronos_recomp(rho)`` gradients match
+``chronos`` bitwise (``tests/helpers/split_fused_check.py --pair
+recomp`` asserts maxerr == 0).  The R task's scheduled duration carries
+the replay cost in the schedule IR / analytic timeline; a future
+stored-residual path would move the replay FLOPs into the R tick by
+stashing linearization residuals instead of the boundary payload.
 """
 from __future__ import annotations
 
@@ -43,7 +57,7 @@ from repro import jax_compat
 from repro.configs.base import ModelConfig
 from repro.core.schedules import get_schedule
 from repro.core.tasktable import (BWD_FIRST, BWD_LAST, BWD_MID, FWD_FIRST,
-                                  FWD_LAST, FWD_MID, IDLE, SEND_BWD,
+                                  FWD_LAST, FWD_MID, IDLE, RCP_MID, SEND_BWD,
                                   SEND_FWD, SEND_HOPB, SEND_HOPF, TaskTable,
                                   build_task_table)
 from repro.models import layers as L
@@ -169,7 +183,8 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
     layout = StageLayout.build(cfg, P, v)
     sched = get_schedule(schedule, P, m, **({"v": v} if schedule in
                                             ("chronos", "interleaved",
-                                             "chronos_zero2", "chronos_zb")
+                                             "chronos_zero2", "chronos_zb",
+                                             "chronos_recomp")
                                             else {}),
                          **sched_kw)
     if schedule in ("1f1b", "zb_h1"):
@@ -268,7 +283,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
     tab = spec.table
     P_, v = tab.P, tab.v
     pp = spec.pp_axis
-    table_arr = jnp.asarray(tab.arrays())              # [T, P, 9]
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 10]
     act_offsets = np.zeros(v, np.int64)
     total_act = 0
     for c in range(v):
@@ -283,6 +298,14 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             w_offsets[c] = total_wstash
             total_wstash += tab.wstash_depth[c]
     w_offsets = jnp.asarray(w_offsets)
+    remat = tab.has_r                     # explicit-recompute (R) schedule
+    r_offsets = np.zeros(v, np.int64)
+    total_rmt = 0
+    if remat:
+        for c in range(v):
+            r_offsets[c] = total_rmt
+            total_rmt += tab.rmt_depth.get(c, 0)
+    r_offsets = jnp.asarray(r_offsets)
     flags_np = spec.layout.flags(cfg)
 
     def spmd(stage_iota, params, batch):
@@ -355,6 +378,12 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 carry["wdy"] = pin_buf(jax.tree.map(
                     lambda a: jnp.zeros((total_wstash,) + a.shape, a.dtype),
                     zero_pay))
+            if remat:
+                # remat rings: boundary payloads of rematerialized
+                # chunks, resident from the R tick until the B tick
+                carry["rmt"] = pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_rmt,) + a.shape, a.dtype),
+                    zero_pay))
             return carry
 
         def get_mb(arr, mb):
@@ -381,6 +410,19 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             act_in = jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, gslot, 0, False),
                 carry["act"])
+            if remat:
+                # rematerialized chunks retire their act slot at the R
+                # tick; their B reads the boundary from the remat ring
+                grm = r_offsets[c] + jnp.maximum(row[9], 0)
+                rmt_in = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
+                                                           False),
+                    carry["rmt"])
+                bnd_in = jax.tree.map(
+                    lambda r_, a_: jnp.where(row[9] >= 0, r_, a_),
+                    rmt_in, act_in)
+            else:
+                bnd_in = act_in
             tokens = get_mb(batch["tokens"], mb)
             labels = tokens[:, 1:]
             tok_in = tokens[:, :-1]
@@ -431,7 +473,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 dy = vary(dict(dy_in))
                 _, vjp = jax.vjp(
                     lambda bp, pay: fwd_fn(bp, shared, pay, flags_c),
-                    vary(blocks_c), vary(act_in))
+                    vary(blocks_c), vary(bnd_in))
                 gb_c, dx = vjp(dy)
                 return _add_block_grads(carry, gb_c), dx
 
@@ -449,7 +491,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 _, vjp = jax.vjp(
                     lambda bp, sp, pay: last_fn(bp, sp, pay, labels, mask,
                                                 flags_c),
-                    vary(blocks_c), vary(shared), vary(act_in))
+                    vary(blocks_c), vary(shared), vary(bnd_in))
                 gb_c, gs, dx = vjp(to_varying(jnp.ones((), jnp.float32)))
                 carry = _add_block_grads(carry, gb_c)
                 return _add_shared_grads(carry, gs), dx
@@ -477,10 +519,10 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                     dy = vary(dict(dy_in))
                     _, vjp = jax.vjp(
                         lambda pay: fwd_fn(blocks_c, shared, pay, flags_c),
-                        vary(act_in))
+                        vary(bnd_in))
                     (dx,) = vjp(dy)
                     carry = dict(carry, wx=upd_stash(carry["wx"],
-                                                     vary(act_in)),
+                                                     vary(bnd_in)),
                                  wdy=upd_stash(carry["wdy"], dy))
                     return carry, dx
 
@@ -498,10 +540,10 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                     _, vjp = jax.vjp(
                         lambda pay: last_fn(blocks_c, shared, pay, labels,
                                             mask, flags_c),
-                        vary(act_in))
+                        vary(bnd_in))
                     (dx,) = vjp(to_varying(jnp.ones((), jnp.float32)))
                     return dict(carry, wx=upd_stash(carry["wx"],
-                                                    vary(act_in))), dx
+                                                    vary(bnd_in))), dx
 
                 def br_w_mid(carry):
                     pay = vary(stash_rd(carry["wx"]))
@@ -534,6 +576,29 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
 
                 branches += [br_bwdi_mid, br_bwdi_first, br_bwdi_last,
                              br_w_mid, br_w_first, br_w_last]
+
+            if remat:
+                # ---- explicit recompute: the R tick hands the boundary
+                # checkpoint from the act ring to the remat ring (the
+                # replay FLOPs fuse into the B tick's vjp — see module
+                # docstring).  RCP_FIRST rows carry slot -1 and stash
+                # nothing (their block input is the token batch).
+                def br_rcp(carry):
+                    cur = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
+                                                               False),
+                        carry["rmt"])
+                    val = jax.tree.map(
+                        lambda new, old: jnp.where(row[9] >= 0, new, old),
+                        act_in, cur)
+                    rmt = jax.tree.map(
+                        lambda buf, p: jax.lax.dynamic_update_index_in_dim(
+                            buf, p, grm, 0), carry["rmt"], val)
+                    return dict(carry, rmt=rmt), zero_pay
+
+                while len(branches) < RCP_MID:
+                    branches.append(br_idle)      # unused op-code slots
+                branches += [br_rcp, br_rcp, br_rcp]
 
             carry, out = jax.lax.switch(op, branches, carry)
 
@@ -575,6 +640,8 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             if split:
                 carry = dict(carry, wx=pin_buf(carry["wx"]),
                              wdy=pin_buf(carry["wdy"]))
+            if remat:
+                carry = dict(carry, rmt=pin_buf(carry["rmt"]))
             return carry, None
 
         init = jax.tree.map(to_varying, carry_init())

@@ -33,6 +33,22 @@ is unchanged — the activation is released at the end of ``B``, not ``W``
 (the W residual stash is the boundary payload + upstream gradient, whose
 ring depth the task-table compiler sizes separately).
 
+Explicit recompute (Chronos-Recomp family): a schedule may carry a
+fourth task kind ``R`` (rematerialization).  ``R(i,c,s)`` replays the
+forward of block (i,c,s) from its stored boundary checkpoint; the
+block's ``B`` then consumes the rematerialized internals:
+
+    R(i,c,s)  <- F(i,c,s)              (same stage, any later slot)
+    B(i,c,s)  <- R(i,c,s)              (same stage, B starts at/after R end)
+
+``R`` has no cross-stage edges and sends nothing.  A chunk either has an
+R task for every (mb, stage) or for none — mixed per-microbatch
+recompute is not representable.  For chunks with R tasks the ``B`` task
+is a plain ``b``-grain backward (``recomp == 0``); the legacy encoding —
+a recompute *prefix* folded into ``B`` (``dur = recomp + b``) — remains
+supported for the uniform-recompute baselines (1F1B+R, GPipe+R) where
+the replay is never separately schedulable.
+
 All constructed start times are exact multiples of half a grain; the
 module-level :data:`HALF`/:func:`to_half` helpers let schedule builders
 do occupancy arithmetic in integer half-grains with no float slop.
@@ -41,9 +57,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
-F, B, W = "F", "B", "W"
+F, B, W, R = "F", "B", "W", "R"
 
 HALF = 2          # integer half-grains per grain
 
@@ -115,6 +131,15 @@ class Schedule:
     def has_w(self) -> bool:
         return any(t.kind == W for t in self.tasks)
 
+    @property
+    def has_r(self) -> bool:
+        return any(t.kind == R for t in self.tasks)
+
+    def r_chunks(self) -> FrozenSet[int]:
+        """Chunks rematerialized by explicit R tasks (empty for legacy
+        recompute-prefix schedules)."""
+        return frozenset(t.chunk for t in self.tasks if t.kind == R)
+
     # -- indexing ---------------------------------------------------------
     def by_key(self) -> Dict[Tuple, Task]:
         return {t.key(): t for t in self.tasks}
@@ -127,35 +152,45 @@ class Schedule:
     def check(self, tc: float = 0.0) -> None:
         idx = self.by_key()
         P, v, m = self.P, self.v, self.m
+        rcs = self.r_chunks()
         kinds = 3 if self.has_w else 2
-        assert len(self.tasks) == kinds * P * v * m, \
-            f"expected {kinds*P*v*m} tasks, got {len(self.tasks)}"
+        n_expect = kinds * P * v * m + len(rcs) * P * m
+        assert len(self.tasks) == n_expect, \
+            f"expected {n_expect} tasks, got {len(self.tasks)}"
         for t in self.tasks:
-            deps: List[Tuple[float, str]] = []
+            # (dep time, label, time the dep must be satisfied by)
+            deps: List[Tuple[float, str, float]] = []
             if t.kind == F:
                 if t.stage > 0:
                     deps.append((idx[(F, t.mb, t.chunk, t.stage - 1)].end + tc,
-                                 "fwd chain"))
+                                 "fwd chain", t.start))
                 elif t.chunk > 0:
                     deps.append((idx[(F, t.mb, t.chunk - 1, P - 1)].end + tc,
-                                 "fwd chunk hop"))
-                ok_at = t.start
+                                 "fwd chunk hop", t.start))
             elif t.kind == W:
-                deps.append((idx[(B, t.mb, t.chunk, t.stage)].end, "own bwd"))
-                ok_at = t.start
+                deps.append((idx[(B, t.mb, t.chunk, t.stage)].end, "own bwd",
+                             t.start))
+            elif t.kind == R:
+                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd",
+                             t.start))
             else:
-                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd"))
+                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd",
+                             t.start))
+                if t.chunk in rcs:
+                    assert t.recomp == 0.0, \
+                        f"{t.key()}: explicit R task and recompute prefix"
+                    deps.append((idx[(R, t.mb, t.chunk, t.stage)].end,
+                                 "own remat", t.start))
                 if t.stage < P - 1:
                     deps.append((idx[(B, t.mb, t.chunk, t.stage + 1)].end + tc,
-                                 "bwd chain"))
+                                 "bwd chain", t.grad_needed_at))
                 elif t.chunk < v - 1:
                     deps.append((idx[(B, t.mb, t.chunk + 1, 0)].end + tc,
-                                 "bwd chunk hop"))
+                                 "bwd chunk hop", t.grad_needed_at))
                 else:
                     deps.append((idx[(F, t.mb, t.chunk, t.stage)].end,
-                                 "turnaround"))
-                ok_at = t.grad_needed_at
-            for d, why in deps:
+                                 "turnaround", t.grad_needed_at))
+            for d, why, ok_at in deps:
                 assert ok_at >= d - 1e-9, \
                     f"{t.key()} starts {ok_at} before dep ({why}) at {d}"
         # no overlap per stage
@@ -185,9 +220,12 @@ class Schedule:
         return 1.0 - busy / span
 
     def ideal_compute_fraction(self) -> float:
-        """1 - bubble - recompute overhead (paper Figs. 12/13)."""
+        """1 - bubble - recompute overhead (paper Figs. 12/13).  Both
+        recompute encodings count as overhead: the prefix inside legacy
+        ``B`` tasks and the whole duration of explicit ``R`` tasks."""
         span = self.total_time()
-        useful = sum(t.dur - t.recomp - t.comm for t in self.tasks) / self.P
+        useful = sum(0.0 if t.kind == R else t.dur - t.recomp - t.comm
+                     for t in self.tasks) / self.P
         return useful / span
 
     def peak_activation(self, per_stage: bool = False,
@@ -196,8 +234,10 @@ class Schedule:
         of one microbatch).  Each (stage, chunk, mb) block holds
         1/(v*P)*stored_frac[chunk] of m_a from the start of its F until
         the end of its B.  Recomputed chunks additionally materialize
-        their own block activation transiently during the B task; the
-        paper's figures ignore this transient (Fig. 15 caption) — pass
+        their own block activation transiently during the replay — from
+        the start of the explicit R task when the schedule has one, else
+        from the start of the B task's recompute prefix; the paper's
+        figures ignore this transient (Fig. 15 caption) — pass
         ``count_transient=False`` for paper-comparable numbers.
 
         Split-backward schedules: the activation is released at the end
@@ -217,8 +257,12 @@ class Schedule:
                     events.append((ft.start, unit * fr))
                     events.append((bt.end, -unit * fr))
                     if fr < 1.0 and count_transient:
-                        # transient rematerialized block during B
-                        events.append((bt.start, unit * (1.0 - fr)))
+                        # transient rematerialized block: alive from the
+                        # replay (explicit R, or B's recompute prefix)
+                        # until the backward releases it
+                        rt = idx.get((R, mb, c, s))
+                        t0 = rt.start if rt is not None else bt.start
+                        events.append((t0, unit * (1.0 - fr)))
                         events.append((bt.end, -unit * (1.0 - fr)))
             events.sort(key=lambda e: (e[0], e[1]))
             cur = peak = 0.0
@@ -262,6 +306,7 @@ def retime_with_comm(sched: Schedule, tc: float,
     ptr = {s: 0 for s in range(sched.P)}
     free = {s: 0.0 for s in range(sched.P)}
     P, v = sched.P, sched.v
+    rcs = sched.r_chunks()
     n_total = len(sched.tasks)
 
     def dep_times(t: Task) -> Tuple[float, float]:
@@ -276,7 +321,12 @@ def retime_with_comm(sched: Schedule, tc: float,
         if t.kind == W:
             es = done[(B, t.mb, t.chunk, t.stage)]
             return es, es
+        if t.kind == R:
+            es = done[(F, t.mb, t.chunk, t.stage)]
+            return es, es
         es = done[(F, t.mb, t.chunk, t.stage)]
+        if t.chunk in rcs:
+            es = max(es, done[(R, t.mb, t.chunk, t.stage)])
         if t.stage < P - 1:
             g = done[(B, t.mb, t.chunk, t.stage + 1)] + tc
         elif t.chunk < v - 1:
@@ -287,7 +337,7 @@ def retime_with_comm(sched: Schedule, tc: float,
 
     def comm_edges(t: Task) -> int:
         """cross-stage inputs + outputs of this task (for sync mode)."""
-        n = len([k for k in _dep_keys(t, P, v) if k[3] != t.stage])
+        n = len([k for k in _dep_keys(t, P, v, rcs) if k[3] != t.stage])
         if t.kind == F:
             if t.stage < P - 1 or t.chunk < v - 1:
                 n += 1                      # sends activation onward
@@ -302,7 +352,7 @@ def retime_with_comm(sched: Schedule, tc: float,
         for s in range(sched.P):
             while ptr[s] < len(order[s]):
                 t = order[s][ptr[s]]
-                ready = all(k in done for k in _dep_keys(t, P, v))
+                ready = all(k in done for k in _dep_keys(t, P, v, rcs))
                 if not ready:
                     break
                 es, g = dep_times(t)
@@ -324,7 +374,8 @@ def retime_with_comm(sched: Schedule, tc: float,
     return out
 
 
-def _dep_keys(t: Task, P: int, v: int):
+def _dep_keys(t: Task, P: int, v: int,
+              r_chunks: FrozenSet[int] = frozenset()):
     if t.kind == F:
         if t.stage > 0:
             return [(F, t.mb, t.chunk, t.stage - 1)]
@@ -333,7 +384,11 @@ def _dep_keys(t: Task, P: int, v: int):
         return []
     if t.kind == W:
         return [(B, t.mb, t.chunk, t.stage)]
+    if t.kind == R:
+        return [(F, t.mb, t.chunk, t.stage)]
     deps = [(F, t.mb, t.chunk, t.stage)]
+    if t.chunk in r_chunks:
+        deps.append((R, t.mb, t.chunk, t.stage))
     if t.stage < P - 1:
         deps.append((B, t.mb, t.chunk, t.stage + 1))
     elif t.chunk < v - 1:

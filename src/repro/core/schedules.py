@@ -44,8 +44,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.schedule import (B, F, HALF, Schedule, Task, W, from_half,
-                                 retime_with_comm, to_half)
+from repro.core.schedule import (B, F, HALF, R, Schedule, Task, W,
+                                 from_half, retime_with_comm, to_half)
 
 FWD, BWD = 1.0, 2.0
 BWD_IN, BWD_W = 1.0, 1.0     # split backward: input-grad + weight-grad
@@ -210,7 +210,15 @@ def chronos_recomp(P: int, m: int, v: int = 2, rho: float = 1.0,
                    recomp_chunks: int = 1) -> Schedule:
     """Recompute the ``recomp_chunks`` shallowest chunks with per-chunk
     recompute fraction ``rho``.  v=2, rho=1 uses the paper's closed form;
-    other configs use greedy periodic placement."""
+    other configs use greedy periodic placement.
+
+    The replay is emitted as an explicit fourth task kind ``R``
+    (``rho * f`` grains) immediately preceding the chunk's plain
+    ``b``-grain backward on the same stage — the task-table compiler
+    lowers it to a rematerialization tick with its own ring buffer, and
+    the SPMD executor replays the forward from the stored boundary
+    checkpoint (gradients bitwise-equal to the no-recompute path, see
+    ``tests/helpers/split_fused_check.py --pair recomp``)."""
     return _chronos_greedy(P, m, v, rho, recomp_chunks)
 
 
@@ -289,13 +297,22 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
                     dep = to_half(idx[(B, 0, c + 1, 0)].end)
                 else:
                     dep = to_half(idx[(B, 0, c, s + 1)].end)
-                # recompute prefix may start before the gradient arrives
+                # the recompute replay may start before the gradient
+                # arrives (it only needs the boundary checkpoint)
                 th = place(s, dep - rech, durh)
                 if th is None or th + rech < dep:
                     th = place(s, dep, durh)
                 if th is None:
                     return None
-                tk = Task(B, 0, c, s, from_half(th), dur, recomp=rec)
+                if rech:
+                    # explicit R task (replay) + plain backward, placed
+                    # back-to-back as one occupancy block
+                    rk = Task(R, 0, c, s, from_half(th), rec)
+                    idx[rk.key()] = rk
+                    t0_tasks.append(rk)
+                    tk = Task(B, 0, c, s, from_half(th + rech), BWD)
+                else:
+                    tk = Task(B, 0, c, s, from_half(th), BWD)
                 idx[tk.key()] = tk
                 t0_tasks.append(tk)
                 claim(s, th, durh)
@@ -498,5 +515,15 @@ def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
     (``v=``) — their schedules carry the third task kind ``W`` and set
     ``Schedule.w``; the task-table compiler and SPMD runtime switch to
     the input-grad/weight-grad split automatically.
+    Explicit-recompute schedules (``chronos_recomp``) carry the fourth
+    task kind ``R`` (``F -> R -> B`` per rematerialized chunk); the
+    task-table compiler shrinks their activation ring to the F->R
+    window, adds an R->B remat ring, and the SPMD runtime replays under
+    ``jax.checkpoint``-equivalent semantics with gradients bitwise-equal
+    to the no-recompute path.
+
+    A rendered timeline gallery for every generator lives in
+    ``docs/SCHEDULES.md`` (regenerated by
+    ``scripts/render_schedules.py``).
     """
     return REGISTRY[name](P, m, **kw)

@@ -16,7 +16,8 @@ shift, backward shift, chunk hops).  The table compiler:
 
 Op codes: 0 idle | 1 fwd-mid | 2 fwd-first | 3 fwd-last (turnaround) |
           4 bwd-mid | 5 bwd-first | 6 bwd-last |
-          7 wgrad-mid | 8 wgrad-first | 9 wgrad-last
+          7 wgrad-mid | 8 wgrad-first | 9 wgrad-last |
+          10 remat-mid | 11 remat-first | 12 remat-last
 Send codes: 0 none | 1 fwd-shift | 2 hop F (P-1 -> 0) |
             3 bwd-shift | 4 hop B (0 -> P-1)
 
@@ -27,6 +28,16 @@ gradient) into a W-stash ring; the matching wgrad tick (op 7-9) reads
 the stash and accumulates the weight gradients.  ``wstash_depth`` sizes
 that ring per chunk exactly like ``act_depth`` sizes the activation
 ring — from the schedule's max B->W in-flight count.
+
+Explicit-recompute schedules (those carrying ``R`` tasks, e.g.
+``chronos_recomp``): for rematerialized chunks the activation stash
+shrinks to *boundary payloads only* with an F->R lifetime — the remat
+tick (op 10-12) reads the stored boundary checkpoint, replays the chunk
+forward, and hands the payload off to a rematerialization ring
+(``rmt_depth``, R->B lifetime) that the chunk's backward consumes.
+``validate_table`` runs a FIFO-safety pass over both rings: a slot
+written at F (resp. R) must stay live until its matching R (resp. B)
+reads it.
 """
 from __future__ import annotations
 
@@ -36,10 +47,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.schedule import B, F, Schedule, W, _dep_keys
+from repro.core.schedule import B, F, R, Schedule, W, _dep_keys
 
 (IDLE, FWD_MID, FWD_FIRST, FWD_LAST, BWD_MID, BWD_FIRST, BWD_LAST,
- WGT_MID, WGT_FIRST, WGT_LAST) = range(10)
+ WGT_MID, WGT_FIRST, WGT_LAST, RCP_MID, RCP_FIRST, RCP_LAST) = range(13)
 SEND_NONE, SEND_FWD, SEND_HOPF, SEND_BWD, SEND_HOPB = range(5)
 
 
@@ -58,21 +69,29 @@ class TaskTable:
     recv_f: np.ndarray           # [T, P] F-queue slot written this tick (-1)
     recv_b: np.ndarray           # [T, P] B-queue slot written this tick (-1)
     w_slot: np.ndarray           # [T, P] W-stash slot: write at B, read at W
+    r_slot: np.ndarray           # [T, P] remat-ring slot: write at R, read at B
     fq_depth: int                # F payload queue depth
     bq_depth: int
-    act_depth: Dict[int, int]    # chunk -> activation slots
+    act_depth: Dict[int, int]    # chunk -> activation slots (F->R lifetime
+                                 # for rematerialized chunks, F->B otherwise)
     wstash_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
+    rmt_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
     name: str = ""
 
     @property
     def has_w(self) -> bool:
         return bool(self.wstash_depth)
 
+    @property
+    def has_r(self) -> bool:
+        return bool(self.rmt_depth)
+
     def arrays(self):
-        """Stacked int32 [T, P, 9] for device transfer."""
+        """Stacked int32 [T, P, 10] for device transfer."""
         return np.stack([self.op, self.chunk, self.mb, self.src_slot,
                          self.act_slot, self.send, self.recv_f,
-                         self.recv_b, self.w_slot], axis=-1).astype(np.int32)
+                         self.recv_b, self.w_slot,
+                         self.r_slot], axis=-1).astype(np.int32)
 
 
 def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
@@ -85,6 +104,8 @@ def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
     first, last = chunk == 0 and stage == 0, chunk == v - 1 and stage == P - 1
     if kind == W:
         return WGT_FIRST if first else (WGT_LAST if last else WGT_MID)
+    if kind == R:
+        return RCP_FIRST if first else (RCP_LAST if last else RCP_MID)
     if first:
         return BWD_FIRST
     if last:
@@ -97,7 +118,7 @@ def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
         if stage < P - 1:
             return SEND_FWD
         return SEND_HOPF if chunk < v - 1 else SEND_NONE
-    if kind == W:
+    if kind in (W, R):
         return SEND_NONE
     if stage > 0:
         return SEND_BWD
@@ -106,6 +127,7 @@ def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
 
 def build_task_table(sched: Schedule) -> TaskTable:
     P, v, m = sched.P, sched.v, sched.m
+    rcs = sched.r_chunks()
 
     # ---- tick assignment (topological levels, stage order preserved) ----
     tasks = sorted(sched.tasks, key=lambda t: (t.start, t.kind == B,
@@ -114,7 +136,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
     stage_last = [-1] * P
     for t in tasks:
         lo = stage_last[t.stage] + 1
-        for dep in _dep_keys(t, P, v):
+        for dep in _dep_keys(t, P, v, rcs):
             if dep[3] != t.stage:
                 lo = max(lo, tick[dep] + 1)     # cross-stage: 1-tick latency
             else:
@@ -123,17 +145,19 @@ def build_task_table(sched: Schedule) -> TaskTable:
         stage_last[t.stage] = lo
     T = max(tick.values()) + 1
 
-    def ring_depth(open_kind, close_kind):
+    def ring_depth(open_kind, close_kind, chunks=None):
         """chunk -> max slots live between open_kind and close_kind ticks
-        (the worst in-flight count over all stages)."""
+        (the worst in-flight count over all stages).  ``close_kind`` may
+        be a per-chunk callable."""
         depth: Dict[int, int] = {}
-        for c in range(v):
+        for c in (range(v) if chunks is None else chunks):
+            ck = close_kind(c) if callable(close_kind) else close_kind
             worst = 1
             for s in range(P):
                 events = []
                 for i in range(m):
                     events.append((tick[(open_kind, i, c, s)], 1))
-                    events.append((tick[(close_kind, i, c, s)], -1))
+                    events.append((tick[(ck, i, c, s)], -1))
                 events.sort()
                 cur = peak = 0
                 for _, d in events:
@@ -143,11 +167,14 @@ def build_task_table(sched: Schedule) -> TaskTable:
             depth[c] = worst
         return depth
 
-    # activation rings live F -> B; W-stash rings (split backward:
-    # boundary payload + upstream grad residuals) live B -> W
-    act_depth = ring_depth(F, B)
+    # activation rings hold boundary payloads: lifetime F -> R for
+    # rematerialized chunks (the remat tick takes over), F -> B otherwise.
+    # W-stash rings (split backward: boundary payload + upstream grad
+    # residuals) live B -> W; remat rings live R -> B.
+    act_depth = ring_depth(F, lambda c: R if c in rcs else B)
     has_w = sched.has_w
     wstash_depth: Dict[int, int] = ring_depth(B, W) if has_w else {}
+    rmt_depth: Dict[int, int] = ring_depth(R, B, sorted(rcs)) if rcs else {}
 
     # ---- payload edges & queue coloring ----
     # F payload: F(i,c,s) -> F(i,c,s+1) | F(i,c,P-1) -> F(i,c+1,0)
@@ -214,6 +241,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
     rcf = -np.ones(shape, np.int32)
     rcb = -np.ones(shape, np.int32)
     wsl = -np.ones(shape, np.int32)
+    rsl = -np.ones(shape, np.int32)
 
     for t in sched.tasks:
         tt, s = tick[t.key()], t.stage
@@ -225,8 +253,17 @@ def build_task_table(sched: Schedule) -> TaskTable:
         # W-stash slot (FIFO by mb): written at the B tick, read at W
         if has_w and t.kind in (B, W):
             wsl[tt, s] = t.mb % wstash_depth[t.chunk]
-        # boundary activation slot (FIFO by mb)
-        if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST):
+        # remat-ring slot (FIFO by mb): written at R, read at the B.
+        # First-position blocks have no boundary payload to hand off
+        # (their input is the token batch, re-fetched at B time).
+        if t.chunk in rcs and t.kind in (R, B) \
+                and oc not in (RCP_FIRST, BWD_FIRST):
+            rsl[tt, s] = t.mb % rmt_depth[t.chunk]
+        # boundary activation slot (FIFO by mb); rematerialized chunks
+        # retire their act slot at the R tick, so their B reads the
+        # remat ring instead
+        if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST, RCP_FIRST) \
+                and not (t.kind == B and t.chunk in rcs):
             act[tt, s] = t.mb % act_depth[t.chunk]
         # input queue slot
         if t.kind == F and oc not in (FWD_FIRST,):
@@ -247,13 +284,17 @@ def build_task_table(sched: Schedule) -> TaskTable:
 
     return TaskTable(P=P, v=v, m=m, T=T, op=op, chunk=chunk, mb=mbt,
                      src_slot=src, act_slot=act, send=snd, recv_f=rcf,
-                     recv_b=rcb, w_slot=wsl, fq_depth=fq_depth,
+                     recv_b=rcb, w_slot=wsl, r_slot=rsl, fq_depth=fq_depth,
                      bq_depth=bq_depth, act_depth=act_depth,
-                     wstash_depth=wstash_depth, name=sched.name)
+                     wstash_depth=wstash_depth, rmt_depth=rmt_depth,
+                     name=sched.name)
 
 
 def validate_table(tab: TaskTable) -> None:
-    """Re-derive invariants: every task present once; reads see writes."""
+    """Re-derive invariants: every task present once; reads see writes;
+    every stash ring (W-stash, remat, and the act ring of rematerialized
+    chunks) is FIFO-safe — a slot is never overwritten before its
+    matching reader retires it."""
     P, v, m = tab.P, tab.v, tab.m
     seen = set()
     for t in range(tab.T):
@@ -265,13 +306,15 @@ def validate_table(tab: TaskTable) -> None:
                 kind = F
             elif o in (WGT_MID, WGT_FIRST, WGT_LAST):
                 kind = W
+            elif o in (RCP_MID, RCP_FIRST, RCP_LAST):
+                kind = R
             else:
                 kind = B
             key = (kind, int(tab.mb[t, s]), int(tab.chunk[t, s]), s)
             assert key not in seen, f"duplicate {key}"
             seen.add(key)
     kinds = 3 if tab.has_w else 2
-    assert len(seen) == kinds * P * v * m
+    assert len(seen) == kinds * P * v * m + len(tab.rmt_depth) * P * m
     # W-stash ring: the slot written at a B tick must stay live (not be
     # overwritten by a later B) until its matching W tick reads it.
     # mb % depth is only sound for FIFO retirement — enforce it here
@@ -294,6 +337,37 @@ def validate_table(tab: TaskTable) -> None:
                         f"holding its mb"
                     del live[key]
             assert not live, f"stage {s}: unread W-stash slots {live}"
+    # remat ring: written at the R tick, read (and retired) at the
+    # chunk's B tick; and the act ring of rematerialized chunks:
+    # written at F, retired at R.  mb % depth is only FIFO-sound when
+    # retirement order matches arrival order — enforce both here.
+    if tab.has_r:
+        rcs = set(tab.rmt_depth)
+        for (wr_ops, rd_ops, slots, label) in (
+                ((RCP_MID, RCP_FIRST, RCP_LAST),
+                 (BWD_MID, BWD_FIRST, BWD_LAST), tab.r_slot, "remat"),
+                ((FWD_MID, FWD_FIRST, FWD_LAST),
+                 (RCP_MID, RCP_FIRST, RCP_LAST), tab.act_slot, "act(F->R)")):
+            for s in range(P):
+                live: Dict[Tuple[int, int], int] = {}
+                for t in range(tab.T):
+                    o = tab.op[t, s]
+                    c = int(tab.chunk[t, s])
+                    if c not in rcs or int(slots[t, s]) < 0:
+                        continue
+                    key = (c, int(slots[t, s]))
+                    if o in wr_ops:
+                        assert key not in live, \
+                            f"stage {s} tick {t}: {label} ring {key} " \
+                            f"overwritten before mb {live[key]} read it"
+                        live[key] = int(tab.mb[t, s])
+                    elif o in rd_ops:
+                        assert live.get(key) == int(tab.mb[t, s]), \
+                            f"stage {s} tick {t}: {label} ring read " \
+                            f"{key} not holding its mb"
+                        del live[key]
+                assert not live, \
+                    f"stage {s}: unread {label} ring slots {live}"
     # queue write-before-read per slot
     for qname, rc, depth in (("F", tab.recv_f, tab.fq_depth),
                              ("B", tab.recv_b, tab.bq_depth)):

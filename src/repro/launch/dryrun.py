@@ -43,8 +43,28 @@ def default_plan(cfg, multi_pod: bool) -> ParallelPlan:
         pp_axis="pod" if multi_pod else None)
 
 
+def budget_plan(cfg, mesh, shape, hbm_gb: float) -> ParallelPlan:
+    """Plan a multi-pod train cell with ``repro.plan`` under an HBM
+    budget instead of the fixed default: schedule family, recompute
+    depth, and offload depth come out of the design-space search
+    (``--plan-hbm-gb``).  Single-pod cells have no pipeline axis, so
+    the planner's schedule space does not apply there — ``run_cell``
+    keeps the default plan for them."""
+    from repro.plan import plan_under_budget
+    ep = plan_under_budget(
+        cfg, pp=mesh.shape["pod"], tp=mesh.shape["model"],
+        hbm_bytes=hbm_gb * 1e9,
+        microbatch=int(os.environ.get("DRYRUN_MICROBATCH", "2")),
+        seq_len=shape.seq_len)
+    print(f"[plan] {cfg.name}: {ep.summary()}")
+    return ep.parallel_plan(
+        pp_axis="pod",
+        zero_stage=int(os.environ.get("DRYRUN_ZERO_STAGE", "3")))
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             pipeline: bool = True, mesh=None) -> dict:
+             pipeline: bool = True, mesh=None,
+             plan_hbm_gb: float = 0.0) -> dict:
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     skip = cell_is_skipped(cfg, shape)
@@ -55,7 +75,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = mesh if mesh is not None else make_production_mesh(
         multi_pod=multi_pod)
     chips = mesh.size
-    plan = default_plan(cfg, multi_pod)
+    plan = budget_plan(cfg, mesh, shape, plan_hbm_gb) \
+        if plan_hbm_gb > 0 and shape.kind == "train" and multi_pod \
+        else default_plan(cfg, multi_pod)
     ocfg = OptimizerConfig()
     t0 = time.time()
 
@@ -144,6 +166,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--plan-hbm-gb", type=float, default=0.0,
+                    help="plan train cells with repro.plan under this "
+                         "per-device HBM budget (GB) instead of the "
+                         "fixed chronos default")
     args = ap.parse_args()
     os.makedirs(RESULTS, exist_ok=True)
 
@@ -172,7 +198,8 @@ def main():
         try:
             res = run_cell(arch, shape_name, mp,
                            pipeline=not args.no_pipeline,
-                           mesh=mesh_cache[mp])
+                           mesh=mesh_cache[mp],
+                           plan_hbm_gb=args.plan_hbm_gb)
         except Exception:
             failures += 1
             res = {"arch": arch, "shape": shape_name, "multi_pod": mp,

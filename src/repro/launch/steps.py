@@ -280,15 +280,46 @@ def make_serve_steps(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
 # pipeline (multi-pod) train step
 # ---------------------------------------------------------------------------
 
+def plan_schedule_kwargs(plan: ParallelPlan) -> Dict[str, Any]:
+    """ParallelPlan -> schedule-generator kwargs beyond (P, m, v).
+
+    ``chronos_recomp`` is driven by the plan's :class:`RecomputeConfig`
+    (the ``num_recomp_chunks`` shallowest chunks replay, emitted as
+    explicit ``R`` tasks); ``1f1b``/``gpipe`` take the uniform-recompute
+    fraction (1F1B+R baseline); other generators need nothing extra."""
+    rc = plan.recompute
+    if plan.schedule == "chronos_recomp" and rc.mode != "none":
+        return {"recomp_chunks": min(rc.num_recomp_chunks,
+                                     max(plan.num_chunks - 1, 1))}
+    if plan.schedule in ("1f1b", "gpipe") and rc.mode == "uniform" \
+            and rc.uniform_frac > 0:
+        return {"recomp": rc.uniform_frac}
+    return {}
+
+
 def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
                              plan: ParallelPlan, ocfg: OptimizerConfig,
-                             mesh, rules):
+                             mesh, rules, extras: Optional[Dict] = None):
     """ChronosPipe train step with pp mapped onto rules['pp'] (the "pod"
     axis in the production multi-pod mesh).  Returns the same 4-tuple as
-    make_train_step."""
+    make_train_step.
+
+    Chronos-Offload (``plan.offload.enabled``): the device optimizer
+    state covers only the *shallow* chunks plus the shared params; the
+    step then returns a 4-tuple ``(params, opt_state, metrics,
+    deep_grads)`` where ``deep_grads`` are the gradients of the
+    ``plan.offload.num_offload_chunks`` deepest chunks — the caller
+    (``repro.launch.train.train``) submits them to a
+    :class:`~repro.optim.offload.ChronosOffloadRunner`, whose host-side
+    AdamW overlaps the pipeline's cooldown/warm-up bubbles, and uploads
+    the refreshed bf16 deep weights before the next step's deep forward
+    (Eq. (5)/(7) windows of the paper).  Pass ``extras`` (a dict) to
+    receive the built ``PipelineSpec`` under ``extras["spec"]``.
+    """
     from repro.core.pipeline_runtime import (init_pipeline_params,
                                              make_pipeline_spec,
                                              make_train_grads_fn)
+    from repro.optim import merge_deep_shallow, split_deep_shallow
     pp_axis = rules["pp"]
     P_ = mesh.shape[pp_axis]
     dp = _axes_size(mesh, rules.get("dp"))
@@ -297,7 +328,15 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
 
     spec = make_pipeline_spec(
         cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
-        seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis)
+        seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis,
+        **plan_schedule_kwargs(plan))
+    if extras is not None:
+        extras["spec"] = spec
+    offload = plan.offload.enabled and plan.offload.num_offload_chunks > 0
+    n_off = plan.offload.num_offload_chunks
+    if offload:
+        assert n_off < plan.num_chunks, \
+            "offload must leave at least one shallow chunk on device"
 
     holder = {}
 
@@ -318,7 +357,18 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     # pipeline block leaves already carry the "pp" logical axis first
     p_shard = resolve_shardings(params_s, logical, mesh,
                                 {**rules, "pp": pp_axis})
-    opt_s = jax.eval_shape(adamw_init, params_s)
+    vch = plan.num_chunks
+
+    def _shallow_of(ptree):
+        """Device-optimizer subset: shallow chunks + shared params (the
+        deep chunks' master/momenta live on the host under offload)."""
+        return {"blocks": split_deep_shallow(ptree["blocks"], vch,
+                                             n_off)[0],
+                **{k: ptree[k] for k in ptree if k != "blocks"}}
+
+    opt_params_s = jax.eval_shape(_shallow_of, params_s) if offload \
+        else params_s
+    opt_s = jax.eval_shape(adamw_init, opt_params_s)
     s_logical = zero_state_specs(logical, max(plan.zero_stage, 1))
     s_logical = {k: (v if k == "blocks" else drop_fsdp(logical[k]))
                  for k, v in s_logical.items()}
@@ -353,14 +403,39 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
             grads, metrics = grads_fn(params, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32) / m,
                                  grads)
-            master, opt_state, om = adamw_update(grads, opt_state, ocfg)
-            params = cast_like(master, params)
-            return params, opt_state, {**metrics, **om}
+            if not offload:
+                master, opt_state, om = adamw_update(grads, opt_state,
+                                                     ocfg)
+                params = cast_like(master, params)
+                return params, opt_state, {**metrics, **om}
+            # Chronos-Offload: device AdamW updates shallow chunks +
+            # shared params; the deep chunks' gradients ship to the host
+            # optimizer (caller drives the submit/collect overlap).
+            g_shallow, g_deep = split_deep_shallow(grads["blocks"], vch,
+                                                   n_off)
+            g_dev = {"blocks": g_shallow,
+                     **{k: grads[k] for k in grads if k != "blocks"}}
+            master, opt_state, om = adamw_update(g_dev, opt_state, ocfg)
+            p_shallow, p_deep = split_deep_shallow(params["blocks"], vch,
+                                                   n_off)
+            new_shallow = cast_like(master["blocks"], p_shallow)
+            shared_new = {k: cast_like(master[k], params[k])
+                          for k in master if k != "blocks"}
+            params = {"blocks": merge_deep_shallow(new_shallow, p_deep),
+                      **shared_new}
+            return params, opt_state, {**metrics, **om}, g_deep
 
+    metric_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                             {"loss": 0, "n_microbatches": 0,
+                              "grad_norm": 0, "lr": 0})
     in_shardings = (p_shard, o_shard, b_shard)
-    out_shardings = (
-        p_shard, o_shard,
-        jax.tree.map(lambda _: NamedSharding(mesh, P()),
-                     {"loss": 0, "n_microbatches": 0, "grad_norm": 0,
-                      "lr": 0}))
+    if offload:
+        deep_s = jax.eval_shape(
+            lambda p: split_deep_shallow(p["blocks"], vch, n_off)[1],
+            params_s)
+        deep_shard = resolve_shardings(deep_s, logical["blocks"], mesh,
+                                       {**rules, "pp": pp_axis})
+        out_shardings = (p_shard, o_shard, metric_sh, deep_shard)
+    else:
+        out_shardings = (p_shard, o_shard, metric_sh)
     return step, (params_s, opt_s, structs), in_shardings, out_shardings

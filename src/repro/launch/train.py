@@ -22,7 +22,8 @@ import numpy as np
 from repro.configs.base import TrainConfig
 from repro.data import DataPipeline, SyntheticLM
 from repro.ft import Action, Checkpointer, HealthMonitor
-from repro.launch.steps import make_train_step, resolve_shardings, _specs_only
+from repro.launch.steps import (make_pipeline_train_step, make_train_step,
+                                resolve_shardings, _specs_only)
 from repro.models import LM
 from repro.models.sharding import shard_env
 from repro.optim import (ChronosOffloadRunner, adamw_init, adamw_update,
@@ -33,8 +34,15 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
           steps: Optional[int] = None,
           data_source=None, log: Callable[[str], None] = print):
     """Returns final metrics dict.  Restores from tc.checkpoint_dir if a
-    checkpoint exists (crash recovery / elastic restart)."""
+    checkpoint exists (crash recovery / elastic restart).
+
+    When ``tc.plan.pp_axis`` is set the run dispatches to
+    :func:`train_pipeline` — the ChronosPipe SPMD executor with optional
+    Chronos-Offload host optimizer for the deepest chunks."""
     cfg, shape, plan, ocfg = tc.model, tc.shape, tc.plan, tc.optimizer
+    if plan.pp_axis is not None:
+        return train_pipeline(tc, mesh=mesh, rules=rules, steps=steps,
+                              data_source=data_source, log=log)
     steps = steps or ocfg.total_steps
     from repro.jax_compat import make_mesh, set_mesh
     mesh = mesh or make_mesh((jax.device_count(),), ("data",))
@@ -128,3 +136,172 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
             "steps": len(losses),
             "wall_s": time.time() - t_start,
             "median_step_s": monitor.median_step}
+
+
+def train_pipeline(tc: TrainConfig, *, mesh,
+                   rules: Optional[Dict] = None,
+                   steps: Optional[int] = None, data_source=None,
+                   log: Callable[[str], None] = print):
+    """ChronosPipe training driver: the SPMD pipeline executor with
+    optional Chronos-Offload (§5.1) for the deepest chunks.
+
+    Offload flow (double-buffered across step boundaries): the jitted
+    step updates shallow chunks + shared params on device and returns
+    the deep chunks' gradients; ``runner.submit`` copies them to the
+    host (the paper's PCIe-down during the cooldown bubble) and kicks a
+    background AdamW, which overlaps checkpointing / logging / the next
+    batch fetch; ``runner.collect`` at the top of the next iteration
+    uploads the refreshed bf16 deep weights before the deep chunks'
+    forward needs them (Eq. (7) warm-up window).  The returned metrics
+    carry an ``offload`` report validating the measured overlap against
+    :class:`repro.core.analysis.OffloadTiming` Eqs. (5)/(7).
+
+    Host master weights/momenta are rebuilt from the checkpointed params
+    on restart (device opt state is checkpointed; host momenta are not).
+    """
+    cfg, shape, plan, ocfg = tc.model, tc.shape, tc.plan, tc.optimizer
+    steps = steps or ocfg.total_steps
+    from repro.core.pipeline_runtime import init_pipeline_params
+    from repro.jax_compat import set_mesh
+    assert mesh is not None and plan.pp_axis in mesh.axis_names, \
+        "train_pipeline needs a mesh carrying plan.pp_axis"
+    rules = dict(rules) if rules is not None else {"dp": None, "tp": None,
+                                                   "fsdp": None}
+    rules["pp"] = plan.pp_axis
+
+    extras: Dict = {}
+    step_fn, (params_s, opt_s, structs), in_sh, out_sh = \
+        make_pipeline_train_step(cfg, shape, plan, ocfg, mesh, rules,
+                                 extras=extras)
+    spec = extras["spec"]
+    m, mbg = structs["tokens"].shape[:2]
+    v = plan.num_chunks
+    n_off = plan.offload.num_offload_chunks
+    offload = plan.offload.enabled and n_off > 0
+
+    mesh_ctx = set_mesh(mesh)
+    mesh_ctx.__enter__()
+    with shard_env(mesh, rules):
+        params, _ = init_pipeline_params(jax.random.key(tc.seed), cfg,
+                                         spec.layout)
+
+    if offload:
+        shallow0, deep0 = split_deep_shallow(params["blocks"], v, n_off)
+        opt_state = adamw_init(
+            {"blocks": shallow0,
+             **{k: params[k] for k in params if k != "blocks"}})
+        runner = ChronosOffloadRunner(deep0, ocfg)
+    else:
+        opt_state = adamw_init(params)
+        runner = None
+
+    source = data_source or SyntheticLM(cfg.vocab_size, shape.seq_len,
+                                        seed=tc.seed)
+    pipe = DataPipeline(source, global_batch=mbg * m, microbatches=m,
+                        prefetch=2).start()
+    ck = Checkpointer(tc.checkpoint_dir, keep=tc.keep_checkpoints)
+    monitor = HealthMonitor()
+
+    start_step = 0
+    latest = ck.latest_step()
+    if latest is not None:
+        restored, extra = ck.restore({"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        if "data" in extra:
+            pipe.load_state(extra["data"])
+        start_step = int(extra.get("step", latest))
+        if runner is not None:
+            runner = ChronosOffloadRunner(
+                split_deep_shallow(params["blocks"], v, n_off)[1], ocfg)
+        log(f"[train-pp] restored checkpoint step {start_step}")
+
+    jit_step = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+
+    losses = []
+    pending = False
+    collect_wait_s = 0.0
+    t_start = time.time()
+    for step in range(start_step, steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(b) for k, b in pipe.next().items()}
+        if pending:
+            t_c = time.time()
+            new_deep = runner.collect()       # bf16 upload (warm-up win)
+            collect_wait_s += time.time() - t_c
+            shallow, _ = split_deep_shallow(params["blocks"], v, n_off)
+            params = {**params,
+                      "blocks": merge_deep_shallow(shallow, new_deep)}
+            pending = False
+        out = jit_step(params, opt_state, batch)
+        if offload:
+            params, opt_state, metrics, deep_grads = out
+            runner.submit(deep_grads)         # grads down + host AdamW
+            pending = True
+        else:
+            params, opt_state, metrics = out
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.time() - t0
+        action = monitor.record_step(dt)
+        if step % tc.log_every == 0:
+            log(f"[train-pp] step {step} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.2f}s)")
+        if action == Action.CHECKPOINT_NOW or (
+                step and step % tc.checkpoint_every == 0):
+            if pending:
+                # fold the in-flight host update in first — otherwise
+                # the checkpoint's deep chunks would be one step stale
+                new_deep = runner.collect()
+                shallow, _ = split_deep_shallow(params["blocks"], v,
+                                                n_off)
+                params = {**params,
+                          "blocks": merge_deep_shallow(shallow, new_deep)}
+                pending = False
+            ck.save_async(step, {"params": params, "opt": opt_state},
+                          extra={"step": step + 1, "data": pipe.state()})
+        if action == Action.RESTART:
+            log("[train-pp] persistent straggler -> checkpoint + abort")
+            break
+    if pending:
+        new_deep = runner.collect()
+        shallow, _ = split_deep_shallow(params["blocks"], v, n_off)
+        params = {**params, "blocks": merge_deep_shallow(shallow,
+                                                         new_deep)}
+    ck.save(steps, {"params": params, "opt": opt_state},
+            extra={"step": steps, "data": pipe.state()})
+    pipe.stop()
+    mesh_ctx.__exit__(None, None, None)
+
+    tp = mesh.shape[rules["tp"]] if rules.get("tp") is not None else 1
+    out = {"losses": losses,
+           "final_loss": losses[-1] if losses else None,
+           "steps": len(losses), "wall_s": time.time() - t_start,
+           "median_step_s": monitor.median_step,
+           "schedule": spec.table.name}
+    if offload:
+        out["offload"] = offload_report(tc, spec, runner, tp=tp,
+                                        collect_wait_s=collect_wait_s)
+    return out
+
+
+def offload_report(tc: TrainConfig, spec, runner, *, tp: int,
+                   collect_wait_s: float) -> Dict:
+    """Measured offload overlap vs the paper's Eq. (5)/(7) model."""
+    from repro.core.analysis import offload_timing
+    plan, shape = tc.plan, tc.shape
+    P_ = spec.table.P
+    ot = offload_timing(
+        tc.model, seq_len=shape.seq_len, microbatch=spec.mbB,
+        pp=P_, tp=tp, pcie_gbps=plan.offload.pcie_gbps,
+        cpu_flops=plan.offload.cpu_flops,
+        offload_frac=plan.offload.num_offload_chunks / plan.num_chunks)
+    submits = max(int(runner.stats["submits"]), 1)
+    return {
+        "submits": int(runner.stats["submits"]),
+        "overlapped": int(runner.stats["overlapped"]),
+        "measured_overlap_frac": runner.stats["overlapped"] / submits,
+        "collect_wait_s": collect_wait_s,
+        "eq5_offload_ok": ot.offload_ok,
+        "eq7_upload_ok": ot.upload_ok,
+        "predicted_overlap_ratio": ot.overlap_ratio,
+    }

@@ -1,0 +1,18 @@
+"""``repro.plan`` — memory-budget design-space planner.
+
+Public API:
+
+- :func:`plan_under_budget` — one-call planner: ModelConfig + (pp, tp)
+  + HBM budget -> :class:`ExecutablePlan` (best feasible schedule /
+  recompute / offload combination).
+- :func:`enumerate_points` / :class:`PlannerQuery` — the full evaluated
+  design space, for DSE sweeps (``benchmarks/planner_dse.py``).
+- :class:`DesignPoint` — one evaluated candidate (schedule metrics,
+  byte-level memory, max trainable layers, offload overlap, score).
+- :class:`ExecutablePlan` — winning point bound to its query; builds
+  the validated ``Schedule``, compiled ``TaskTable``, and a
+  ``ParallelPlan`` consumable by ``repro.launch``.
+"""
+from repro.plan.planner import (DesignPoint, ExecutablePlan,  # noqa: F401
+                                PlannerQuery, enumerate_points,
+                                plan_under_budget)

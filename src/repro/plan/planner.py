@@ -1,0 +1,274 @@
+"""Memory-budget design-space planner (paper Figs. 9b/15/16).
+
+Given a :class:`~repro.configs.base.ModelConfig`, a (pp, tp) mesh shape,
+and an HBM budget, search the registered schedule families x recompute
+ratio x offload depth using the schedule IR's constructed metrics (peak
+activation, bubble, ideal-compute fraction) and the byte-level
+:class:`~repro.core.analysis.MemoryModel`, and emit an *executable*
+plan: a :class:`~repro.configs.base.ParallelPlan` plus the constructed
+:class:`~repro.core.schedule.Schedule` and compiled
+:class:`~repro.core.tasktable.TaskTable` the SPMD runtime plays.
+
+This is the selective-recompute-vs-memory tradeoff of "Pipeline
+Parallelism with Controllable Memory" (Qi et al.) and the
+schedule/memory co-optimization of "OptPipe" (Li et al.), restricted to
+the closed design space this repo constructs exactly — so the search is
+exhaustive enumeration, not an MILP.
+
+Example (the paper's llama70b testbed; see ``benchmarks/planner_dse.py``)::
+
+    from repro.configs.llama70b_paper import CONFIG
+    from repro.plan import plan_under_budget
+    ep = plan_under_budget(CONFIG, pp=8, tp=8, hbm_bytes=64e9)
+    ep.point.schedule, ep.point.offload_chunks
+    ep.schedule()          # validated Schedule
+    ep.task_table()        # compiled TaskTable
+    ep.parallel_plan()     # ParallelPlan for launch/dryrun/train
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import (ModelConfig, OffloadConfig, ParallelPlan,
+                                RecomputeConfig)
+from repro.core import schedules as S
+from repro.core.analysis import (MemoryModel, max_trainable_layers,
+                                 offload_timing)
+
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class PlannerQuery:
+    """One design-space question: what fits under ``hbm_bytes``?"""
+    cfg: ModelConfig
+    pp: int
+    tp: int
+    hbm_bytes: float
+    microbatch: int = 2
+    seq_len: int = 4096
+    reserve: float = 2.0e9          # workspace/fragmentation headroom
+    max_v: int = 3                  # largest chunk count searched
+    # activation-estimator calibration (1.0 = this repo's Megatron-
+    # selective accounting; ``benchmarks.common.PAPER_ACT_SCALE``
+    # reproduces the paper's full-storage-no-SP accounting)
+    act_scale: float = 1.0
+    # Chronos-Offload feasibility model inputs (Eq. 4-7)
+    gpu_flops: float = 100e12
+    pcie_gbps: float = 32.0
+    cpu_flops: float = 2.0e12
+
+    @property
+    def microbatch_tokens(self) -> int:
+        return self.microbatch * self.seq_len
+
+    def memory_model(self) -> MemoryModel:
+        mm = MemoryModel.build(self.cfg, tp=self.tp)
+        if self.act_scale != 1.0:
+            mm = dataclasses.replace(
+                mm,
+                act_per_token_layer=mm.act_per_token_layer * self.act_scale)
+        return mm
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    """One evaluated (schedule, recompute, offload) candidate."""
+    schedule: str                   # registry name
+    sched_kwargs: Tuple[Tuple[str, object], ...]
+    v: int
+    recomp_chunks: int              # shallowest chunks replayed (R tasks)
+    uniform_recomp: float           # 1F1B+R-style fraction (else 0)
+    offload_chunks: int             # deepest chunks on the host optimizer
+    # schedule-IR metrics (units of m_a / fractions)
+    act_frac: float
+    bubble: float
+    compute_frac: float
+    # byte-level evaluation under the query
+    act_bytes: float
+    state_bytes: float
+    total_bytes: float
+    fits: bool
+    max_layers: int                 # max trainable layers under the budget
+    offload_overlap: float          # Eq. (5) hidden fraction (1.0 = free)
+    score: float                    # throughput proxy used for ranking
+
+    @property
+    def offload_frac(self) -> float:
+        return self.offload_chunks / self.v if self.v else 0.0
+
+    def describe(self) -> str:
+        bits = [self.schedule if self.v < 2
+                else f"{self.schedule}(v={self.v})"]
+        if self.recomp_chunks:
+            bits.append(f"rc={self.recomp_chunks}")
+        if self.uniform_recomp:
+            bits.append(f"R={self.uniform_recomp:.0%}")
+        if self.offload_chunks:
+            bits.append(f"offload={self.offload_chunks}/{self.v}")
+        return "+".join(bits)
+
+
+class ExecutablePlan:
+    """A winning :class:`DesignPoint` bound to its query — buildable
+    into the exact artifacts the runtime consumes."""
+
+    def __init__(self, query: PlannerQuery, point: DesignPoint,
+                 m: Optional[int] = None):
+        self.query = query
+        self.point = point
+        self.m = m or 4 * query.pp
+
+    def schedule(self):
+        """Construct + validate the winning schedule."""
+        return S.get_schedule(self.point.schedule, self.query.pp, self.m,
+                              **dict(self.point.sched_kwargs))
+
+    def task_table(self):
+        from repro.core.tasktable import build_task_table, validate_table
+        tab = build_task_table(self.schedule())
+        validate_table(tab)
+        return tab
+
+    def parallel_plan(self, *, pp_axis: Optional[str] = "pp",
+                      microbatch_size: Optional[int] = None,
+                      zero_stage: int = 1) -> ParallelPlan:
+        p = self.point
+        if p.recomp_chunks:
+            rc = RecomputeConfig(mode="chronos",
+                                 num_recomp_chunks=p.recomp_chunks)
+        elif p.uniform_recomp:
+            rc = RecomputeConfig(mode="uniform",
+                                 uniform_frac=p.uniform_recomp)
+        else:
+            rc = RecomputeConfig(mode="none")
+        off = OffloadConfig(enabled=p.offload_chunks > 0,
+                            num_offload_chunks=max(p.offload_chunks, 1),
+                            pcie_gbps=self.query.pcie_gbps,
+                            cpu_flops=self.query.cpu_flops)
+        return ParallelPlan(
+            pp_axis=pp_axis, schedule=p.schedule, num_chunks=p.v,
+            microbatch_size=(microbatch_size
+                             if microbatch_size is not None
+                             else self.query.microbatch),
+            zero_stage=zero_stage, recompute=rc, offload=off)
+
+    def summary(self) -> Dict:
+        p = self.point
+        return {
+            "pick": p.describe(), "schedule": p.schedule, "v": p.v,
+            "recomp_chunks": p.recomp_chunks,
+            "offload_chunks": p.offload_chunks,
+            "act_frac_of_ma": round(p.act_frac, 4),
+            "bubble": round(p.bubble, 4),
+            "compute_frac": round(p.compute_frac, 4),
+            "total_GB": round(p.total_bytes / GB, 2),
+            "hbm_GB": round(self.query.hbm_bytes / GB, 2),
+            "max_layers": p.max_layers,
+            "offload_overlap": round(p.offload_overlap, 4),
+            "score": round(p.score, 4),
+        }
+
+
+# ---------------------------------------------------------------------------
+# candidate space
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _metrics(name: str, P: int, m: int,
+             kwargs: Tuple[Tuple[str, object], ...]):
+    """(act_frac, bubble, compute_frac, has_cooldown) of a constructed
+    schedule — cached, the same schedule backs many byte-level points."""
+    sched = S.get_schedule(name, P, m, **dict(kwargs))
+    gaps = sched.warmup_cooldown_bubbles(stage=P - 1)
+    return (sched.peak_activation(count_transient=False),
+            sched.bubble_ratio(),
+            sched.ideal_compute_fraction(),
+            sum(b - a for a, b in gaps) > 1e-9)
+
+
+def _candidates(q: PlannerQuery):
+    """(schedule name, kwargs, v, recomp_chunks, uniform_recomp)."""
+    out = []
+    for r in (0.0, 0.25, 0.5, 0.75):
+        out.append(("1f1b", {"recomp": r} if r else {}, 1, 0, r))
+    out.append(("zb_h1", {}, 1, 0, 0.0))
+    for v in range(2, q.max_v + 1):
+        out.append(("interleaved", {"v": v}, v, 0, 0.0))
+        out.append(("chronos", {"v": v}, v, 0, 0.0))
+        out.append(("chronos_zb", {"v": v}, v, 0, 0.0))
+        for rc in range(1, v):
+            out.append(("chronos_recomp", {"v": v, "recomp_chunks": rc},
+                        v, rc, 0.0))
+    out.append(("chronos_zero2", {"v": 2, "group": 2}, 2, 0, 0.0))
+    return out
+
+
+def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
+    """Evaluate the full design space under ``q``, best score first.
+
+    Offload depths: 0..v-1 deepest chunks for the chronos family (whose
+    cooldown bubbles are the §5.1 overlap windows); non-chronos
+    schedules get depth 0 only."""
+    mm = q.memory_model()
+    m_sched = 4 * q.pp
+    L = q.cfg.num_layers
+    points = []
+    for name, kw, v, rc, unif in _candidates(q):
+        kwt = tuple(sorted(kw.items()))
+        act_frac, bubble, cf, has_cooldown = _metrics(name, q.pp, m_sched,
+                                                      kwt)
+        depths = range(v if (has_cooldown and name.startswith("chronos"))
+                       else 1)
+        for n_off in depths:
+            if n_off >= v:
+                continue
+            off_frac = n_off / v
+            act = act_frac * mm.m_a(q.microbatch_tokens, L)
+            state = mm.model_state(L, q.pp, q.tp, offload_frac=off_frac)
+            total = act + state + q.reserve
+            overlap = 1.0
+            if n_off:
+                overlap = offload_timing(
+                    q.cfg, seq_len=q.seq_len, microbatch=q.microbatch,
+                    pp=q.pp, tp=q.tp, gpu_flops=q.gpu_flops,
+                    pcie_gbps=q.pcie_gbps, cpu_flops=q.cpu_flops,
+                    offload_frac=off_frac).overlap_ratio
+            # throughput proxy: useful-compute fraction, degraded by the
+            # exposed (non-overlapped) share of the offload work
+            score = cf * (1.0 - 0.1 * (1.0 - overlap))
+            max_l = max_trainable_layers(
+                q.cfg, hbm_bytes=q.hbm_bytes, pp=q.pp, tp=q.tp,
+                microbatch_tokens=q.microbatch_tokens,
+                act_frac_of_ma=act_frac, offload_frac=off_frac,
+                reserve=q.reserve, memory_model=mm)
+            points.append(DesignPoint(
+                schedule=name, sched_kwargs=kwt, v=v, recomp_chunks=rc,
+                uniform_recomp=unif, offload_chunks=n_off,
+                act_frac=act_frac, bubble=bubble, compute_frac=cf,
+                act_bytes=act, state_bytes=state, total_bytes=total,
+                fits=total <= q.hbm_bytes, max_layers=max_l,
+                offload_overlap=overlap, score=score))
+    points.sort(key=lambda p: (-p.score, p.total_bytes))
+    return points
+
+
+def plan_under_budget(cfg: ModelConfig, *, pp: int, tp: int,
+                      hbm_bytes: float, **kw) -> ExecutablePlan:
+    """Best feasible plan for ``cfg`` under ``hbm_bytes`` per device:
+    highest throughput proxy among the points that fit; byte ties break
+    toward lower memory.  Raises ``ValueError`` (naming the closest
+    point) when nothing in the design space fits."""
+    q = PlannerQuery(cfg=cfg, pp=pp, tp=tp, hbm_bytes=hbm_bytes, **kw)
+    points = enumerate_points(q)
+    feasible = [p for p in points if p.fits]
+    if not feasible:
+        closest = min(points, key=lambda p: p.total_bytes)
+        raise ValueError(
+            f"no schedule fits {hbm_bytes / GB:.1f} GB for "
+            f"{cfg.name} (pp={pp}, tp={tp}); closest is "
+            f"{closest.describe()} at {closest.total_bytes / GB:.1f} GB")
+    return ExecutablePlan(q, feasible[0])

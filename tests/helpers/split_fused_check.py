@@ -1,17 +1,28 @@
-"""Subprocess helper: split-backward pipeline gradients (zb_h1: B =
-input-grad + residual stash, W = deferred weight-grad) must match the
-fused-backward pipeline gradients (1f1b: one jax.vjp per B task) on the
-same parameters and batch.
+"""Subprocess helper: pairwise gradient-equivalence checks between two
+pipeline schedules on the same parameters and batch.
 
-Usage: python split_fused_check.py [P] [m]
-Exits 0 when max |g_split - g_fused| <= 1e-5; prints MAXERR=... for the
-parent test to parse.
+Pairs:
+    zb      1f1b (fused backward) vs zb_h1 (B = input-grad + residual
+            stash, W = deferred weight-grad); tolerance 1e-5.
+    recomp  chronos (no recompute) vs chronos_recomp rho=1 (explicit R
+            tasks: boundary checkpoint handed act-ring -> remat-ring,
+            replay fused into B's vjp); the compiled gradient math is
+            identical, so the tolerance is 0.0 — bitwise.
+
+Usage: python split_fused_check.py [--pair zb|recomp] [P] [m]
+Exits 0 when max |g_a - g_b| <= tol; prints MAXERR=... for the parent
+test to parse.
 """
 import os
 import sys
 
-P_ = int(sys.argv[1]) if len(sys.argv) > 1 else 2
-m = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+args = sys.argv[1:]
+pair = "zb"
+if args and args[0] == "--pair":
+    pair = args[1]
+    args = args[2:]
+P_ = int(args[0]) if len(args) > 0 else 2
+m = int(args[1]) if len(args) > 1 else 4
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
 
 import jax  # noqa: E402
@@ -28,28 +39,38 @@ cfg = get_reduced("tinyllama-1.1b")
 mbB, S = 2, 17
 mesh = make_mesh((P_,), ("pp",))
 
-spec_fused = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
+if pair == "zb":
+    spec_a = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
                                 seq_len=S, schedule="1f1b")
-spec_split = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
+    spec_b = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
                                 seq_len=S, schedule="zb_h1")
-assert spec_split.table.has_w and not spec_fused.table.has_w
+    assert spec_b.table.has_w and not spec_a.table.has_w
+    tol = 1e-5
+elif pair == "recomp":
+    spec_a = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="chronos")
+    spec_b = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="chronos_recomp",
+                                rho=1.0, recomp_chunks=1)
+    assert spec_b.table.has_r and not spec_a.table.has_r
+    tol = 0.0
+else:
+    raise SystemExit(f"unknown pair {pair!r}")
 
-params, _ = init_pipeline_params(jax.random.key(0), cfg, spec_fused.layout)
+params, _ = init_pipeline_params(jax.random.key(0), cfg, spec_a.layout)
 tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                             cfg.vocab_size)
 batch = {"tokens": tokens}
 
 with shard_env(mesh, {}):
-    g_fused, met_f = jax.jit(make_train_grads_fn(spec_fused, mesh))(
-        params, batch)
-    g_split, met_s = jax.jit(make_train_grads_fn(spec_split, mesh))(
-        params, batch)
+    g_a, met_a = jax.jit(make_train_grads_fn(spec_a, mesh))(params, batch)
+    g_b, met_b = jax.jit(make_train_grads_fn(spec_b, mesh))(params, batch)
 
-errs = [abs(float(met_f["loss"]) - float(met_s["loss"]))]
-for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_split)):
+errs = [abs(float(met_a["loss"]) - float(met_b["loss"]))]
+for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):
     errs.append(float(jnp.max(jnp.abs(
         a.astype(jnp.float32) - b.astype(jnp.float32)))))
 maxerr = max(errs)
-print(f"MAXERR={maxerr:.3e} loss_fused={float(met_f['loss']):.6f} "
-      f"loss_split={float(met_s['loss']):.6f}")
-sys.exit(0 if maxerr <= 1e-5 else 1)
+print(f"MAXERR={maxerr:.3e} pair={pair} loss_a={float(met_a['loss']):.6f} "
+      f"loss_b={float(met_b['loss']):.6f}")
+sys.exit(0 if maxerr <= tol else 1)

@@ -1,0 +1,133 @@
+"""Direct coverage of core/analysis.py's paper equations, cross-checked
+against the paper's Table/Fig numbers for the llama70b config
+(complementing the benchmark-mediated checks in test_paper_claims.py)."""
+import math
+import os
+import sys
+
+import pytest
+
+# repo root on the path for the `benchmarks` package (calibration const)
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from repro.core import analysis as AN  # noqa: E402
+from repro.core import schedules as S  # noqa: E402
+from repro.configs.llama70b_paper import with_layers  # noqa: E402
+
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# §4.1 / §4.2 closed-form peaks
+# ---------------------------------------------------------------------------
+
+def test_chronos_peak_frac_closed_form():
+    # tight against the constructed schedule where the ceil form is exact
+    for P in (4, 8, 16):
+        assert abs(AN.chronos_peak_frac(P)
+                   - S.chronos(P, 4 * P, 2).peak_activation()) < 1e-9
+    # the paper's 8-stage testbed value and the large-P limit (75% m_a)
+    assert abs(AN.chronos_peak_frac(8) - 0.8125) < 1e-9
+    assert abs(AN.chronos_peak_frac(256) - 0.75) < 5e-3
+
+
+def test_chronos_recomp_peak_frac_closed_form():
+    for P in (4, 8, 16, 32):
+        assert AN.chronos_recomp_peak_frac(P) == (P // 2) / (2 * P)
+        assert abs(AN.chronos_recomp_peak_frac(P) - 0.25) < 1e-9
+        cons = S.chronos_recomp(P, 4 * P).peak_activation(
+            count_transient=False)
+        assert abs(cons - AN.chronos_recomp_peak_frac(P)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9(b) max trainable model size
+# ---------------------------------------------------------------------------
+
+def test_max_trainable_layers_reproduces_fig9b_ladder():
+    """The paper's ladder at PP8/TP8, 32 GB, micro-batch 2 @ 4K under
+    the calibrated (paper-accounting) memory model; first three rungs
+    exact, headline ratios >= 2.4x / >= 1.5x."""
+    from benchmarks.common import memory_model
+    mm = memory_model(with_layers(8), tp=8)
+    cfg = with_layers(48)
+
+    def ml(frac, off=0.0):
+        return AN.max_trainable_layers(
+            cfg, hbm_bytes=32 * GB, pp=8, tp=8, microbatch_tokens=2 * 4096,
+            act_frac_of_ma=frac, offload_frac=off, reserve=1 * GB,
+            memory_model=mm)
+
+    f1 = ml(S.onef1b(8, 32).peak_activation())
+    ch = ml(S.chronos(8, 32, 2).peak_activation())
+    r50 = ml(S.onef1b(8, 32, recomp=0.5).peak_activation(
+        count_transient=False))
+    cr = ml(S.chronos_recomp(8, 32).peak_activation(count_transient=False))
+    call = ml(S.chronos_recomp(8, 32).peak_activation(
+        count_transient=False), off=0.5)
+    assert (f1, ch, r50) == (40, 48, 64)       # paper's exact rungs
+    assert cr > r50                            # recomp-on beats 1F1B+R
+    assert call / f1 >= 2.4                    # headline 2.4x
+    assert call / r50 >= 1.5                   # headline 1.5x
+    # monotone ladder: each technique adds trainable depth
+    assert f1 < ch < r50 <= cr < call
+
+
+def test_max_trainable_layers_monotone_in_budget_and_offload():
+    cfg = with_layers(48)
+    kw = dict(pp=8, tp=8, microbatch_tokens=8192, act_frac_of_ma=0.25)
+    a = AN.max_trainable_layers(cfg, hbm_bytes=16 * GB, **kw)
+    b = AN.max_trainable_layers(cfg, hbm_bytes=32 * GB, **kw)
+    c = AN.max_trainable_layers(cfg, hbm_bytes=32 * GB, offload_frac=0.5,
+                                **kw)
+    assert a <= b <= c
+
+
+# ---------------------------------------------------------------------------
+# §5.1 offload timing (Eq. 4-7, Fig. 14)
+# ---------------------------------------------------------------------------
+
+def _overlap(pp, seq, gpu_flops, cfg=with_layers(16)):
+    return AN.offload_timing(cfg, seq_len=seq, microbatch=2, pp=pp, tp=8,
+                             gpu_flops=gpu_flops).overlap_ratio
+
+
+def test_offload_timing_reproduces_fig14_points():
+    """Calibrate the one free constant (accelerator FLOP/s) on the
+    paper's PP4/4K point (45.45% overlap), then the model must *predict*
+    the paper's other two scalings."""
+    lo, hi = 1e12, 2e15
+    for _ in range(60):
+        mid = (lo * hi) ** 0.5
+        if _overlap(4, 4096, mid) > 0.4545:
+            lo = mid
+        else:
+            hi = mid
+    flops = (lo * hi) ** 0.5
+    assert abs(_overlap(4, 4096, flops) - 0.4545) < 1e-3
+    assert _overlap(8, 4096, flops) > 0.85      # paper: 94.55%
+    assert _overlap(4, 8192, flops) > 0.9       # paper: 100%
+
+
+def test_offload_timing_eq5_eq7_identities():
+    t = AN.OffloadTiming(t_bwd=2.0, t_fwd=1.0, t_step=1.0, t_upload=0.2,
+                         p=8)
+    p = t.p
+    # Eq. (5)/(7) window sizes are the §4.1 cooldown/warm-up bubbles
+    assert t.available_offload == \
+        (p - math.ceil((2 * p - 3) / 6) - 1) * t.t_bwd / (2 * p)
+    assert t.available_upload == \
+        (p - math.ceil((p - 3) / 6) - 1) * t.t_fwd / (2 * p)
+    # overlap_ratio and exposed_time agree about hidden vs exposed work
+    need = t.t_step / (2 * p)
+    assert t.overlap_ratio == pytest.approx(
+        min(1.0, t.available_offload / need))
+    assert t.exposed_time == pytest.approx(
+        max(0.0, need - t.available_offload) * 2 * p)
+    assert t.offload_ok == (t.exposed_time <= 1e-9)
+    # fully hidden when the step cost shrinks to zero
+    free = AN.OffloadTiming(t_bwd=2.0, t_fwd=1.0, t_step=0.0,
+                            t_upload=0.0, p=8)
+    assert free.offload_ok and free.upload_ok
+    assert free.overlap_ratio == 1.0 and free.exposed_time == 0.0

@@ -1,0 +1,34 @@
+"""Docs stay generated-from-code: the schedule gallery regenerates
+byte-identical, and the architecture doc's examples run (same checks
+scripts/ci.sh performs, enforced from pytest too)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def test_schedule_gallery_in_sync():
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts",
+                                      "render_schedules.py"), "--check"],
+        env=_env(), cwd=REPO, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, \
+        f"stale docs/SCHEDULES.md:\n{r.stdout}\n{r.stderr}"
+
+
+def test_docs_doctests_pass():
+    r = subprocess.run(
+        [sys.executable, "-m", "doctest",
+         os.path.join(REPO, "docs", "ARCHITECTURE.md"),
+         os.path.join(REPO, "docs", "SCHEDULES.md")],
+        env=_env(), cwd=REPO, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, f"doctest failed:\n{r.stdout}\n{r.stderr}"

@@ -148,7 +148,8 @@ def test_schedule_validity_invariants(case, P, mmul):
         assert t.key() not in keys
         keys.add(t.key())
     kinds = 3 if sched.has_w else 2
-    assert len(keys) == kinds * P * sched.v * m
+    assert len(keys) == kinds * P * sched.v * m \
+        + len(sched.r_chunks()) * P * m
     # peak activation sane (gpipe worst case holds all m microbatches)
     pk = sched.peak_activation()
     assert 0 < pk <= m / P + 2.0 + 1e-9
