@@ -9,7 +9,13 @@
 #    from the registered generators — regenerate and fail on diff —
 #    and the docs' `>>>` code blocks run under doctest.
 # 3. Run the fast suite (slow marker deselected) through the same entry
-#    the benchmark harness uses (benchmarks/run.py --check).
+#    the benchmark harness uses (benchmarks/run.py --check).  The
+#    repro.seqpipe tests ride in tier-1 with the same slow split: IR /
+#    table / planner / prefix-KV-attention unit tests plus the
+#    `split_fused_check.py --pair seq` SPMD gradient equivalence and
+#    the trace-only seq train-step check stay fast (< ~1 min), while
+#    the single-device-autodiff pipeline comparisons and the multi-step
+#    seq training driver run under @slow.
 #
 # Full suite (all @slow cases, ~10+ min on CPU):
 #   RUN_SLOW=1 PYTHONPATH=src python -m pytest -q

@@ -59,6 +59,17 @@ GALLERY = [
      "Chronos slot classes with the backward split: freed grains plus "
      "the alignment bubbles absorb the `W` tasks — same span, more "
      "useful compute."),
+    ("seq1f1b", dict(P=4, m=3, n_seq=2),
+     "Sequence-chunked 1F1B (`repro.seqpipe`): every microbatch splits "
+     "into `n_seq` causally-ordered chunks — forwards hand a KV prefix "
+     "down the stage (ascending seq order), backwards accumulate dKV "
+     "(descending) — so ~P *chunk* units are in flight instead of P "
+     "microbatches: peak activation ~1/n_seq at a *better* bubble."),
+    ("chronos_seq", dict(P=4, m=2, v=2, n_seq=2),
+     "Chronos periodic slot classes over sequence-chunk units: the "
+     "backward phase shifts by n_seq-1 cycles and runs each "
+     "microbatch's chunks in reverse, keeping the shallow-chunk "
+     "temporal locality per unit."),
 ]
 
 KIND_GLYPH = {"F": "F", "B": "B", "W": "W", "R": "R"}
@@ -102,6 +113,9 @@ def metrics_block(sched: Schedule) -> str:
     if sched.has_r:
         extra.append(f"explicit recompute of chunks "
                      f"{sorted(sched.r_chunks())} (R tasks)")
+    if sched.n_seq > 1:
+        extra.append(f"{sched.n_seq} sequence chunks per microbatch "
+                     f"(KV-prefix / dKV deps, repro.seqpipe)")
     if extra:
         lines.append(f"- {'; '.join(extra)}")
     return "\n".join(lines)

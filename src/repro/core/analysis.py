@@ -90,6 +90,9 @@ class MemoryModel:
     state_bytes_per_param: float    # full resident optimizer state
     params_per_layer: float
     params_embed: float
+    # K+V bytes per token per layer (bf16, / TP; 0 for non-attention
+    # layers, layer-kind-averaged) — the seqpipe KV-carry ring term
+    kv_per_token_layer: float = 0.0
 
     @staticmethod
     def build(cfg: ModelConfig, tp: int = 1, sp: bool = True,
@@ -129,13 +132,23 @@ class MemoryModel:
         act_mean = sum(acts) / max(len(acts), 1)
         emb = BF16 * cfg.vocab_size / tp            # logits/token
         n_layer = (cfg.param_count() - _embed_params(cfg)) / cfg.num_layers
+        n_attn = sum(1 for i in range(cfg.num_layers)
+                     if cfg.layer_kind(i) == "attn")
+        kv_mean = (2 * BF16 * cfg.num_kv_heads * cfg.resolved_head_dim
+                   / tp) * n_attn / max(cfg.num_layers, 1)
         return MemoryModel(act_mean, emb, state_bytes, n_layer,
-                           _embed_params(cfg))
+                           _embed_params(cfg), kv_per_token_layer=kv_mean)
 
     # -- queries ------------------------------------------------------------
     def m_a(self, tokens_per_microbatch: int, num_layers: float) -> float:
         """Whole-net activation bytes for one microbatch (paper's m_a)."""
         return self.act_per_token_layer * tokens_per_microbatch * num_layers
+
+    def kv_a(self, tokens_per_microbatch: int, num_layers: float) -> float:
+        """Whole-net K/V bytes for one microbatch — the unit of the
+        seqpipe KV-carry ring (full-sequence K/V per in-flight
+        microbatch; the dKV twin doubles it at the call site)."""
+        return self.kv_per_token_layer * tokens_per_microbatch * num_layers
 
     def model_state(self, num_layers: float, pp: int, tp: int,
                     dp_shard: int = 1,

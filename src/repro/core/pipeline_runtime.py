@@ -175,26 +175,47 @@ class PipelineSpec:
     enc_len: int                # whisper encoder positions (0 if none)
     pp_axis: str = "pp"
     aux_weight: float = 0.01
+    n_seq: int = 1              # sequence chunks (repro.seqpipe)
 
 
 def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
                        microbatch: int, seq_len: int, schedule: str,
-                       pp_axis: str = "pp", **sched_kw) -> PipelineSpec:
+                       pp_axis: str = "pp", n_seq: int = 1,
+                       **sched_kw) -> PipelineSpec:
     layout = StageLayout.build(cfg, P, v)
+    seq_schedules = ("seq1f1b", "chronos_seq")
+    if schedule in seq_schedules:
+        sched_kw["n_seq"] = n_seq
+    else:
+        assert n_seq == 1, f"{schedule} is not sequence-chunked"
     sched = get_schedule(schedule, P, m, **({"v": v} if schedule in
                                             ("chronos", "interleaved",
                                              "chronos_zero2", "chronos_zb",
-                                             "chronos_recomp")
+                                             "chronos_recomp",
+                                             "chronos_seq")
                                             else {}),
                          **sched_kw)
-    if schedule in ("1f1b", "zb_h1"):
+    if schedule in ("1f1b", "zb_h1", "seq1f1b"):
         assert v == 1, f"{schedule} is a v=1 schedule, got v={v}"
     table = build_task_table(sched)
     prefix = cfg.vision.num_patches if cfg.vision is not None else 0
     enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
+    if n_seq > 1:
+        # the seq executor threads a KV prefix through chunked causal
+        # attention — cross-token state beyond KV (SSM scans, encoder
+        # cross-attention, VLM prefixes, MoE aux weighting) is out of
+        # scope for the seq-chunked runtime
+        assert cfg.ssm is None and cfg.encdec is None \
+            and cfg.vision is None and cfg.moe is None, \
+            f"seq-chunked runtime supports dense attention LMs, " \
+            f"got {cfg.name}"
+        assert (seq_len - 1) % n_seq == 0, \
+            f"seq_len-1 = {seq_len - 1} not divisible by n_seq={n_seq}"
+        assert not table.has_w, \
+            "split-backward seq schedules are IR/table-only for now"
     return PipelineSpec(cfg=cfg, layout=layout, table=table, mbB=microbatch,
                         S=seq_len - 1 + prefix, prefix=prefix,
-                        enc_len=enc_len, pp_axis=pp_axis)
+                        enc_len=enc_len, pp_axis=pp_axis, n_seq=n_seq)
 
 
 def _to_varying(a, axis: str):
@@ -278,12 +299,19 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
     """Returns fn(params, batch) -> (grads, metrics) running the full
     pipeline schedule.  batch: tokens [m, mbB, S_tokens] (+ optional
     patch_embeds [m, mbB, prefix, d], frame_embeds [m, mbB, enc_len, d],
-    loss_mask [m, mbB, S_tokens-1])."""
+    loss_mask [m, mbB, S_tokens-1]).
+
+    Sequence-chunked specs (``spec.n_seq > 1``) dispatch to the
+    :mod:`repro.seqpipe` executor, which adds the KV-carry / dKV rings
+    for chunked causal attention."""
+    if spec.n_seq > 1:
+        from repro.seqpipe.runtime import make_seq_train_grads_fn
+        return make_seq_train_grads_fn(spec, mesh)
     cfg = spec.cfg
     tab = spec.table
     P_, v = tab.P, tab.v
     pp = spec.pp_axis
-    table_arr = jnp.asarray(tab.arrays())              # [T, P, 10]
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 12]
     act_offsets = np.zeros(v, np.int64)
     total_act = 0
     for c in range(v):
@@ -390,7 +418,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
 
         def tick(carry, t):
-            row = table_arr[t, s_idx]                  # [9]
+            row = table_arr[t, s_idx]                  # [12]
             op, c, mb = row[0], row[1], row[2]
             src, aslot, snd = row[3], row[4], row[5]
             rcf, rcb = row[6], row[7]

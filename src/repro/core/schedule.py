@@ -49,6 +49,25 @@ a recompute *prefix* folded into ``B`` (``dur = recomp + b``) — remains
 supported for the uniform-recompute baselines (1F1B+R, GPipe+R) where
 the replay is never separately schedulable.
 
+Sequence chunking (``repro.seqpipe``, Seq1F1B / SlimPipe lineage): a
+schedule may split every microbatch along the sequence dimension into
+``n_seq`` causally-ordered chunks; ``Task.seq`` carries the chunk index
+``q`` and the scheduling unit becomes (mb, layer-chunk, stage, seq).
+The chunks are *not* independent — causal attention threads a KV prefix
+through the forwards and a dKV accumulation through the backwards, both
+stage-local:
+
+    F(i,c,s,q)  <- F(i,c,s,q-1)        (q>0, same stage: KV prefix)
+    B(i,c,s,q)  <- B(i,c,s,q+1)        (q<n_seq-1, same stage: dKV carry)
+
+and every cross-stage edge above applies per sequence chunk (payloads
+shrink to 1/n_seq of a microbatch boundary).  The turnaround only
+exists for the *last* chunk; earlier chunks' final-stage backwards are
+unblocked by the dKV carry plus their own loss slice.  One grain is
+then T_fwd/(v*P*n_seq) and a unit's activation grain is
+1/(v*P*n_seq) of m_a — peak activation falls ~1/n_seq because only
+O(P) units (not O(P) full microbatches) are in flight.
+
 All constructed start times are exact multiples of half a grain; the
 module-level :data:`HALF`/:func:`to_half` helpers let schedule builders
 do occupancy arithmetic in integer half-grains with no float slop.
@@ -83,7 +102,7 @@ def from_half(h: int) -> float:
 
 @dataclass
 class Task:
-    kind: str                    # "F" | "B" | "W"
+    kind: str                    # "F" | "B" | "W" | "R"
     mb: int
     chunk: int
     stage: int
@@ -91,6 +110,7 @@ class Task:
     dur: float
     recomp: float = 0.0          # recompute prefix inside a B task
     comm: float = 0.0            # synchronous P2P stall folded into dur
+    seq: int = 0                 # sequence-chunk index (seqpipe family)
 
     @property
     def end(self) -> float:
@@ -106,7 +126,7 @@ class Task:
         return self.start + self.recomp
 
     def key(self):
-        return (self.kind, self.mb, self.chunk, self.stage)
+        return (self.kind, self.mb, self.chunk, self.stage, self.seq)
 
 
 @dataclass
@@ -126,6 +146,9 @@ class Schedule:
     # schedule has W tasks, ``b`` is the input-gradient duration and
     # ``b + w`` must equal the fused backward cost.
     w: float = 0.0
+    # sequence chunks per microbatch (seqpipe family; 1 = whole-sequence
+    # tasks, the pre-seqpipe behavior)
+    n_seq: int = 1
 
     @property
     def has_w(self) -> bool:
@@ -151,44 +174,56 @@ class Schedule:
     # -- validity ---------------------------------------------------------
     def check(self, tc: float = 0.0) -> None:
         idx = self.by_key()
-        P, v, m = self.P, self.v, self.m
+        P, v, m, ns = self.P, self.v, self.m, self.n_seq
         rcs = self.r_chunks()
         kinds = 3 if self.has_w else 2
-        n_expect = kinds * P * v * m + len(rcs) * P * m
+        n_expect = (kinds * P * v * m + len(rcs) * P * m) * ns
         assert len(self.tasks) == n_expect, \
             f"expected {n_expect} tasks, got {len(self.tasks)}"
         for t in self.tasks:
+            q = t.seq
             # (dep time, label, time the dep must be satisfied by)
             deps: List[Tuple[float, str, float]] = []
             if t.kind == F:
                 if t.stage > 0:
-                    deps.append((idx[(F, t.mb, t.chunk, t.stage - 1)].end + tc,
+                    deps.append((idx[(F, t.mb, t.chunk, t.stage - 1,
+                                      q)].end + tc,
                                  "fwd chain", t.start))
                 elif t.chunk > 0:
-                    deps.append((idx[(F, t.mb, t.chunk - 1, P - 1)].end + tc,
+                    deps.append((idx[(F, t.mb, t.chunk - 1, P - 1,
+                                      q)].end + tc,
                                  "fwd chunk hop", t.start))
+                if q > 0:
+                    deps.append((idx[(F, t.mb, t.chunk, t.stage,
+                                      q - 1)].end,
+                                 "kv prefix", t.start))
             elif t.kind == W:
-                deps.append((idx[(B, t.mb, t.chunk, t.stage)].end, "own bwd",
-                             t.start))
+                deps.append((idx[(B, t.mb, t.chunk, t.stage, q)].end,
+                             "own bwd", t.start))
             elif t.kind == R:
-                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd",
-                             t.start))
+                deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
+                             "own fwd", t.start))
             else:
-                deps.append((idx[(F, t.mb, t.chunk, t.stage)].end, "own fwd",
-                             t.start))
+                deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
+                             "own fwd", t.start))
                 if t.chunk in rcs:
                     assert t.recomp == 0.0, \
                         f"{t.key()}: explicit R task and recompute prefix"
-                    deps.append((idx[(R, t.mb, t.chunk, t.stage)].end,
+                    deps.append((idx[(R, t.mb, t.chunk, t.stage, q)].end,
                                  "own remat", t.start))
+                if q < ns - 1:
+                    deps.append((idx[(B, t.mb, t.chunk, t.stage,
+                                      q + 1)].end,
+                                 "dkv carry", t.grad_needed_at))
                 if t.stage < P - 1:
-                    deps.append((idx[(B, t.mb, t.chunk, t.stage + 1)].end + tc,
+                    deps.append((idx[(B, t.mb, t.chunk, t.stage + 1,
+                                      q)].end + tc,
                                  "bwd chain", t.grad_needed_at))
                 elif t.chunk < v - 1:
-                    deps.append((idx[(B, t.mb, t.chunk + 1, 0)].end + tc,
+                    deps.append((idx[(B, t.mb, t.chunk + 1, 0, q)].end + tc,
                                  "bwd chunk hop", t.grad_needed_at))
                 else:
-                    deps.append((idx[(F, t.mb, t.chunk, t.stage)].end,
+                    deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
                                  "turnaround", t.grad_needed_at))
             for d, why, ok_at in deps:
                 assert ok_at >= d - 1e-9, \
@@ -208,9 +243,9 @@ class Schedule:
 
     def total_time_rel(self) -> float:
         """Total time in units of T_fwd (one microbatch full forward):
-        grains are T_fwd/(v*P), so divide by v*P.  Use this to compare
-        schedules with different chunk counts."""
-        return self.total_time() / (self.v * self.P)
+        grains are T_fwd/(v*P*n_seq), so divide by v*P*n_seq.  Use this
+        to compare schedules with different chunk counts."""
+        return self.total_time() / (self.v * self.P * self.n_seq)
 
     def bubble_ratio(self) -> float:
         """Mean idle+comm fraction inside the span (paper's bubble:
@@ -243,27 +278,34 @@ class Schedule:
         Split-backward schedules: the activation is released at the end
         of the input-gradient ``B`` task; deferred ``W`` tasks hold no
         block activation (their residual stash is boundary-payload
-        sized and accounted by the task-table compiler, not here)."""
+        sized and accounted by the task-table compiler, not here).
+
+        Sequence-chunked schedules: the unit shrinks to a partial-
+        sequence grain 1/(v*P*n_seq) of m_a, alive from that seq
+        chunk's F until its own B — early chunks of a microbatch stay
+        resident until their (late) backwards, which the per-unit
+        accounting captures exactly."""
         idx = self.by_key()
-        unit = 1.0 / (self.v * self.P)
+        unit = 1.0 / (self.v * self.P * self.n_seq)
         peaks = []
         for s in range(self.P):
             events = []   # (time, delta)
             for mb in range(self.m):
                 for c in range(self.v):
                     fr = self.stored_frac.get(c, 1.0)
-                    ft = idx[(F, mb, c, s)]
-                    bt = idx[(B, mb, c, s)]
-                    events.append((ft.start, unit * fr))
-                    events.append((bt.end, -unit * fr))
-                    if fr < 1.0 and count_transient:
-                        # transient rematerialized block: alive from the
-                        # replay (explicit R, or B's recompute prefix)
-                        # until the backward releases it
-                        rt = idx.get((R, mb, c, s))
-                        t0 = rt.start if rt is not None else bt.start
-                        events.append((t0, unit * (1.0 - fr)))
-                        events.append((bt.end, -unit * (1.0 - fr)))
+                    for q in range(self.n_seq):
+                        ft = idx[(F, mb, c, s, q)]
+                        bt = idx[(B, mb, c, s, q)]
+                        events.append((ft.start, unit * fr))
+                        events.append((bt.end, -unit * fr))
+                        if fr < 1.0 and count_transient:
+                            # transient rematerialized block: alive from
+                            # the replay (explicit R, or B's recompute
+                            # prefix) until the backward releases it
+                            rt = idx.get((R, mb, c, s, q))
+                            t0 = rt.start if rt is not None else bt.start
+                            events.append((t0, unit * (1.0 - fr)))
+                            events.append((bt.end, -unit * (1.0 - fr)))
             events.sort(key=lambda e: (e[0], e[1]))
             cur = peak = 0.0
             for _, d in events:
@@ -305,39 +347,45 @@ def retime_with_comm(sched: Schedule, tc: float,
     done: Dict[Tuple, float] = {}
     ptr = {s: 0 for s in range(sched.P)}
     free = {s: 0.0 for s in range(sched.P)}
-    P, v = sched.P, sched.v
+    P, v, ns = sched.P, sched.v, sched.n_seq
     rcs = sched.r_chunks()
     n_total = len(sched.tasks)
 
     def dep_times(t: Task) -> Tuple[float, float]:
         """(earliest start, earliest grad_needed_at) constraints."""
         es = 0.0
+        q = t.seq
         if t.kind == F:
             if t.stage > 0:
-                es = done[(F, t.mb, t.chunk, t.stage - 1)] + tc
+                es = done[(F, t.mb, t.chunk, t.stage - 1, q)] + tc
             elif t.chunk > 0:
-                es = done[(F, t.mb, t.chunk - 1, P - 1)] + tc
+                es = done[(F, t.mb, t.chunk - 1, P - 1, q)] + tc
+            if q > 0:       # stage-local KV prefix, no P2P cost
+                es = max(es, done[(F, t.mb, t.chunk, t.stage, q - 1)])
             return es, es
         if t.kind == W:
-            es = done[(B, t.mb, t.chunk, t.stage)]
+            es = done[(B, t.mb, t.chunk, t.stage, q)]
             return es, es
         if t.kind == R:
-            es = done[(F, t.mb, t.chunk, t.stage)]
+            es = done[(F, t.mb, t.chunk, t.stage, q)]
             return es, es
-        es = done[(F, t.mb, t.chunk, t.stage)]
+        es = done[(F, t.mb, t.chunk, t.stage, q)]
         if t.chunk in rcs:
-            es = max(es, done[(R, t.mb, t.chunk, t.stage)])
+            es = max(es, done[(R, t.mb, t.chunk, t.stage, q)])
         if t.stage < P - 1:
-            g = done[(B, t.mb, t.chunk, t.stage + 1)] + tc
+            g = done[(B, t.mb, t.chunk, t.stage + 1, q)] + tc
         elif t.chunk < v - 1:
-            g = done[(B, t.mb, t.chunk + 1, 0)] + tc
+            g = done[(B, t.mb, t.chunk + 1, 0, q)] + tc
         else:
-            g = done[(F, t.mb, t.chunk, t.stage)]
+            g = done[(F, t.mb, t.chunk, t.stage, q)]
+        if q < ns - 1:      # stage-local dKV carry, no P2P cost
+            g = max(g, done[(B, t.mb, t.chunk, t.stage, q + 1)])
         return es, g
 
     def comm_edges(t: Task) -> int:
         """cross-stage inputs + outputs of this task (for sync mode)."""
-        n = len([k for k in _dep_keys(t, P, v, rcs) if k[3] != t.stage])
+        n = len([k for k in _dep_keys(t, P, v, rcs, ns)
+                 if k[3] != t.stage])
         if t.kind == F:
             if t.stage < P - 1 or t.chunk < v - 1:
                 n += 1                      # sends activation onward
@@ -352,7 +400,7 @@ def retime_with_comm(sched: Schedule, tc: float,
         for s in range(sched.P):
             while ptr[s] < len(order[s]):
                 t = order[s][ptr[s]]
-                ready = all(k in done for k in _dep_keys(t, P, v, rcs))
+                ready = all(k in done for k in _dep_keys(t, P, v, rcs, ns))
                 if not ready:
                     break
                 es, g = dep_times(t)
@@ -375,22 +423,28 @@ def retime_with_comm(sched: Schedule, tc: float,
 
 
 def _dep_keys(t: Task, P: int, v: int,
-              r_chunks: FrozenSet[int] = frozenset()):
+              r_chunks: FrozenSet[int] = frozenset(), n_seq: int = 1):
+    q = t.seq
     if t.kind == F:
+        deps = []
         if t.stage > 0:
-            return [(F, t.mb, t.chunk, t.stage - 1)]
-        if t.chunk > 0:
-            return [(F, t.mb, t.chunk - 1, P - 1)]
-        return []
+            deps.append((F, t.mb, t.chunk, t.stage - 1, q))
+        elif t.chunk > 0:
+            deps.append((F, t.mb, t.chunk - 1, P - 1, q))
+        if q > 0:
+            deps.append((F, t.mb, t.chunk, t.stage, q - 1))
+        return deps
     if t.kind == W:
-        return [(B, t.mb, t.chunk, t.stage)]
+        return [(B, t.mb, t.chunk, t.stage, q)]
     if t.kind == R:
-        return [(F, t.mb, t.chunk, t.stage)]
-    deps = [(F, t.mb, t.chunk, t.stage)]
+        return [(F, t.mb, t.chunk, t.stage, q)]
+    deps = [(F, t.mb, t.chunk, t.stage, q)]
     if t.chunk in r_chunks:
-        deps.append((R, t.mb, t.chunk, t.stage))
+        deps.append((R, t.mb, t.chunk, t.stage, q))
+    if q < n_seq - 1:
+        deps.append((B, t.mb, t.chunk, t.stage, q + 1))
     if t.stage < P - 1:
-        deps.append((B, t.mb, t.chunk, t.stage + 1))
+        deps.append((B, t.mb, t.chunk, t.stage + 1, q))
     elif t.chunk < v - 1:
-        deps.append((B, t.mb, t.chunk + 1, 0))
+        deps.append((B, t.mb, t.chunk + 1, 0, q))
     return deps

@@ -171,10 +171,10 @@ def chronos(P: int, m: int, v: int = 2) -> Schedule:
                 if c == 0 and s == 0:
                     t = float(base)
                 elif s == 0:
-                    dep = idx[(F, i, c - 1, P - 1)].end
+                    dep = idx[(F, i, c - 1, P - 1, 0)].end
                     t = _align(dep, (0 + 3 * c) % cyc, cyc)
                 else:
-                    dep = idx[(F, i, c, s - 1)].end
+                    dep = idx[(F, i, c, s - 1, 0)].end
                     t = _align(dep, cls, cyc)
                 tk = Task(F, i, c, s, t, FWD)
                 idx[tk.key()] = tk
@@ -187,12 +187,12 @@ def chronos(P: int, m: int, v: int = 2) -> Schedule:
             for s in reversed(range(P)):
                 cls = (3 * P - 5 - 2 * s + 3 * (v - 1 - c)) % cyc
                 if c == v - 1 and s == P - 1:
-                    t = idx[(F, i, c, P - 1)].end
+                    t = idx[(F, i, c, P - 1, 0)].end
                 elif s == P - 1:
-                    dep = idx[(B, i, c + 1, 0)].end
+                    dep = idx[(B, i, c + 1, 0, 0)].end
                     t = _align(dep, cls, cyc)
                 else:
-                    dep = idx[(B, i, c, s + 1)].end
+                    dep = idx[(B, i, c, s + 1, 0)].end
                     t = _align(dep, cls, cyc)
                 tk = Task(B, i, c, s, t, BWD)
                 idx[tk.key()] = tk
@@ -274,11 +274,11 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
                 if c == 0 and s == 0:
                     dep = 0
                 elif s == 0:
-                    dep = to_half(idx[(F, 0, c - 1, P - 1)].end)
+                    dep = to_half(idx[(F, 0, c - 1, P - 1, 0)].end)
                     if c - 1 < len(delays):
                         dep += delays[c - 1] * HALF
                 else:
-                    dep = to_half(idx[(F, 0, c, s - 1)].end)
+                    dep = to_half(idx[(F, 0, c, s - 1, 0)].end)
                 th = place(s, dep, to_half(FWD))
                 if th is None:
                     return None
@@ -292,11 +292,11 @@ def _chronos_greedy(P: int, m: int, v: int, rho: float,
             durh, rech = to_half(dur), to_half(rec)
             for s in reversed(range(P)):
                 if c == v - 1 and s == P - 1:
-                    dep = to_half(idx[(F, 0, c, P - 1)].end)
+                    dep = to_half(idx[(F, 0, c, P - 1, 0)].end)
                 elif s == P - 1:
-                    dep = to_half(idx[(B, 0, c + 1, 0)].end)
+                    dep = to_half(idx[(B, 0, c + 1, 0, 0)].end)
                 else:
-                    dep = to_half(idx[(B, 0, c, s + 1)].end)
+                    dep = to_half(idx[(B, 0, c, s + 1, 0)].end)
                 # the recompute replay may start before the gradient
                 # arrives (it only needs the boundary checkpoint)
                 th = place(s, dep - rech, durh)
@@ -504,6 +504,10 @@ REGISTRY = {
     "chronos_zb": chronos_zb,
 }
 
+# sequence-chunked generators (repro.seqpipe) register themselves here;
+# the import is at module end so seqpipe.schedules only depends on the
+# leaf IR module (repro.core.schedule), never back on this one.
+
 
 def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
     """Build a validated schedule from :data:`REGISTRY`.
@@ -521,9 +525,23 @@ def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
     window, adds an R->B remat ring, and the SPMD runtime replays under
     ``jax.checkpoint``-equivalent semantics with gradients bitwise-equal
     to the no-recompute path.
+    Sequence-chunked generators (``repro.seqpipe``): ``seq1f1b``
+    (``n_seq=, split=``; v=1) and ``chronos_seq`` (``v=, n_seq=,
+    rho=, recomp_chunks=``) — their tasks carry the fifth scheduling
+    coordinate ``Task.seq`` with causal KV-prefix / dKV-carry deps, and
+    the task-table compiler adds per-microbatch KV-carry + dKV rings.
 
     A rendered timeline gallery for every generator lives in
     ``docs/SCHEDULES.md`` (regenerated by
     ``scripts/render_schedules.py``).
     """
+    if name not in REGISTRY:
+        raise ValueError(
+            f"unknown schedule {name!r}; registered schedules: "
+            f"{', '.join(sorted(REGISTRY))}")
     return REGISTRY[name](P, m, **kw)
+
+
+from repro.seqpipe.schedules import register as _register_seqpipe  # noqa: E402
+
+_register_seqpipe(REGISTRY)

@@ -38,6 +38,20 @@ forward, and hands the payload off to a rematerialization ring
 ``validate_table`` runs a FIFO-safety pass over both rings: a slot
 written at F (resp. R) must stay live until its matching R (resp. B)
 reads it.
+
+Sequence-chunked schedules (``n_seq > 1``, e.g. ``seq1f1b`` /
+``chronos_seq``): the stash unit becomes a (mb, seq) sequence-chunk
+payload (1/n_seq of a boundary) and two new per-microbatch rings
+appear: the KV-carry ring (``kv_depth``; prefix K/V handed from
+F[mb,q-1] to F[mb,q] and replayed by every B; lifetime F[mb,0] ->
+B[mb,0], FIFO by microbatch) and its twin dKV accumulation ring with
+the same slots.  Backwards retire units in *reverse* seq order, so the
+activation ring is no longer FIFO within a microbatch —
+``mb % depth`` slot assignment is replaced by exact interval coloring
+per stage, and ``validate_table`` switches from the FIFO check to a
+general no-overwrite-while-live check over the colored slots.  W-stash
+and remat rings stay FIFO in the *backward* unit order
+``β = mb*n_seq + (n_seq-1-seq)`` (their writers and readers share it).
 """
 from __future__ import annotations
 
@@ -77,6 +91,13 @@ class TaskTable:
     wstash_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
     rmt_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
     name: str = ""
+    # sequence chunking (repro.seqpipe)
+    n_seq: int = 1
+    seq: np.ndarray = None       # [T, P] sequence-chunk index (0 if unused)
+    kv_slot: np.ndarray = None   # [T, P] KV-carry/dKV ring slot (-1)
+    kv_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
+                                 # chunk -> KV-carry slots (per microbatch,
+                                 # lifetime F[mb,0] -> B[mb,0])
 
     @property
     def has_w(self) -> bool:
@@ -87,11 +108,15 @@ class TaskTable:
         return bool(self.rmt_depth)
 
     def arrays(self):
-        """Stacked int32 [T, P, 10] for device transfer."""
+        """Stacked int32 [T, P, 12] for device transfer."""
+        seq = self.seq if self.seq is not None \
+            else np.zeros_like(self.op)
+        kvs = self.kv_slot if self.kv_slot is not None \
+            else -np.ones_like(self.op)
         return np.stack([self.op, self.chunk, self.mb, self.src_slot,
                          self.act_slot, self.send, self.recv_f,
                          self.recv_b, self.w_slot,
-                         self.r_slot], axis=-1).astype(np.int32)
+                         self.r_slot, seq, kvs], axis=-1).astype(np.int32)
 
 
 def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
@@ -126,8 +151,9 @@ def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
 
 
 def build_task_table(sched: Schedule) -> TaskTable:
-    P, v, m = sched.P, sched.v, sched.m
+    P, v, m, ns = sched.P, sched.v, sched.m, sched.n_seq
     rcs = sched.r_chunks()
+    units = [(i, q) for i in range(m) for q in range(ns)]
 
     # ---- tick assignment (topological levels, stage order preserved) ----
     tasks = sorted(sched.tasks, key=lambda t: (t.start, t.kind == B,
@@ -136,7 +162,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
     stage_last = [-1] * P
     for t in tasks:
         lo = stage_last[t.stage] + 1
-        for dep in _dep_keys(t, P, v, rcs):
+        for dep in _dep_keys(t, P, v, rcs, ns):
             if dep[3] != t.stage:
                 lo = max(lo, tick[dep] + 1)     # cross-stage: 1-tick latency
             else:
@@ -155,9 +181,9 @@ def build_task_table(sched: Schedule) -> TaskTable:
             worst = 1
             for s in range(P):
                 events = []
-                for i in range(m):
-                    events.append((tick[(open_kind, i, c, s)], 1))
-                    events.append((tick[(ck, i, c, s)], -1))
+                for i, q in units:
+                    events.append((tick[(open_kind, i, c, s, q)], 1))
+                    events.append((tick[(ck, i, c, s, q)], -1))
                 events.sort()
                 cur = peak = 0
                 for _, d in events:
@@ -176,21 +202,76 @@ def build_task_table(sched: Schedule) -> TaskTable:
     wstash_depth: Dict[int, int] = ring_depth(B, W) if has_w else {}
     rmt_depth: Dict[int, int] = ring_depth(R, B, sorted(rcs)) if rcs else {}
 
+    # ---- seq-chunked extras ----
+    # KV-carry ring: one slot per in-flight *microbatch* (all its seq
+    # chunks share the full-sequence K/V buffer), alive F[mb,0]->B[mb,0]
+    # — FIFO by mb, so mb % depth is sound.  The activation ring is NOT
+    # FIFO under seq chunking (backwards retire in reverse seq order
+    # within a microbatch): replace the modular slot assignment with
+    # exact per-stage interval coloring.
+    kv_depth: Dict[int, int] = {}
+    act_color: Dict[Tuple, int] = {}     # (c, s, mb, q) -> slot
+    if ns > 1:
+        for c in range(v):
+            worst = 1
+            for s in range(P):
+                events = []
+                for i in range(m):
+                    events.append((tick[(F, i, c, s, 0)], 1))
+                    events.append((tick[(B, i, c, s, 0)], -1))
+                events.sort()
+                cur = peak = 0
+                for _, d in events:
+                    cur += d
+                    peak = max(peak, cur)
+                worst = max(worst, peak)
+            kv_depth[c] = worst
+        act_depth = {}
+        close_kind = {c: (R if c in rcs else B) for c in range(v)}
+        for c in range(v):
+            worst = 1
+            for s in range(P):
+                ivs = sorted(
+                    (tick[(F, i, c, s, q)],
+                     tick[(close_kind[c], i, c, s, q)], (i, q))
+                    for i, q in units)
+                active: List[Tuple[int, int]] = []   # (free_tick, slot)
+                free_slots: List[int] = []
+                nslots = 0
+                for a, b_, unit in ivs:
+                    still = []
+                    for fb, sl in active:
+                        # reader tick b_ still *uses* the slot: free
+                        # strictly after it
+                        if fb < a:
+                            free_slots.append(sl)
+                        else:
+                            still.append((fb, sl))
+                    active = still
+                    sl = free_slots.pop() if free_slots else nslots
+                    if sl == nslots:
+                        nslots += 1
+                    active.append((b_, sl))
+                    act_color[(c, s) + unit] = sl
+                worst = max(worst, nslots)
+            act_depth[c] = worst
+
     # ---- payload edges & queue coloring ----
-    # F payload: F(i,c,s) -> F(i,c,s+1) | F(i,c,P-1) -> F(i,c+1,0)
-    # B payload: B(i,c,s) -> B(i,c,s-1) | B(i,c,0)  -> B(i,c-1,P-1)
+    # F payload: F(i,c,s,q) -> F(i,c,s+1,q) | F(i,c,P-1,q) -> F(i,c+1,0,q)
+    # B payload: B(i,c,s,q) -> B(i,c,s-1,q) | B(i,c,0,q) -> B(i,c-1,P-1,q)
     f_edges, b_edges = [], []
-    for i in range(m):
+    for i, q in units:
         for c in range(v):
             for s in range(P):
                 if s < P - 1:
-                    f_edges.append(((F, i, c, s), (F, i, c, s + 1)))
+                    f_edges.append(((F, i, c, s, q), (F, i, c, s + 1, q)))
                 elif c < v - 1:
-                    f_edges.append(((F, i, c, s), (F, i, c + 1, 0)))
+                    f_edges.append(((F, i, c, s, q), (F, i, c + 1, 0, q)))
                 if s > 0:
-                    b_edges.append(((B, i, c, s), (B, i, c, s - 1)))
+                    b_edges.append(((B, i, c, s, q), (B, i, c, s - 1, q)))
                 elif c > 0:
-                    b_edges.append(((B, i, c, s), (B, i, c - 1, P - 1)))
+                    b_edges.append(((B, i, c, s, q),
+                                    (B, i, c - 1, P - 1, q)))
 
     def color(edges):
         """Greedy interval coloring per consumer stage.
@@ -242,37 +323,48 @@ def build_task_table(sched: Schedule) -> TaskTable:
     rcb = -np.ones(shape, np.int32)
     wsl = -np.ones(shape, np.int32)
     rsl = -np.ones(shape, np.int32)
+    seq = np.zeros(shape, np.int32)
+    kvs = -np.ones(shape, np.int32)
 
     for t in sched.tasks:
-        tt, s = tick[t.key()], t.stage
+        tt, s, q = tick[t.key()], t.stage, t.seq
+        # backward-phase unit order (writers and readers of the W-stash
+        # and remat rings both follow it, so mod-depth stays FIFO)
+        beta = t.mb * ns + (ns - 1 - q)
         oc = _op_code(t.kind, t.chunk, s, P, v)
         op[tt, s] = oc
         chunk[tt, s] = t.chunk
         mbt[tt, s] = t.mb
+        seq[tt, s] = q
         snd[tt, s] = _send_code(t.kind, t.chunk, s, P, v)
-        # W-stash slot (FIFO by mb): written at the B tick, read at W
+        # KV-carry/dKV ring slot (FIFO by mb): every F appends its
+        # chunk's K/V; every B replays from it and accumulates dKV
+        if ns > 1 and t.kind in (F, B):
+            kvs[tt, s] = t.mb % kv_depth[t.chunk]
+        # W-stash slot: written at the B tick, read at W
         if has_w and t.kind in (B, W):
-            wsl[tt, s] = t.mb % wstash_depth[t.chunk]
-        # remat-ring slot (FIFO by mb): written at R, read at the B.
+            wsl[tt, s] = beta % wstash_depth[t.chunk]
+        # remat-ring slot: written at R, read at the B.
         # First-position blocks have no boundary payload to hand off
         # (their input is the token batch, re-fetched at B time).
         if t.chunk in rcs and t.kind in (R, B) \
                 and oc not in (RCP_FIRST, BWD_FIRST):
-            rsl[tt, s] = t.mb % rmt_depth[t.chunk]
-        # boundary activation slot (FIFO by mb); rematerialized chunks
-        # retire their act slot at the R tick, so their B reads the
-        # remat ring instead
+            rsl[tt, s] = beta % rmt_depth[t.chunk]
+        # boundary activation slot (FIFO by mb when n_seq == 1, exact
+        # interval coloring otherwise); rematerialized chunks retire
+        # their act slot at the R tick, so their B reads the remat ring
         if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST, RCP_FIRST) \
                 and not (t.kind == B and t.chunk in rcs):
-            act[tt, s] = t.mb % act_depth[t.chunk]
+            act[tt, s] = (t.mb % act_depth[t.chunk] if ns == 1
+                          else act_color[(t.chunk, s, t.mb, q)])
         # input queue slot
         if t.kind == F and oc not in (FWD_FIRST,):
-            prod = (F, t.mb, t.chunk, s - 1) if s > 0 else \
-                (F, t.mb, t.chunk - 1, P - 1)
+            prod = (F, t.mb, t.chunk, s - 1, q) if s > 0 else \
+                (F, t.mb, t.chunk - 1, P - 1, q)
             src[tt, s] = f_slots[prod]
         if t.kind == B and oc not in (BWD_LAST,):
-            prod = (B, t.mb, t.chunk, s + 1) if s < P - 1 else \
-                (B, t.mb, t.chunk + 1, 0)
+            prod = (B, t.mb, t.chunk, s + 1, q) if s < P - 1 else \
+                (B, t.mb, t.chunk + 1, 0, q)
             src[tt, s] = b_slots[prod]
         # receive side: payload I produce lands at the consumer this tick
         if t.kind == F and t.key() in cons_f:
@@ -287,15 +379,16 @@ def build_task_table(sched: Schedule) -> TaskTable:
                      recv_b=rcb, w_slot=wsl, r_slot=rsl, fq_depth=fq_depth,
                      bq_depth=bq_depth, act_depth=act_depth,
                      wstash_depth=wstash_depth, rmt_depth=rmt_depth,
-                     name=sched.name)
+                     name=sched.name, n_seq=ns, seq=seq, kv_slot=kvs,
+                     kv_depth=kv_depth)
 
 
 def validate_table(tab: TaskTable) -> None:
     """Re-derive invariants: every task present once; reads see writes;
-    every stash ring (W-stash, remat, and the act ring of rematerialized
-    chunks) is FIFO-safe — a slot is never overwritten before its
-    matching reader retires it."""
-    P, v, m = tab.P, tab.v, tab.m
+    every stash ring (W-stash, remat, the act ring of rematerialized or
+    sequence-chunked tables, and the KV-carry ring) is safe — a slot is
+    never overwritten before its matching reader retires it."""
+    P, v, m, ns = tab.P, tab.v, tab.m, tab.n_seq
     seen = set()
     for t in range(tab.T):
         for s in range(P):
@@ -310,37 +403,44 @@ def validate_table(tab: TaskTable) -> None:
                 kind = R
             else:
                 kind = B
-            key = (kind, int(tab.mb[t, s]), int(tab.chunk[t, s]), s)
+            key = (kind, int(tab.mb[t, s]), int(tab.chunk[t, s]), s,
+                   int(tab.seq[t, s]) if tab.seq is not None else 0)
             assert key not in seen, f"duplicate {key}"
             seen.add(key)
     kinds = 3 if tab.has_w else 2
-    assert len(seen) == kinds * P * v * m + len(tab.rmt_depth) * P * m
+    assert len(seen) == (kinds * P * v * m
+                         + len(tab.rmt_depth) * P * m) * ns
+
+    def unit(t, s):
+        return (int(tab.mb[t, s]),
+                int(tab.seq[t, s]) if tab.seq is not None else 0)
+
     # W-stash ring: the slot written at a B tick must stay live (not be
     # overwritten by a later B) until its matching W tick reads it.
-    # mb % depth is only sound for FIFO retirement — enforce it here
+    # beta % depth is only sound for FIFO retirement — enforce it here
     # rather than assume it of future split-backward generators.
     if tab.has_w:
         for s in range(P):
-            live: Dict[Tuple[int, int], int] = {}   # (chunk, slot) -> mb
+            live: Dict[Tuple[int, int], Tuple] = {}  # (chunk, slot) -> unit
             for t in range(tab.T):
                 o = tab.op[t, s]
                 if o in (BWD_MID, BWD_FIRST, BWD_LAST):
                     key = (int(tab.chunk[t, s]), int(tab.w_slot[t, s]))
                     assert key not in live, \
                         f"stage {s} tick {t}: W-stash {key} overwritten " \
-                        f"before W of mb {live[key]} read it"
-                    live[key] = int(tab.mb[t, s])
+                        f"before W of {live[key]} read it"
+                    live[key] = unit(t, s)
                 elif o in (WGT_MID, WGT_FIRST, WGT_LAST):
                     key = (int(tab.chunk[t, s]), int(tab.w_slot[t, s]))
-                    assert live.get(key) == int(tab.mb[t, s]), \
+                    assert live.get(key) == unit(t, s), \
                         f"stage {s} tick {t}: W reads stash {key} not " \
-                        f"holding its mb"
+                        f"holding its unit"
                     del live[key]
             assert not live, f"stage {s}: unread W-stash slots {live}"
     # remat ring: written at the R tick, read (and retired) at the
     # chunk's B tick; and the act ring of rematerialized chunks:
-    # written at F, retired at R.  mb % depth is only FIFO-sound when
-    # retirement order matches arrival order — enforce both here.
+    # written at F, retired at R.  Slot reuse is only sound when no
+    # writer lands on a live slot — enforce both here.
     if tab.has_r:
         rcs = set(tab.rmt_depth)
         for (wr_ops, rd_ops, slots, label) in (
@@ -349,7 +449,7 @@ def validate_table(tab: TaskTable) -> None:
                 ((FWD_MID, FWD_FIRST, FWD_LAST),
                  (RCP_MID, RCP_FIRST, RCP_LAST), tab.act_slot, "act(F->R)")):
             for s in range(P):
-                live: Dict[Tuple[int, int], int] = {}
+                live: Dict[Tuple[int, int], Tuple] = {}
                 for t in range(tab.T):
                     o = tab.op[t, s]
                     c = int(tab.chunk[t, s])
@@ -359,15 +459,63 @@ def validate_table(tab: TaskTable) -> None:
                     if o in wr_ops:
                         assert key not in live, \
                             f"stage {s} tick {t}: {label} ring {key} " \
-                            f"overwritten before mb {live[key]} read it"
-                        live[key] = int(tab.mb[t, s])
+                            f"overwritten before {live[key]} read it"
+                        live[key] = unit(t, s)
                     elif o in rd_ops:
-                        assert live.get(key) == int(tab.mb[t, s]), \
+                        assert live.get(key) == unit(t, s), \
                             f"stage {s} tick {t}: {label} ring read " \
-                            f"{key} not holding its mb"
+                            f"{key} not holding its unit"
                         del live[key]
                 assert not live, \
                     f"stage {s}: unread {label} ring slots {live}"
+    # sequence-chunked tables: the colored act ring (write at F, single
+    # terminal read at B — or R for rematerialized chunks) and the
+    # KV-carry ring (claimed at F[mb,0], every later F/B of the mb must
+    # see its own slot, released at B[mb,0]).
+    if ns > 1:
+        rcs = set(tab.rmt_depth)
+        for s in range(P):
+            live_act: Dict[Tuple[int, int], Tuple] = {}
+            live_kv: Dict[Tuple[int, int], int] = {}   # (c, slot) -> mb
+            for t in range(tab.T):
+                o = tab.op[t, s]
+                if o == IDLE:
+                    continue
+                c = int(tab.chunk[t, s])
+                mb, q = unit(t, s)
+                a_sl = int(tab.act_slot[t, s])
+                kv_sl = int(tab.kv_slot[t, s]) \
+                    if tab.kv_slot is not None else -1
+                is_f = o in (FWD_MID, FWD_FIRST, FWD_LAST)
+                is_b = o in (BWD_MID, BWD_FIRST, BWD_LAST)
+                is_r = o in (RCP_MID, RCP_FIRST, RCP_LAST)
+                if is_f and a_sl >= 0:
+                    key = (c, a_sl)
+                    assert key not in live_act, \
+                        f"stage {s} tick {t}: act slot {key} " \
+                        f"overwritten before {live_act[key]} read it"
+                    live_act[key] = (mb, q)
+                elif a_sl >= 0 and (is_r or (is_b and c not in rcs)):
+                    key = (c, a_sl)
+                    assert live_act.get(key) == (mb, q), \
+                        f"stage {s} tick {t}: act read {key} not " \
+                        f"holding its unit"
+                    del live_act[key]
+                if kv_sl >= 0 and (is_f or is_b):
+                    key = (c, kv_sl)
+                    if is_f and q == 0:
+                        assert key not in live_kv, \
+                            f"stage {s} tick {t}: KV slot {key} " \
+                            f"reclaimed while mb {live_kv.get(key)} live"
+                        live_kv[key] = mb
+                    else:
+                        assert live_kv.get(key) == mb, \
+                            f"stage {s} tick {t}: KV slot {key} does " \
+                            f"not hold mb {mb}"
+                        if is_b and q == 0:
+                            del live_kv[key]
+            assert not live_act, f"stage {s}: unread act slots {live_act}"
+            assert not live_kv, f"stage {s}: unreleased KV slots {live_kv}"
     # queue write-before-read per slot
     for qname, rc, depth in (("F", tab.recv_f, tab.fq_depth),
                              ("B", tab.recv_b, tab.bq_depth)):

@@ -286,9 +286,14 @@ def plan_schedule_kwargs(plan: ParallelPlan) -> Dict[str, Any]:
     ``chronos_recomp`` is driven by the plan's :class:`RecomputeConfig`
     (the ``num_recomp_chunks`` shallowest chunks replay, emitted as
     explicit ``R`` tasks); ``1f1b``/``gpipe`` take the uniform-recompute
-    fraction (1F1B+R baseline); other generators need nothing extra."""
+    fraction (1F1B+R baseline); ``chronos_seq`` composes recompute with
+    sequence chunking (``plan.seq_chunks`` rides separately through
+    ``make_pipeline_spec(n_seq=...)``); other generators need nothing
+    extra."""
     rc = plan.recompute
-    if plan.schedule == "chronos_recomp" and rc.mode != "none":
+    if (plan.schedule == "chronos_recomp" and rc.mode != "none") or \
+            (plan.schedule == "chronos_seq" and rc.mode == "chronos"
+             and rc.num_recomp_chunks > 0):
         return {"recomp_chunks": min(rc.num_recomp_chunks,
                                      max(plan.num_chunks - 1, 1))}
     if plan.schedule in ("1f1b", "gpipe") and rc.mode == "uniform" \
@@ -329,7 +334,7 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     spec = make_pipeline_spec(
         cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
         seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis,
-        **plan_schedule_kwargs(plan))
+        n_seq=plan.seq_chunks, **plan_schedule_kwargs(plan))
     if extras is not None:
         extras["spec"] = spec
     offload = plan.offload.enabled and plan.offload.num_offload_chunks > 0

@@ -129,10 +129,14 @@ def unembed(params, x):
     return shard(logits, A_DP, None, A_TP)
 
 
-def softmax_xent(logits, labels, mask=None):
+def softmax_xent(logits, labels, mask=None, denom=None):
     """Stable CE in fp32.  The gold-logit lookup is a one-hot contraction
     (not take_along_axis) so a vocab-sharded logits tensor reduces with a
-    psum instead of an all-gather."""
+    psum instead of an all-gather.
+
+    ``denom``: fixed normalizer replacing the local mean — sequence-
+    chunked losses pass the *whole-sequence* token (or mask) count so
+    per-chunk partial losses sum to the full-sequence loss."""
     lg = logits.astype(jnp.float32)
     m = jnp.max(lg, axis=-1, keepdims=True)
     lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
@@ -142,7 +146,10 @@ def softmax_xent(logits, labels, mask=None):
     nll = lse - gold
     if mask is not None:
         nll = nll * mask
-        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+        if denom is None:
+            return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    if denom is not None:
+        return jnp.sum(nll) / denom
     return jnp.mean(nll)
 
 

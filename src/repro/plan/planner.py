@@ -52,6 +52,9 @@ class PlannerQuery:
     seq_len: int = 4096
     reserve: float = 2.0e9          # workspace/fragmentation headroom
     max_v: int = 3                  # largest chunk count searched
+    max_seq_chunks: int = 4         # largest sequence-chunk count searched
+                                    # (only counts dividing seq_len - 1
+                                    # are executable, see _seq_counts)
     # activation-estimator calibration (1.0 = this repo's Megatron-
     # selective accounting; ``benchmarks.common.PAPER_ACT_SCALE``
     # reproduces the paper's full-storage-no-SP accounting)
@@ -76,7 +79,8 @@ class PlannerQuery:
 
 @dataclass(frozen=True)
 class DesignPoint:
-    """One evaluated (schedule, recompute, offload) candidate."""
+    """One evaluated (schedule, recompute, offload, seq-chunk)
+    candidate."""
     schedule: str                   # registry name
     sched_kwargs: Tuple[Tuple[str, object], ...]
     v: int
@@ -95,6 +99,7 @@ class DesignPoint:
     max_layers: int                 # max trainable layers under the budget
     offload_overlap: float          # Eq. (5) hidden fraction (1.0 = free)
     score: float                    # throughput proxy used for ranking
+    seq_chunks: int = 1             # sequence chunks (repro.seqpipe)
 
     @property
     def offload_frac(self) -> float:
@@ -103,6 +108,8 @@ class DesignPoint:
     def describe(self) -> str:
         bits = [self.schedule if self.v < 2
                 else f"{self.schedule}(v={self.v})"]
+        if self.seq_chunks > 1:
+            bits.append(f"s={self.seq_chunks}")
         if self.recomp_chunks:
             bits.append(f"rc={self.recomp_chunks}")
         if self.uniform_recomp:
@@ -151,6 +158,7 @@ class ExecutablePlan:
                             cpu_flops=self.query.cpu_flops)
         return ParallelPlan(
             pp_axis=pp_axis, schedule=p.schedule, num_chunks=p.v,
+            seq_chunks=p.seq_chunks,
             microbatch_size=(microbatch_size
                              if microbatch_size is not None
                              else self.query.microbatch),
@@ -160,6 +168,7 @@ class ExecutablePlan:
         p = self.point
         return {
             "pick": p.describe(), "schedule": p.schedule, "v": p.v,
+            "seq_chunks": p.seq_chunks,
             "recomp_chunks": p.recomp_chunks,
             "offload_chunks": p.offload_chunks,
             "act_frac_of_ma": round(p.act_frac, 4),
@@ -180,30 +189,72 @@ class ExecutablePlan:
 @functools.lru_cache(maxsize=None)
 def _metrics(name: str, P: int, m: int,
              kwargs: Tuple[Tuple[str, object], ...]):
-    """(act_frac, bubble, compute_frac, has_cooldown) of a constructed
-    schedule — cached, the same schedule backs many byte-level points."""
+    """(act_frac, bubble, compute_frac, has_cooldown, kv_frac) of a
+    constructed schedule — cached, the same schedule backs many
+    byte-level points.  ``kv_frac`` is the seqpipe KV-carry residency:
+    the worst per-stage count of (chunk-slot) full-sequence K/V buffers
+    in flight (lifetime F[mb,0] -> B[mb,0], the executor's ring
+    sizing), as a fraction of one whole-net microbatch KV (0 for
+    unchunked schedules)."""
+    from repro.core.schedule import B as _B, F as _F
     sched = S.get_schedule(name, P, m, **dict(kwargs))
     gaps = sched.warmup_cooldown_bubbles(stage=P - 1)
+    kv_frac = 0.0
+    if sched.n_seq > 1:
+        idx = sched.by_key()
+        worst = 0
+        for s in range(P):
+            tot = 0
+            for c in range(sched.v):
+                events = []
+                for i in range(m):
+                    events.append((idx[(_F, i, c, s, 0)].start, 1))
+                    events.append((idx[(_B, i, c, s, 0)].end, -1))
+                events.sort()
+                cur = pk = 0
+                for _, d in events:
+                    cur += d
+                    pk = max(pk, cur)
+                tot += pk
+            worst = max(worst, tot)
+        kv_frac = worst / (sched.v * P)
     return (sched.peak_activation(count_transient=False),
             sched.bubble_ratio(),
             sched.ideal_compute_fraction(),
-            sum(b - a for a, b in gaps) > 1e-9)
+            sum(b - a for a, b in gaps) > 1e-9,
+            kv_frac)
+
+
+def _seq_counts(q: PlannerQuery):
+    """Executable sequence-chunk counts: the runtime slices the
+    ``seq_len - 1`` next-token positions into equal chunks, so only
+    divisors qualify (long-context shapes use 2^k + 1 seq lens)."""
+    return [k for k in range(2, q.max_seq_chunks + 1)
+            if (q.seq_len - 1) % k == 0]
 
 
 def _candidates(q: PlannerQuery):
-    """(schedule name, kwargs, v, recomp_chunks, uniform_recomp)."""
+    """(schedule name, kwargs, v, recomp_chunks, uniform_recomp,
+    seq_chunks)."""
     out = []
     for r in (0.0, 0.25, 0.5, 0.75):
-        out.append(("1f1b", {"recomp": r} if r else {}, 1, 0, r))
-    out.append(("zb_h1", {}, 1, 0, 0.0))
+        out.append(("1f1b", {"recomp": r} if r else {}, 1, 0, r, 1))
+    out.append(("zb_h1", {}, 1, 0, 0.0, 1))
     for v in range(2, q.max_v + 1):
-        out.append(("interleaved", {"v": v}, v, 0, 0.0))
-        out.append(("chronos", {"v": v}, v, 0, 0.0))
-        out.append(("chronos_zb", {"v": v}, v, 0, 0.0))
+        out.append(("interleaved", {"v": v}, v, 0, 0.0, 1))
+        out.append(("chronos", {"v": v}, v, 0, 0.0, 1))
+        out.append(("chronos_zb", {"v": v}, v, 0, 0.0, 1))
         for rc in range(1, v):
             out.append(("chronos_recomp", {"v": v, "recomp_chunks": rc},
-                        v, rc, 0.0))
-    out.append(("chronos_zero2", {"v": 2, "group": 2}, 2, 0, 0.0))
+                        v, rc, 0.0, 1))
+    out.append(("chronos_zero2", {"v": 2, "group": 2}, 2, 0, 0.0, 1))
+    # sequence-chunked family (repro.seqpipe): long-context points
+    for k in _seq_counts(q):
+        out.append(("seq1f1b", {"n_seq": k}, 1, 0, 0.0, k))
+        out.append(("chronos_seq", {"v": 2, "n_seq": k}, 2, 0, 0.0, k))
+        out.append(("chronos_seq",
+                    {"v": 2, "n_seq": k, "recomp_chunks": 1},
+                    2, 1, 0.0, k))
     return out
 
 
@@ -217,10 +268,10 @@ def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
     m_sched = 4 * q.pp
     L = q.cfg.num_layers
     points = []
-    for name, kw, v, rc, unif in _candidates(q):
+    for name, kw, v, rc, unif, nsq in _candidates(q):
         kwt = tuple(sorted(kw.items()))
-        act_frac, bubble, cf, has_cooldown = _metrics(name, q.pp, m_sched,
-                                                      kwt)
+        act_frac, bubble, cf, has_cooldown, kv_frac = _metrics(
+            name, q.pp, m_sched, kwt)
         depths = range(v if (has_cooldown and name.startswith("chronos"))
                        else 1)
         for n_off in depths:
@@ -228,6 +279,9 @@ def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
                 continue
             off_frac = n_off / v
             act = act_frac * mm.m_a(q.microbatch_tokens, L)
+            # seqpipe: the executor keeps a full-sequence KV buffer plus
+            # its dKV twin per in-flight microbatch (no 1/n_seq shrink)
+            act += 2.0 * kv_frac * mm.kv_a(q.microbatch_tokens, L)
             state = mm.model_state(L, q.pp, q.tp, offload_frac=off_frac)
             total = act + state + q.reserve
             overlap = 1.0
@@ -251,7 +305,7 @@ def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
                 act_frac=act_frac, bubble=bubble, compute_frac=cf,
                 act_bytes=act, state_bytes=state, total_bytes=total,
                 fits=total <= q.hbm_bytes, max_layers=max_l,
-                offload_overlap=overlap, score=score))
+                offload_overlap=overlap, score=score, seq_chunks=nsq))
     points.sort(key=lambda p: (-p.score, p.total_bytes))
     return points
 

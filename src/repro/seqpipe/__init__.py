@@ -1,0 +1,35 @@
+"""Sequence-chunked pipeline subsystem (Seq1F1B / SlimPipe lineage).
+
+Splits every microbatch along the sequence dimension into ``n_seq``
+causally-ordered chunks and threads the fifth scheduling coordinate
+(``Task.seq``) through the whole stack:
+
+- :mod:`repro.seqpipe.schedules` — the ``seq1f1b`` and ``chronos_seq``
+  generators (registered into ``repro.core.schedules.REGISTRY``).
+- :mod:`repro.seqpipe.attention` — chunked causal attention over the
+  ``flash_attention`` kernel with an explicit KV prefix; equivalent to
+  full-sequence attention (the identity the runtime relies on).
+- :mod:`repro.seqpipe.runtime` — the seq-aware SPMD executor: per-chunk
+  activation ring + per-microbatch KV-carry ring, with the dKV
+  accumulation threaded through the backward ``jax.vjp`` cotangents.
+
+Entry point: ``make_pipeline_spec(..., schedule="seq1f1b"/"chronos_seq",
+n_seq=k)`` — ``make_train_grads_fn`` dispatches here automatically when
+the compiled task table carries sequence chunks.
+"""
+from repro.seqpipe.schedules import chronos_seq, seq1f1b  # noqa: F401
+
+_LAZY = {"chunked_flash_attention": "repro.seqpipe.attention",
+         "merge_kv": "repro.seqpipe.attention",
+         "make_seq_train_grads_fn": "repro.seqpipe.runtime"}
+
+
+def __getattr__(name):
+    # attention/runtime pull in jax + the Pallas kernels; resolve them
+    # lazily so the schedule generators (and their registration into
+    # repro.core.schedules) stay importable on the dependency-free
+    # analytics path (planner, render_schedules, benchmarks).
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

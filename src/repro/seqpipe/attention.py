@@ -1,0 +1,44 @@
+"""Chunked causal attention over the ``flash_attention`` kernel.
+
+The identity the seq-chunked runtime relies on: causal attention of a
+query chunk at absolute offset ``q0`` over (prefix KV ++ own KV) equals
+the corresponding row slice of full-sequence causal attention.  The
+Pallas kernel already supports exactly this via ``q_offset`` (its
+decode/chunked-prefill path), so chunked training attention is the same
+kernel call with a shorter query — no new kernel is needed.
+
+Masked key positions beyond ``q0 + Sq`` never contribute (exp of the
+-inf score is exactly 0.0 and ``0 * v == 0``), so the key/value buffer
+may be the statically-sized full-sequence KV ring with arbitrary
+content past the causal frontier — the property the executor's KV-carry
+ring exploits.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+def chunked_flash_attention(q_chunk, k_all, v_all, *, q_offset: int,
+                            causal: bool = True, window: int = 0,
+                            prefix: int = 0):
+    """q_chunk [B, Sq, H, d]; k_all/v_all [B, Sk, G, d] holding the KV
+    prefix (positions < q_offset) plus this chunk's own KV (positions
+    [q_offset, q_offset+Sq)); positions beyond the frontier are masked.
+    Returns [B, Sq, H, d] equal to rows [q_offset, q_offset+Sq) of
+    ``flash_attention`` over the full sequence."""
+    return flash_attention(q_chunk, k_all, v_all, causal, window, prefix,
+                           q_offset)
+
+
+def merge_kv(kv_ring, k_new, v_new, q_offset: int):
+    """Write a chunk's KV into the full-sequence carry at ``q_offset``;
+    pure-jnp (``dynamic_update_slice``) so it is vjp-transparent — the
+    cotangent at prefix positions passes through to the ring input,
+    which is how dKV accumulates across backward chunks."""
+    k = jax.lax.dynamic_update_slice(kv_ring["k"], k_new,
+                                     (0, q_offset, 0, 0))
+    v = jax.lax.dynamic_update_slice(kv_ring["v"], v_new,
+                                     (0, q_offset, 0, 0))
+    return {"k": k, "v": v}

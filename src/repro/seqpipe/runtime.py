@@ -1,0 +1,484 @@
+"""Sequence-chunked SPMD pipeline executor.
+
+Extends the lockstep tick executor of
+:mod:`repro.core.pipeline_runtime` with the fifth scheduling coordinate:
+every task processes one *sequence chunk* (``Sc = S / n_seq`` token
+positions) of one microbatch, and two per-microbatch rings thread causal
+attention across chunks:
+
+- **KV-carry ring** (``carry["kv"]``, one slot per in-flight microbatch
+  per layer-chunk): the statically-sized full-sequence K/V buffer of
+  every layer the stage hosts.  Each F tick runs the chunk forward with
+  the buffer as an attention *cache* at offset ``q * Sc`` — the
+  positions below the offset hold the prefix written by earlier chunks,
+  positions above the causal frontier are masked out (exactly zero
+  probability), so chunked attention equals full-sequence attention
+  row-for-row (see :mod:`repro.seqpipe.attention`).
+- **dKV ring** (``carry["dkv"]``, same slots): the accumulated K/V
+  cotangents.  Backwards run in *reverse* chunk order; each B tick
+  replays its chunk's forward from the boundary payload + KV buffer
+  inside ``jax.vjp`` and passes the ring content as the cotangent of
+  the updated KV buffer.  The vjp then (a) routes the accumulated dK/dV
+  of the chunk's *own* positions into the weight gradients, and (b)
+  returns the cotangent w.r.t. the KV *input* — the prefix positions'
+  accumulation plus this chunk's attention-to-prefix contribution —
+  which is written back to the ring for the next (earlier) chunk.  The
+  first backward of a microbatch (``q == n_seq-1``) seeds the cotangent
+  with zeros, so no explicit ring zeroing is needed.
+
+Loss accounting: each last-stage chunk computes the *partial* loss
+``sum(nll [* mask] over its token slice) / D`` with D the
+*whole-sequence* token count ``mbB * S`` (or the microbatch's total
+mask count under ``batch["loss_mask"]``), so per-chunk losses (and
+their gradient seeds) sum exactly to the unchunked microbatch mean —
+chunked gradients match the unchunked pipeline up to float summation
+order (``tests/helpers/split_fused_check.py --pair seq``, which also
+runs masked).
+
+Scope: dense-attention LMs (no SSM scan / encoder cross-attention / VLM
+prefix / MoE aux losses — asserted by ``make_pipeline_spec``); fused
+backward plus explicit-recompute ``R`` ticks (split-backward W is
+IR/table-level only for now).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import jax_compat
+from repro.core.pipeline_runtime import PipelineSpec, _embed_tokens
+from repro.core.tasktable import (SEND_BWD, SEND_FWD, SEND_HOPB,
+                                  SEND_HOPF)
+from repro.models import layers as L
+from repro.models.sharding import shard
+from repro.models.transformer import _apply_layer
+
+
+def _chunk_fwd_seq(spec: PipelineSpec, block_params_c, flags_c, payload,
+                   kv, pos0):
+    """Run this stage's layer chunk over one sequence chunk.
+
+    ``kv``: {"k", "v"} with leaves [M, period, B, S, G, hd] — the
+    microbatch's full-sequence KV buffer for every layer of the chunk.
+    ``pos0``: traced absolute offset of the chunk's first position.
+    Returns (payload_out, kv_out) with the chunk's K/V written at
+    [pos0, pos0 + Sc)."""
+    cfg = spec.cfg
+    x = payload["x"]
+    aux = payload["aux"]
+    Bz, Sc, _ = x.shape
+    positions = jnp.broadcast_to(pos0 + jnp.arange(Sc)[None], (Bz, Sc))
+
+    def body(carry, xs):
+        x, aux = carry
+        ptrees, fl, kvm = xs
+        nk, nv = [], []
+        for j in range(spec.layout.period):
+            cache = {"k": kvm["k"][j], "v": kvm["v"][j]}
+            x, nc, aux = _apply_layer(
+                ptrees[j], x, positions, cfg, j, cache=cache,
+                cache_pos=pos0, aux_sum=aux,
+                window_override=fl["window"][j], gate=fl["gate"][j])
+            nk.append(nc["k"])
+            nv.append(nc["v"])
+        return (x, aux), {"k": jnp.stack(nk), "v": jnp.stack(nv)}
+
+    # same FlashAttention-aware policy as the unchunked executor: keep
+    # projection outputs, recompute attention internals in the vjp
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        prevent_cse=False)
+    vary = lambda t: jax.tree.map(  # noqa: E731
+        lambda a: jax_compat.to_varying(a, spec.pp_axis), t)
+    init = vary((x, aux[0]))
+    (x, aux2), kv_out = jax.lax.scan(body, init,
+                                     (block_params_c, flags_c, kv))
+    out = dict(payload)
+    out["x"] = x
+    out["aux"] = jnp.reshape(aux2, (1,))
+    return out, kv_out
+
+
+def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
+    """Seq-chunked counterpart of
+    :func:`repro.core.pipeline_runtime.make_train_grads_fn` — same
+    signature, same gradient semantics, 1/n_seq of the boundary-payload
+    working set plus the KV-carry rings."""
+    cfg = spec.cfg
+    tab = spec.table
+    P_, v, ns = tab.P, tab.v, tab.n_seq
+    assert ns > 1 and not tab.has_w
+    pp = spec.pp_axis
+    Sc = spec.S // ns
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 12]
+
+    def offsets(depths):
+        off = np.zeros(v, np.int64)
+        total = 0
+        for c in range(v):
+            off[c] = total
+            total += depths.get(c, 0)
+        return jnp.asarray(off), total
+
+    act_offsets, total_act = offsets(tab.act_depth)
+    kv_offsets, total_kv = offsets(tab.kv_depth)
+    remat = tab.has_r
+    r_offsets, total_rmt = offsets(tab.rmt_depth)
+    flags_np = spec.layout.flags(cfg)
+    M = spec.layout.M
+    per = spec.layout.period
+    G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def spmd(stage_iota, params, batch):
+        s_idx = stage_iota[0]
+        blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
+        flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
+        shared = {k: params[k] for k in params if k != "blocks"}
+        dtype = jnp.dtype(cfg.compute_dtype)
+
+        def to_varying(a):
+            return jax_compat.to_varying(a, pp)
+
+        def vary(x):
+            return jax.tree.map(to_varying, x)
+
+        zero_pay = vary({"x": jnp.zeros((spec.mbB, Sc, cfg.d_model),
+                                        dtype),
+                         "aux": jnp.zeros((1,), jnp.float32)})
+        zero_kv_slot = {"k": jnp.zeros((per, M, spec.mbB, spec.S, G, hd),
+                                       dtype),
+                        "v": jnp.zeros((per, M, spec.mbB, spec.S, G, hd),
+                                       dtype)}
+        # scan consumes leading M; store rings as [slots, M, per, ...]
+        zero_kv_slot = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1),
+                                    zero_kv_slot)
+        zero_blocks_g = jax.tree.map(jnp.zeros_like, blocks)
+        zero_shared_g = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), shared)
+
+        def pin_buf(t):
+            """Pin ring buffers batch-over-dp (payloads [slots, B, Sc, d]
+            at axis 1; KV/dKV [slots, M, per, B, S, G, hd] at axis 3)."""
+            def one(a):
+                if a.ndim == 7:
+                    return shard(a, None, None, None, "dp", None, None,
+                                 None)
+                if a.ndim >= 3:
+                    return shard(a, None, "dp", None, None)
+                return a
+            return jax.tree.map(one, t)
+
+        def carry_init():
+            carry = {
+                "fq": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((tab.fq_depth,) + a.shape, a.dtype),
+                    zero_pay)),
+                "bq": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((tab.bq_depth,) + a.shape, a.dtype),
+                    zero_pay)),
+                "act": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_act,) + a.shape, a.dtype),
+                    zero_pay)),
+                "kv": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_kv,) + a.shape, a.dtype),
+                    zero_kv_slot)),
+                "dkv": pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_kv,) + a.shape, a.dtype),
+                    zero_kv_slot)),
+                "gb": zero_blocks_g,
+                "gs": zero_shared_g,
+                "loss": jnp.zeros((), jnp.float32),
+                "nloss": jnp.zeros((), jnp.float32),
+            }
+            if remat:
+                carry["rmt"] = pin_buf(jax.tree.map(
+                    lambda a: jnp.zeros((total_rmt,) + a.shape, a.dtype),
+                    zero_pay))
+            return carry
+
+        def get_mb(arr, mb):
+            return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
+
+        def tick(carry, t):
+            row = table_arr[t, s_idx]                  # [12]
+            op, c, mb = row[0], row[1], row[2]
+            src, aslot, snd = row[3], row[4], row[5]
+            rcf, rcb = row[6], row[7]
+            q, kvslot = row[10], row[11]
+            pos0 = q * Sc
+
+            blocks_c = [jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, False), t_)
+                for t_ in blocks]
+            flags_c = {k: jax.lax.dynamic_index_in_dim(vv, c, 0, False)
+                       for k, vv in flags.items()}
+            x_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.maximum(src, 0), 0, False), carry["fq"])
+            dy_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.maximum(src, 0), 0, False), carry["bq"])
+            gslot = act_offsets[c] + jnp.maximum(aslot, 0)
+            act_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, gslot, 0, False),
+                carry["act"])
+            gkv = kv_offsets[c] + jnp.maximum(kvslot, 0)
+            kv_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, gkv, 0, False),
+                carry["kv"])
+            dkv_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, gkv, 0, False),
+                carry["dkv"])
+            if remat:
+                grm = r_offsets[c] + jnp.maximum(row[9], 0)
+                rmt_in = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
+                                                           False),
+                    carry["rmt"])
+                bnd_in = jax.tree.map(
+                    lambda r_, a_: jnp.where(row[9] >= 0, r_, a_),
+                    rmt_in, act_in)
+            else:
+                bnd_in = act_in
+            tokens = get_mb(batch["tokens"], mb)
+            tok_in = jax.lax.dynamic_slice(
+                tokens[:, :-1], (0, pos0), (spec.mbB, Sc))
+            labels = jax.lax.dynamic_slice(
+                tokens[:, 1:], (0, pos0), (spec.mbB, Sc))
+            # per-chunk partial loss: sum(nll [* mask]) over the chunk's
+            # slice, normalized by the *whole-sequence* token (or mask)
+            # count so chunk losses and gradient seeds sum exactly to
+            # the unchunked microbatch mean
+            if "loss_mask" in batch:
+                # loss_mask [m, mbB, S_tokens-1] is label-aligned, as in
+                # the unchunked executor
+                mask_full = get_mb(batch["loss_mask"], mb)
+                mask = jax.lax.dynamic_slice(mask_full, (0, pos0),
+                                             (spec.mbB, Sc))
+                denom = jnp.maximum(jnp.sum(mask_full), 1.0)
+            else:
+                mask = None
+                denom = float(spec.mbB * spec.S)   # whole-sequence mean
+
+            def fwd_fn(bp, sp, pay, kvp):
+                out, kv_out = _chunk_fwd_seq(spec, bp, flags_c, pay, kvp,
+                                             pos0)
+                return vary(out), vary(kv_out)
+
+            def first_fn(bp, sp, kvp):
+                pay = _embed_tokens(spec, sp, tok_in)
+                # positions enter via pos0 inside the chunk fwd; the
+                # embedding itself is position-free
+                out, kv_out = _chunk_fwd_seq(spec, bp, flags_c, pay, kvp,
+                                             pos0)
+                return vary(out), vary(kv_out)
+
+            def last_fn(bp, sp, pay, kvp):
+                out, kv_out = _chunk_fwd_seq(spec, bp, flags_c, pay, kvp,
+                                             pos0)
+                x = L.rmsnorm(sp["final_norm"], out["x"], cfg.norm_eps)
+                logits = L.unembed(sp["embed"], x)
+                ce = L.softmax_xent(logits, labels, mask,
+                                    denom=denom)
+                ce = ce + spec.aux_weight * out["aux"][0]
+                return to_varying(ce), vary(kv_out)
+
+            def wr(buf, val, slot):
+                return jax.tree.map(
+                    lambda b, p: jax.lax.dynamic_update_index_in_dim(
+                        b, p, slot, 0), buf, val)
+
+            def wr_act(carry, pay):
+                return dict(carry, act=wr(carry["act"], pay, gslot))
+
+            def wr_kv(carry, kv_out):
+                return dict(carry, kv=wr(carry["kv"], kv_out, gkv))
+
+            def wr_dkv(carry, dkv_out):
+                return dict(carry, dkv=wr(carry["dkv"], dkv_out, gkv))
+
+            def _add_block_grads(carry, gb_c):
+                gb = jax.tree.map(
+                    lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                        g, jax.lax.dynamic_index_in_dim(g, c, 0, False) + d,
+                        c, 0),
+                    carry["gb"], gb_c)
+                return dict(carry, gb=gb)
+
+            def _add_shared_grads(carry, gs):
+                return dict(carry, gs=jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), carry["gs"], gs))
+
+            # dKV cotangent: zeros for the first backward of the
+            # microbatch (q == n_seq-1), the accumulated ring otherwise
+            def dkv_cot():
+                return jax.tree.map(
+                    lambda a: jnp.where(q == ns - 1,
+                                        jnp.zeros_like(a), a),
+                    vary(dict(dkv_in)))
+
+            def br_idle(carry):
+                return carry, zero_pay
+
+            def br_fwd_mid(carry):
+                out, kv_out = fwd_fn(blocks_c, shared, vary(dict(x_in)),
+                                     vary(dict(kv_in)))
+                return wr_kv(wr_act(carry, x_in), kv_out), out
+
+            def br_fwd_first(carry):
+                out, kv_out = first_fn(blocks_c, shared,
+                                       vary(dict(kv_in)))
+                return wr_kv(carry, kv_out), out
+
+            def br_fwd_last(carry):
+                out, kv_out = fwd_fn(blocks_c, shared, vary(dict(x_in)),
+                                     vary(dict(kv_in)))
+                x = L.rmsnorm(shared["final_norm"], out["x"], cfg.norm_eps)
+                logits = L.unembed(shared["embed"], x)
+                ce = L.softmax_xent(logits, labels, mask,
+                                    denom=denom)
+                ce = ce + spec.aux_weight * out["aux"][0]
+                carry = wr_kv(wr_act(carry, x_in), kv_out)
+                return dict(carry, loss=carry["loss"] + ce,
+                            nloss=carry["nloss"] + 1.0 / ns), zero_pay
+
+            def br_bwd_mid(carry):
+                dy = vary(dict(dy_in))
+                _, vjp = jax.vjp(
+                    lambda bp, pay, kvp: fwd_fn(bp, shared, pay, kvp),
+                    vary(blocks_c), vary(dict(bnd_in)), vary(dict(kv_in)))
+                gb_c, dx, dkv = vjp((dy, dkv_cot()))
+                return wr_dkv(_add_block_grads(carry, gb_c), dkv), dx
+
+            def br_bwd_first(carry):
+                dy = vary(dict(dy_in))
+                _, vjp = jax.vjp(
+                    lambda bp, sp, kvp: first_fn(bp, sp, kvp),
+                    vary(blocks_c), vary(shared), vary(dict(kv_in)))
+                gb_c, gs, dkv = vjp((dy, dkv_cot()))
+                carry = _add_block_grads(carry, gb_c)
+                return wr_dkv(_add_shared_grads(carry, gs), dkv), zero_pay
+
+            def br_bwd_last(carry):
+                _, vjp = jax.vjp(
+                    lambda bp, sp, pay, kvp: last_fn(bp, sp, pay, kvp),
+                    vary(blocks_c), vary(shared), vary(dict(bnd_in)),
+                    vary(dict(kv_in)))
+                gb_c, gs, dx, dkv = vjp(
+                    (to_varying(jnp.ones((), jnp.float32)), dkv_cot()))
+                carry = _add_block_grads(carry, gb_c)
+                return wr_dkv(_add_shared_grads(carry, gs), dkv), dx
+
+            branches = [br_idle, br_fwd_mid, br_fwd_first, br_fwd_last,
+                        br_bwd_mid, br_bwd_first, br_bwd_last]
+
+            if remat:
+                # R tick: hand the unit's boundary checkpoint from the
+                # act ring to the remat ring (replay fuses into B's vjp)
+                def br_rcp(carry):
+                    cur = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
+                                                               False),
+                        carry["rmt"])
+                    val = jax.tree.map(
+                        lambda new, old: jnp.where(row[9] >= 0, new, old),
+                        act_in, cur)
+                    rmt = jax.tree.map(
+                        lambda buf, p: jax.lax.dynamic_update_index_in_dim(
+                            buf, p, grm, 0), carry["rmt"], val)
+                    return dict(carry, rmt=rmt), zero_pay
+
+                branches += [br_idle, br_idle, br_idle]   # W op slots
+                branches += [br_rcp, br_rcp, br_rcp]
+
+            carry, out = jax.lax.switch(op, branches, carry)
+
+            # ---- route (identical to the unchunked executor, but the
+            # payloads are 1/n_seq-size sequence-chunk boundaries) ----
+            def sel(code):
+                return jax.tree.map(
+                    lambda a: jnp.where(snd == code, a,
+                                        jnp.zeros_like(a)), out)
+            perm_f = [(i, i + 1) for i in range(P_ - 1)]
+            perm_b = [(i + 1, i) for i in range(P_ - 1)]
+            perm_h = ([(P_ - 1, 0), (0, P_ - 1)] if P_ > 1 else [(0, 0)])
+            moved_f = _ppermute(sel(SEND_FWD), pp, perm_f)
+            moved_b = _ppermute(sel(SEND_BWD), pp, perm_b)
+            hop_pay = jax.tree.map(lambda a, b: a + b,
+                                   sel(SEND_HOPF), sel(SEND_HOPB))
+            moved_h = _ppermute(hop_pay, pp, perm_h)
+
+            arrive_f = jax.tree.map(
+                lambda a, b: jnp.where(s_idx == 0, b, a), moved_f, moved_h)
+            arrive_b = jax.tree.map(
+                lambda a, b: jnp.where(s_idx == P_ - 1, b, a),
+                moved_b, moved_h)
+
+            def q_write(qu, slot, val):
+                cur = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, jnp.maximum(slot, 0), 0, False), qu)
+                val = jax.tree.map(
+                    lambda new, old: jnp.where(slot >= 0, new, old),
+                    val, cur)
+                return jax.tree.map(
+                    lambda a, vv: jax.lax.dynamic_update_index_in_dim(
+                        a, vv, jnp.maximum(slot, 0), 0), qu, val)
+
+            carry = dict(carry,
+                         fq=pin_buf(q_write(carry["fq"], rcf, arrive_f)),
+                         bq=pin_buf(q_write(carry["bq"], rcb, arrive_b)),
+                         act=pin_buf(carry["act"]),
+                         kv=pin_buf(carry["kv"]),
+                         dkv=pin_buf(carry["dkv"]))
+            if remat:
+                carry = dict(carry, rmt=pin_buf(carry["rmt"]))
+            return carry, None
+
+        init = jax.tree.map(to_varying, carry_init())
+        carry, _ = jax.lax.scan(tick, init, jnp.arange(tab.T))
+
+        gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
+        gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
+        loss = jax.lax.psum(carry["loss"], pp)
+        n = jax.lax.psum(carry["nloss"], pp)
+        metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
+        return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+
+    def call(params, batch):
+        in_specs = (
+            P(pp),
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            jax.tree.map(lambda _: P(), batch),
+        )
+        out_specs = (
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            {"loss": P(), "n_microbatches": P()},
+        )
+
+        def spmd_entry(stage_iota, params, batch):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():
+                return spmd(stage_iota, params, batch)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes={pp})(stage_iota, params,
+                                                      batch)
+    return call
+
+
+def _ppermute(x, axis, perm):
+    return jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm), x)

@@ -1,7 +1,8 @@
 """Subprocess helper: numerical-equivalence check of the SPMD pipeline
 executor against single-device autodiff.
 
-Usage: python pipeline_check.py <arch> <schedule> <P> <v> <m> [ndev] [dp] [tp]
+Usage: python pipeline_check.py <arch> <schedule> <P> <v> <m> \
+           [ndev] [dp] [tp] [n_seq]
 Exits 0 on success; prints MAXERR=... for the parent test to parse.
 """
 import os
@@ -12,6 +13,7 @@ P_, v, m = int(sys.argv[3]), int(sys.argv[4]), int(sys.argv[5])
 ndev = int(sys.argv[6]) if len(sys.argv) > 6 else P_
 dp = int(sys.argv[7]) if len(sys.argv) > 7 else 1
 tp = int(sys.argv[8]) if len(sys.argv) > 8 else 1
+n_seq = int(sys.argv[9]) if len(sys.argv) > 9 else 1
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
 
 import dataclasses  # noqa: E402
@@ -44,7 +46,7 @@ mesh = make_mesh(shape, axes)
 rules = {"dp": "data", "tp": "model", "fsdp": None} if dp * tp > 1 else {}
 
 spec = make_pipeline_spec(cfg, P=P_, v=v, m=m, microbatch=mbB, seq_len=S,
-                          schedule=schedule)
+                          schedule=schedule, n_seq=n_seq)
 params, _ = init_pipeline_params(jax.random.key(0), cfg, spec.layout)
 tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                             cfg.vocab_size)

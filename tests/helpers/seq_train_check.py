@@ -1,0 +1,86 @@
+"""Subprocess helper: sequence-chunked pipeline end-to-end through the
+training driver (``repro.launch.train.train_pipeline``).
+
+Modes:
+    --dry   trace-only: eval_shape the seq-chunked pipeline step built
+            by ``make_pipeline_train_step`` from a ``ParallelPlan`` with
+            ``seq_chunks > 1`` (validates the plan -> spec -> seqpipe
+            executor plumbing without compiling).
+    (full)  run a few optimizer steps with ``seq1f1b`` (n_seq chunks)
+            and with unchunked ``1f1b`` on the same data/seed and
+            compare losses step-for-step — sequence chunking must be a
+            pure memory/schedule transform, not a training change.
+
+Usage: python seq_train_check.py [--dry] [P] [steps] [n_seq]
+(``n_seq`` must be odd: SyntheticLM needs an even seq_len, so the
+``seq_len - 1`` next-token positions are odd.)
+Prints OK=1 / LOSSDIFF=... for the parent test to parse.
+"""
+import os
+import sys
+import tempfile
+
+args = sys.argv[1:]
+dry = "--dry" in args
+args = [a for a in args if a != "--dry"]
+P_ = int(args[0]) if len(args) > 0 else 2
+nsteps = int(args[1]) if len(args) > 1 else 3
+n_seq = int(args[2]) if len(args) > 2 else 3
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.configs.base import (OptimizerConfig, ParallelPlan,  # noqa: E402
+                                ShapeConfig, TrainConfig)
+from repro.jax_compat import make_mesh  # noqa: E402
+from repro.launch.steps import make_pipeline_train_step  # noqa: E402
+from repro.launch.train import train  # noqa: E402
+
+cfg = get_reduced("tinyllama-1.1b")
+# even seq_len (SyntheticLM pair structure) whose seq_len-1 next-token
+# positions split into n_seq equal chunks
+SEQ_LEN = 5 * n_seq + 1
+assert SEQ_LEN % 2 == 0, f"n_seq={n_seq} must be odd (even seq_len)"
+shape = ShapeConfig("smoke", seq_len=SEQ_LEN, global_batch=8, kind="train")
+ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=nsteps)
+mesh = make_mesh((P_,), ("pp",))
+rules = {"pp": "pp", "dp": None, "tp": None, "fsdp": None}
+
+
+def plan_with(k: int) -> ParallelPlan:
+    if k > 1:
+        return ParallelPlan(pp_axis="pp", schedule="seq1f1b",
+                            num_chunks=1, seq_chunks=k, microbatch_size=2)
+    return ParallelPlan(pp_axis="pp", schedule="1f1b", num_chunks=1,
+                        microbatch_size=2)
+
+
+if dry:
+    step, structs, in_sh, out_sh = make_pipeline_train_step(
+        cfg, shape, plan_with(n_seq), ocfg, mesh, rules)
+    out = jax.eval_shape(step, *structs)
+    assert len(out) == 3, "seq step returns (params, opt, metrics)"
+    params_s = structs[0]
+    same = jax.tree.map(lambda a, b: a.shape == b.shape, params_s, out[0])
+    assert all(jax.tree.leaves(same)), "param shapes preserved"
+    print(f"OK=1 dry n_seq={n_seq}")
+    sys.exit(0)
+
+results = {}
+for k in (1, n_seq):
+    tc = TrainConfig(model=cfg, shape=shape, plan=plan_with(k),
+                     optimizer=ocfg, seed=0,
+                     checkpoint_dir=tempfile.mkdtemp(prefix=f"seq{k}_"),
+                     log_every=1, checkpoint_every=10 ** 9)
+    results[k] = train(tc, mesh=mesh, rules=rules, steps=nsteps)
+
+base, seq = results[1], results[n_seq]
+assert seq["steps"] == base["steps"] == nsteps
+assert "seq1f1b" in seq["schedule"]
+# identical data/seed/optimizer; gradients differ only by float
+# summation order (n_seq partial reductions)
+diffs = [abs(a - b) for a, b in zip(base["losses"], seq["losses"])]
+print(f"OK=1 LOSSDIFF={max(diffs):.3e} base={base['losses']} "
+      f"seq={seq['losses']}")
+sys.exit(0 if max(diffs) <= 1e-3 else 1)

@@ -8,8 +8,16 @@ Pairs:
             tasks: boundary checkpoint handed act-ring -> remat-ring,
             replay fused into B's vjp); the compiled gradient math is
             identical, so the tolerance is 0.0 — bitwise.
+    seq     chronos (whole-sequence tasks) vs chronos_seq n_seq=2
+            (sequence-chunked units; prefix-KV causal attention + dKV
+            accumulation through the vjp cotangents).  Chunked
+            attention is row-for-row identical to full-sequence
+            attention, so per-token forwards match bitwise; weight
+            gradients and the loss differ only by float summation
+            order (one dot over S vs n_seq partial dots + adds) —
+            tolerance 2e-5.
 
-Usage: python split_fused_check.py [--pair zb|recomp] [P] [m]
+Usage: python split_fused_check.py [--pair zb|recomp|seq] [P] [m]
 Exits 0 when max |g_a - g_b| <= tol; prints MAXERR=... for the parent
 test to parse.
 """
@@ -54,6 +62,14 @@ elif pair == "recomp":
                                 rho=1.0, recomp_chunks=1)
     assert spec_b.table.has_r and not spec_a.table.has_r
     tol = 0.0
+elif pair == "seq":
+    spec_a = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="chronos")
+    spec_b = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="chronos_seq",
+                                n_seq=2)
+    assert spec_b.n_seq == 2 and spec_b.table.n_seq == 2
+    tol = 2e-5
 else:
     raise SystemExit(f"unknown pair {pair!r}")
 
@@ -61,6 +77,11 @@ params, _ = init_pipeline_params(jax.random.key(0), cfg, spec_a.layout)
 tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                             cfg.vocab_size)
 batch = {"tokens": tokens}
+if pair == "seq":
+    # also exercise the masked-loss path: the chunked executor must
+    # normalize by the whole-sequence mask count, not the chunk's
+    batch["loss_mask"] = (jax.random.uniform(
+        jax.random.key(2), (m, mbB, S - 1)) > 0.3).astype(jnp.float32)
 
 with shard_env(mesh, {}):
     g_a, met_a = jax.jit(make_train_grads_fn(spec_a, mesh))(params, batch)

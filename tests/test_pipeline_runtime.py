@@ -25,6 +25,8 @@ SPLIT_HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                             "split_fused_check.py")
 OFFLOAD_HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                               "offload_train_check.py")
+SEQ_HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                          "seq_train_check.py")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -36,10 +38,13 @@ def _run(args, timeout=600):
                           timeout=timeout)
 
 
-def run_case(arch, schedule, P, v, m, ndev=None, dp=1, tp=1, timeout=600):
+def run_case(arch, schedule, P, v, m, ndev=None, dp=1, tp=1, n_seq=1,
+             timeout=600):
     args = [sys.executable, HELPER, arch, schedule, str(P), str(v), str(m)]
-    if ndev:
-        args += [str(ndev), str(dp), str(tp)]
+    if ndev or n_seq > 1:
+        args += [str(ndev or P), str(dp), str(tp)]
+    if n_seq > 1:
+        args += [str(n_seq)]
     r = _run(args, timeout=timeout)
     assert r.returncode == 0, \
         f"{arch}/{schedule} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
@@ -88,6 +93,28 @@ def test_offload_pipeline_step_shapes():
     assert "OK=1" in r.stdout
 
 
+def test_seq_chunked_matches_unchunked_runtime():
+    """chronos_seq (sequence-chunked units, prefix-KV causal attention,
+    dKV accumulation through the vjp cotangents) must reproduce the
+    unchunked chronos pipeline gradients: chunked attention is
+    row-for-row identical to full-sequence attention, so the only
+    divergence is float summation order in the weight-gradient
+    reductions (<= 2e-5)."""
+    r = _run([sys.executable, SPLIT_HELPER, "--pair", "seq", "2", "4"])
+    assert r.returncode == 0, \
+        f"seq-vs-unchunked failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "MAXERR=" in r.stdout
+
+
+def test_seq_pipeline_step_builder_dry():
+    """ParallelPlan(seq_chunks>1) -> make_pipeline_train_step -> seqpipe
+    executor plumbing, trace-only."""
+    r = _run([sys.executable, SEQ_HELPER, "--dry"])
+    assert r.returncode == 0, \
+        f"seq dry check failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "OK=1" in r.stdout
+
+
 @pytest.mark.slow
 def test_offload_train_matches_device_optimizer():
     """train_pipeline with the host optimizer for the deepest chunk
@@ -98,6 +125,29 @@ def test_offload_train_matches_device_optimizer():
         f"offload train check failed:\n{r.stdout[-2000:]}\n" \
         f"{r.stderr[-3000:]}"
     assert "OK=1" in r.stdout and "report=" in r.stdout
+
+
+@pytest.mark.slow
+def test_seq1f1b_grad_equivalence_vs_single_device():
+    """seq1f1b at 4 seq chunks against single-device autodiff."""
+    run_case("tinyllama-1.1b", "seq1f1b", P=2, v=1, m=4, ndev=2, dp=1,
+             tp=1, n_seq=4)
+
+
+@pytest.mark.slow
+def test_chronos_seq_grad_equivalence_vs_single_device():
+    run_case("tinyllama-1.1b", "chronos_seq", P=2, v=2, m=4, ndev=2,
+             dp=1, tp=1, n_seq=2)
+
+
+@pytest.mark.slow
+def test_seq_train_driver_matches_unchunked():
+    """train_pipeline with seq1f1b tracks the unchunked 1f1b run
+    step-for-step (same data/seed; float-summation-order noise only)."""
+    r = _run([sys.executable, SEQ_HELPER, "2", "3", "3"])
+    assert r.returncode == 0, \
+        f"seq train check failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "OK=1" in r.stdout
 
 
 @pytest.mark.slow

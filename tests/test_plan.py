@@ -58,13 +58,14 @@ def test_dse_reproduces_paper_ladder_and_15x_claim():
 
 
 def test_planner_picks_recomp_offload_when_tight():
-    """A 96-layer model at 32 GB only fits with recompute + offload —
-    the planner must find that point, and its pick must be executable
-    end-to-end (schedule checks, task table validates, ParallelPlan
-    consistent)."""
+    """A 96-layer model at 32 GB only fits with recompute + offload in
+    the pre-seqpipe design space — the planner must find that point,
+    and its pick must be executable end-to-end (schedule checks, task
+    table validates, ParallelPlan consistent)."""
     ep = plan_under_budget(with_layers(96), pp=8, tp=8,
                            hbm_bytes=32 * GB, reserve=1 * GB,
-                           act_scale=_paper_query().act_scale)
+                           act_scale=_paper_query().act_scale,
+                           max_seq_chunks=1)
     assert isinstance(ep, ExecutablePlan)
     p = ep.point
     assert p.schedule == "chronos_recomp" and p.offload_chunks > 0
@@ -77,6 +78,30 @@ def test_planner_picks_recomp_offload_when_tight():
     assert plan.offload.enabled
     assert plan.offload.num_offload_chunks == p.offload_chunks
     assert plan.recompute.num_recomp_chunks == p.recomp_chunks
+
+
+def test_planner_seq_chunking_beats_recompute_when_tight():
+    """With the seqpipe family searchable, the same tight budget is met
+    *without* the recompute tax: sequence chunking already cuts peak
+    activation, so the winner is a chronos_seq/seq1f1b point with a
+    better useful-compute fraction than the recompute pick — and it is
+    executable end-to-end."""
+    ep = plan_under_budget(with_layers(96), pp=8, tp=8,
+                           hbm_bytes=32 * GB, reserve=1 * GB,
+                           act_scale=_paper_query().act_scale)
+    p = ep.point
+    assert p.seq_chunks > 1
+    assert p.schedule in ("chronos_seq", "seq1f1b")
+    legacy = plan_under_budget(with_layers(96), pp=8, tp=8,
+                               hbm_bytes=32 * GB, reserve=1 * GB,
+                               act_scale=_paper_query().act_scale,
+                               max_seq_chunks=1)
+    assert p.score >= legacy.point.score
+    sched = ep.schedule()
+    assert sched.n_seq == p.seq_chunks
+    ep.task_table()                           # build + validate
+    plan = ep.parallel_plan()
+    assert plan.seq_chunks == p.seq_chunks
 
 
 def test_planner_prefers_cheapest_sufficient_memory_saver():

@@ -206,7 +206,8 @@ def test_zb_h1_invariants(P, mmul):
     # exactly one F, B, W per (mb, stage); F -> B -> W in time
     for i in range(m):
         for s in range(P):
-            f, b, w = idx[(F, i, 0, s)], idx[(B, i, 0, s)], idx[(W, i, 0, s)]
+            f, b, w = (idx[(F, i, 0, s, 0)], idx[(B, i, 0, s, 0)],
+                       idx[(W, i, 0, s, 0)])
             assert f.end <= b.start + 1e-9 < w.start + 1e-9
             assert b.end <= w.start + 1e-9
     # split budget: B + W == fused backward

@@ -1,0 +1,362 @@
+"""repro.seqpipe tests: sequence-chunked schedule IR invariants, mixed
+task-kind retiming/peak properties, task-table KV-ring compilation,
+prefix-KV chunked-attention equivalence, and the planner's seq-chunk
+axis.  The SPMD gradient equivalences run as subprocesses from
+tests/test_pipeline_runtime.py."""
+import numpy as np
+import pytest
+from helpers.hypcompat import given, settings, st
+
+from repro.core import schedules as S
+from repro.core.schedule import B, F, R, W, retime_with_comm
+from repro.core.tasktable import build_task_table, validate_table
+
+
+# ---------------------------------------------------------------------------
+# registration + IR invariants
+# ---------------------------------------------------------------------------
+
+def test_seq_generators_registered():
+    assert "seq1f1b" in S.REGISTRY and "chronos_seq" in S.REGISTRY
+    s1 = S.get_schedule("seq1f1b", 4, 8, n_seq=4)
+    s2 = S.get_schedule("chronos_seq", 4, 8, v=2, n_seq=2)
+    s1.check()
+    s2.check()
+    assert s1.n_seq == 4 and s2.n_seq == 2
+    assert {t.seq for t in s1.tasks} == set(range(4))
+
+
+seq_cases = st.sampled_from([
+    ("seq1f1b", {"n_seq": 2}), ("seq1f1b", {"n_seq": 3}),
+    ("seq1f1b", {"n_seq": 4}), ("seq1f1b", {"n_seq": 2, "split": True}),
+    ("seq1f1b", {"n_seq": 4, "split": True}),
+    ("chronos_seq", {"v": 2, "n_seq": 2}),
+    ("chronos_seq", {"v": 3, "n_seq": 2}),
+    ("chronos_seq", {"v": 2, "n_seq": 4}),
+    ("chronos_seq", {"v": 2, "n_seq": 2, "recomp_chunks": 1}),
+])
+
+
+@settings(max_examples=24, deadline=None)
+@given(case=seq_cases, P=st.integers(2, 8), mmul=st.integers(1, 2))
+def test_seq_schedule_validity_invariants(case, P, mmul):
+    name, kw = case
+    if name == "chronos_seq" and kw.get("recomp_chunks") and P < 3:
+        return
+    m = 2 * mmul
+    sched = S.get_schedule(name, P, m, **kw)
+    sched.check()                                  # deps + no overlap
+    ns = kw["n_seq"]
+    assert sched.n_seq == ns
+    # every (kind, mb, chunk, stage, seq) exactly once
+    keys = set()
+    for t in sched.tasks:
+        assert t.key() not in keys
+        keys.add(t.key())
+    kinds = 3 if sched.has_w else 2
+    assert len(keys) == (kinds * P * sched.v * m
+                         + len(sched.r_chunks()) * P * m) * ns
+    # forwards ascend / backwards descend in seq order per stage
+    for s in range(P):
+        ts = sched.stage_tasks(s)
+        for mb in range(m):
+            fseq = [t.seq for t in ts if t.kind == F and t.mb == mb
+                    and t.chunk == 0]
+            bseq = [t.seq for t in ts if t.kind == B and t.mb == mb
+                    and t.chunk == 0]
+            assert fseq == sorted(fseq)
+            assert bseq == sorted(bseq, reverse=True)
+
+
+def test_seq1f1b_peak_activation_closed_form():
+    """Stage-0 peak is (P-1+n_seq)/(P*n_seq) of m_a — the 1F1B warm-up
+    depth measured in sequence-chunk units."""
+    for P in (4, 8):
+        for ns in (2, 4):
+            sched = S.get_schedule("seq1f1b", P, 4 * P, n_seq=ns)
+            pk = sched.peak_activation(per_stage=True)
+            assert abs(pk[0] - (P - 1 + ns) / (P * ns)) < 1e-9, (P, ns)
+
+
+def test_seq_chunking_acceptance_1p5x_and_bubble():
+    """Acceptance: >= 1.5x peak-activation reduction at 4 seq chunks
+    and bubble ratio no worse than 1F1B at equal m."""
+    for P in (4, 8):
+        m = 4 * P
+        f1 = S.onef1b(P, m)
+        sq = S.get_schedule("seq1f1b", P, m, n_seq=4)
+        cs = S.get_schedule("chronos_seq", P, m, v=2, n_seq=4)
+        ch = S.chronos(P, m, 2)
+        assert f1.peak_activation() / sq.peak_activation() >= 1.5
+        assert ch.peak_activation() / cs.peak_activation() >= 1.5
+        assert sq.bubble_ratio() <= f1.bubble_ratio() + 1e-9
+        assert cs.bubble_ratio() <= f1.bubble_ratio() + 1e-9
+
+
+def test_seq1f1b_zb_composition():
+    """split=True composes ZB-H1: W tasks exist, B+W = fused backward,
+    same peak activation as the fused seq1f1b (released at B)."""
+    sched = S.get_schedule("seq1f1b", 4, 8, n_seq=2, split=True)
+    assert sched.has_w and sched.n_seq == 2
+    assert sched.b + sched.w == 2 * sched.f
+    fused = S.get_schedule("seq1f1b", 4, 8, n_seq=2)
+    assert abs(sched.peak_activation() - fused.peak_activation()) < 1e-9
+    assert sched.bubble_ratio() <= fused.bubble_ratio() + 1e-9
+
+
+def test_chronos_seq_recomp_composition():
+    """recomp_chunks composes Chronos-Recomp: explicit R tasks per
+    (mb, seq) unit, shallow chunk stores ~nothing while in flight."""
+    sched = S.get_schedule("chronos_seq", 4, 8, v=2, n_seq=2,
+                           recomp_chunks=1)
+    assert sched.has_r and sched.r_chunks() == {0}
+    base = S.get_schedule("chronos_seq", 4, 8, v=2, n_seq=2)
+    assert sched.peak_activation(count_transient=False) \
+        < base.peak_activation() - 1e-9
+
+
+def test_get_schedule_unknown_name_lists_registry():
+    with pytest.raises(ValueError, match="unknown schedule 'nope'"):
+        S.get_schedule("nope", 2, 4)
+    with pytest.raises(ValueError, match="seq1f1b"):
+        S.get_schedule("definitely-not-registered", 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# retiming / metric properties over mixed task kinds (W + R + seq)
+# ---------------------------------------------------------------------------
+
+mixed_cases = st.sampled_from([
+    ("1f1b", {"recomp": 0.5}),              # legacy recompute prefix
+    ("chronos_recomp", {}),                 # R
+    ("zb_h1", {}),                          # W
+    ("chronos_zb", {"v": 2}),               # W, v=2
+    ("seq1f1b", {"n_seq": 3}),              # seq
+    ("seq1f1b", {"n_seq": 2, "split": True}),           # W + seq
+    ("chronos_seq", {"v": 2, "n_seq": 2, "recomp_chunks": 1}),  # R + seq
+])
+
+
+@settings(max_examples=20, deadline=None)
+@given(case=mixed_cases, P=st.integers(3, 8), mmul=st.integers(1, 2),
+       tc=st.floats(0.0, 0.5))
+def test_retime_preserves_counts_and_validity_mixed_kinds(case, P, mmul,
+                                                          tc):
+    """Property (satellite): retiming preserves the total grain count —
+    per task kind and in duration — for schedules mixing W, R, and seq
+    chunks; order is preserved per stage and the result re-validates."""
+    name, kw = case
+    m = 2 * mmul
+    sched = S.get_schedule(name, P, m, **kw)
+    rt = retime_with_comm(sched, tc)
+    rt.check(tc=tc)
+    # per-stage order preserved
+    for s in range(P):
+        assert [t.key() for t in sched.stage_tasks(s)] \
+            == [t.key() for t in rt.stage_tasks(s)]
+    # total grain count invariant: per kind, count and net duration
+    # (retime only adds comm stalls, recorded in t.comm)
+    for kind in (F, B, W, R):
+        a = [t for t in sched.tasks if t.kind == kind]
+        b = [t for t in rt.tasks if t.kind == kind]
+        assert len(a) == len(b)
+        tot_a = sum(t.dur - t.comm for t in a)
+        tot_b = sum(t.dur - t.comm for t in b)
+        assert abs(tot_a - tot_b) < 1e-9, (kind, tot_a, tot_b)
+    # comm can only slow down vs the compacted retiming
+    rt0 = retime_with_comm(sched, 0.0)
+    assert rt.total_time() >= rt0.total_time() - 1e-9
+
+
+@settings(max_examples=12, deadline=None)
+@given(case=mixed_cases, P=st.integers(3, 6))
+def test_per_stage_peaks_bound_global_peak_mixed_kinds(case, P):
+    """peak_activation(per_stage=True) is consistent with the scalar
+    peak and is invariant under retiming (lifetimes move, grains
+    don't)."""
+    name, kw = case
+    sched = S.get_schedule(name, P, 4, **kw)
+    per = sched.peak_activation(per_stage=True)
+    assert len(per) == P
+    assert abs(max(per) - sched.peak_activation()) < 1e-9
+    assert all(p > 0 for p in per)
+    # the compacted retiming may shift lifetimes but every stage still
+    # carries at least its steady-state floor and at most m_a
+    rt = retime_with_comm(sched, 0.0)
+    per_rt = rt.peak_activation(per_stage=True)
+    assert all(0 < p <= sched.m / P + 2.0 + 1e-9 for p in per_rt)
+
+
+# ---------------------------------------------------------------------------
+# task table: KV-carry ring + colored act ring
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [
+    ("seq1f1b", {"n_seq": 2}),
+    ("seq1f1b", {"n_seq": 4}),
+    ("seq1f1b", {"n_seq": 2, "split": True}),
+    ("chronos_seq", {"v": 2, "n_seq": 2}),
+    ("chronos_seq", {"v": 2, "n_seq": 4}),
+    ("chronos_seq", {"v": 2, "n_seq": 2, "recomp_chunks": 1}),
+])
+def test_seq_tables_compile_and_validate(name, kw):
+    sched = S.get_schedule(name, 4, 8, **kw)
+    tab = build_task_table(sched)
+    validate_table(tab)
+    ns = kw["n_seq"]
+    assert tab.n_seq == ns
+    assert set(tab.kv_depth) == set(range(sched.v))
+    assert tab.arrays().shape[-1] == 12
+    # the seq column covers all chunk indices
+    seqs = {int(q) for q in np.unique(tab.seq[tab.op > 0])}
+    assert seqs == set(range(ns))
+
+
+def test_seq_table_shrinks_activation_bytes():
+    """Structural memory claim at the compiled-table level: act-ring
+    slots hold 1/n_seq-size payloads, so the per-stage boundary bytes
+    (slots x chunk fraction) shrink vs the unchunked table."""
+    for P in (2, 4):
+        m = 2 * P
+        un = build_task_table(S.onef1b(P, m))
+        ch = build_task_table(S.get_schedule("seq1f1b", P, m, n_seq=4))
+        bytes_un = sum(un.act_depth.values())          # full payloads
+        bytes_ch = sum(ch.act_depth.values()) / 4      # quarter payloads
+        assert bytes_ch < bytes_un
+    # KV ring is per-microbatch full-sequence K/V — depth stays O(P/n_seq)
+    assert max(ch.kv_depth.values()) <= un.fq_depth + P + 1
+
+
+# ---------------------------------------------------------------------------
+# prefix-KV chunked attention == full-sequence attention
+# ---------------------------------------------------------------------------
+
+def test_chunked_flash_attention_matches_full_bitwise():
+    """The kernel identity the runtime relies on: causal attention of a
+    query chunk at offset q0 over the full KV buffer equals the row
+    slice of full-sequence attention — bitwise, and independent of
+    garbage beyond the causal frontier."""
+    import jax
+    import jax.numpy as jnp
+    from repro.seqpipe import chunked_flash_attention
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    Bz, Sx, H, G, hd = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (Bz, Sx, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (Bz, Sx, G, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (Bz, Sx, G, hd), jnp.float32)
+    full = flash_attention(q, k, v)
+    Sc = 8
+    for q0 in range(0, Sx, Sc):
+        # poison beyond the frontier: masked keys must contribute 0
+        kg = k.at[:, q0 + Sc:].set(777.0)
+        vg = v.at[:, q0 + Sc:].set(-777.0)
+        out = chunked_flash_attention(q[:, q0:q0 + Sc], kg, vg,
+                                      q_offset=q0)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(full[:, q0:q0 + Sc]))
+
+
+def test_model_attention_prefix_kv_matches_full():
+    """The runtime path (L.attention with the KV buffer as a cache at
+    cache_pos) reproduces full-sequence layer outputs chunk by chunk —
+    including RoPE at absolute positions and GQA."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import layers as L
+
+    Bz, Sx, d, H, G, hd = 2, 16, 32, 4, 2, 8
+    params, _ = L.init_attention(jax.random.key(0), d, H, G, hd,
+                                 jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (Bz, Sx, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Sx)[None], (Bz, Sx))
+    full, _ = L.attention(params, x, pos, num_heads=H, num_kv=G, hd=hd,
+                          rope_theta=1e4)
+    Sc = 4
+    cache = {"k": jnp.zeros((Bz, Sx, G, hd)),
+             "v": jnp.zeros((Bz, Sx, G, hd))}
+    outs = []
+    for q0 in range(0, Sx, Sc):
+        y, cache = L.attention(
+            params, x[:, q0:q0 + Sc], pos[:, q0:q0 + Sc], num_heads=H,
+            num_kv=G, hd=hd, rope_theta=1e4, cache=cache, cache_pos=q0)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=2e-6, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# planner: seq-chunk axis
+# ---------------------------------------------------------------------------
+
+def _long_context_query(**kw):
+    from benchmarks.common import PAPER_ACT_SCALE
+    from repro.configs.llama70b_paper import with_layers
+    from repro.plan import PlannerQuery
+    defaults = dict(cfg=with_layers(32), pp=8, tp=8, hbm_bytes=64e9,
+                    seq_len=16385, reserve=1e9,
+                    act_scale=PAPER_ACT_SCALE)
+    defaults.update(kw)
+    return PlannerQuery(**defaults)
+
+
+def test_planner_searches_seq_chunks_long_context():
+    """Acceptance: the planner's design space carries seq-chunk points
+    whose byte-level peak activation is >= 1.5x below the unchunked
+    schedule at 4 chunks, with bubble no worse than 1F1B."""
+    from repro.plan import enumerate_points
+    pts = enumerate_points(_long_context_query())
+    by = {p.describe(): p for p in pts}
+    f1, s4 = by["1f1b"], by["seq1f1b+s=4"]
+    cs4 = by["chronos_seq(v=2)+s=4"]
+    assert f1.act_bytes / s4.act_bytes >= 1.5
+    assert f1.act_bytes / cs4.act_bytes >= 1.5
+    assert s4.bubble <= f1.bubble and cs4.bubble <= f1.bubble
+    # executability filter: only divisors of seq_len-1 are searched
+    assert {p.seq_chunks for p in pts} == {1, 2, 4}
+
+
+def test_planner_seq_points_respect_divisibility():
+    from repro.plan import enumerate_points
+    pts = enumerate_points(_long_context_query(seq_len=4096))
+    # 4095 = 3^2 * 5 * 7 * 13: of 2..4 only 3 divides
+    assert {p.seq_chunks for p in pts} == {1, 3}
+
+
+def test_planner_seq_plan_roundtrip_executable():
+    """A seq-chunk DesignPoint binds to ParallelPlan -> PipelineSpec ->
+    compiled, validated task table."""
+    from repro.configs import get_reduced
+    from repro.core.pipeline_runtime import make_pipeline_spec
+    from repro.plan import enumerate_points
+    q = _long_context_query()
+    p = next(pt for pt in enumerate_points(q)
+             if pt.schedule == "chronos_seq" and pt.seq_chunks == 2
+             and not pt.recomp_chunks and not pt.offload_chunks)
+    cfg = get_reduced("tinyllama-1.1b")
+    spec = make_pipeline_spec(cfg, P=2, v=p.v, m=4, microbatch=2,
+                              seq_len=17, schedule=p.schedule,
+                              n_seq=p.seq_chunks,
+                              **{k: vv for k, vv in p.sched_kwargs
+                                 if k not in ("v", "n_seq")})
+    validate_table(spec.table)
+    assert spec.n_seq == 2 and spec.table.kv_depth
+
+
+# ---------------------------------------------------------------------------
+# benchmark wiring (fast-mode coverage of the fig11 sweep)
+# ---------------------------------------------------------------------------
+
+def test_fig11_rows_include_seq_schedules():
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import paper_fig11_seqlen as f11
+    out = f11.rows(seqs=(2048, 16384))
+    for seq, row in out.items():
+        assert "seq1f1b(s=4)" in row and "chronos_seq(s=4)" in row
+        assert row["seq1f1b(s=4)"] < row["1f1b"]
+        assert row["chronos_seq(s=4)"] < row["chronos"]
