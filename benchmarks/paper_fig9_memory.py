@@ -19,7 +19,11 @@ TOKENS = MB * SEQ
 
 
 def schedule_points():
-    """name -> (act fraction of m_a, offload fraction of layers)."""
+    """name -> (act fraction of m_a, offload fraction of layers).
+
+    The v_* rows are the V-shape controllable-memory family (fold-back
+    placement, split backward) — no recompute replay and no offload,
+    pure placement/scheduling memory control."""
     return {
         "interleave-1f1b": (S.interleaved(PP, 4 * PP, 2).peak_activation(),
                             0.0),
@@ -32,6 +36,12 @@ def schedule_points():
         "chronosALL(+offload)": (
             S.chronos_recomp(PP, 4 * PP).peak_activation(
                 count_transient=False), 0.5),
+        "v_min": (S.get_schedule("v_min", PP, 4 * PP).peak_activation(),
+                  0.0),
+        "v_half": (S.get_schedule("v_half", PP, 4 * PP).peak_activation(),
+                   0.0),
+        "v_zb": (S.get_schedule("v_zb", PP, 4 * PP).peak_activation(),
+                 0.0),
     }
 
 
@@ -80,4 +90,6 @@ def run(bench):
               lambda: round(b["chronosALL(+offload)"] / b["1f1b+R=50%"], 2))
     bench.add("fig9b_chronos_vs_1f1b (paper 1.2x)",
               lambda: round(b["chronos"] / b["1f1b"], 2))
+    bench.add("fig9b_v_min_vs_1f1b (V family, no recompute tax)",
+              lambda: round(b["v_min"] / b["1f1b"], 2))
     return b

@@ -20,17 +20,19 @@ CFG = with_layers(48)            # the Fig. 9(a) 48-layer testbed
 
 
 def ladder(hbm_gb: float = 32.0):
-    """Family -> max trainable layers under the budget (paper ladder)."""
+    """Family -> (max trainable layers, placement) under the budget
+    (paper ladder + the placement column)."""
     q = PlannerQuery(cfg=CFG, pp=PP, tp=TP, hbm_bytes=hbm_gb * GB,
                      reserve=1 * GB, act_scale=PAPER_ACT_SCALE)
     out = {}
     for p in enumerate_points(q):
-        out.setdefault(p.describe(), p.max_layers)
+        out.setdefault(p.describe(), (p.max_layers, p.placement))
     return out
 
 
 def picks(budgets=(16.0, 24.0, 32.0, 48.0, 64.0)):
-    """HBM budget (GB) -> the planner's executable pick summary."""
+    """HBM budget (GB) -> the planner's executable pick summary
+    (includes the placement the pick runs under)."""
     out = {}
     for hbm in budgets:
         try:
@@ -47,12 +49,16 @@ def run(bench):
     lad = ladder()
     for name in ("1f1b", "1f1b+R=50%", "chronos(v=2)",
                  "chronos_recomp(v=2)+rc=1",
-                 "chronos_recomp(v=2)+rc=1+offload=1/2"):
-        bench.add(f"dse_max_layers_{name}", lambda n=name: lad.get(n))
+                 "chronos_recomp(v=2)+rc=1+offload=1/2",
+                 "v_min(v=2)", "v_half(v=2)", "v_zb(v=2)"):
+        bench.add(f"dse_max_layers_{name}",
+                  lambda n=name: (lad.get(n) or (None, None))[0])
     bench.add("dse_recomp_on_vs_1f1b_r50 (>=1.5x)",
-              lambda: round(lad["chronos_recomp(v=2)+rc=1+offload=1/2"]
-                            / lad["1f1b+R=50%"], 3))
+              lambda: round(lad["chronos_recomp(v=2)+rc=1+offload=1/2"][0]
+                            / lad["1f1b+R=50%"][0], 3))
     pk = picks()
     for hbm, s in pk.items():
-        bench.add(f"dse_pick_{int(hbm)}GB", lambda s=s: s["pick"])
+        bench.add(f"dse_pick_{int(hbm)}GB",
+                  lambda s=s: (f"{s['pick']} [{s['placement']}]"
+                               if "placement" in s else s["pick"]))
     return lad, pk

@@ -5,10 +5,15 @@
 #    The pinned accelerator container has no network: the suite then
 #    falls back to tests/helpers/hypcompat.py's degraded deterministic
 #    sampling, so collection never breaks on the missing dev dep.
-# 2. Docs step: the schedule gallery (docs/SCHEDULES.md) is generated
+# 2. Analytical-layer import smoke: the schedule IR, every generator
+#    (incl. repro.core.vshape / repro.seqpipe.schedules via the
+#    registry), and the planner must import with jax POISONED — the
+#    lazy-import guarantee PR 3 established for core.schedules,
+#    enforced here for the whole analytical layer.
+# 3. Docs step: the schedule gallery (docs/SCHEDULES.md) is generated
 #    from the registered generators — regenerate and fail on diff —
 #    and the docs' `>>>` code blocks run under doctest.
-# 3. Run the fast suite (slow marker deselected) through the same entry
+# 4. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).  The
 #    repro.seqpipe tests ride in tier-1 with the same slow split: IR /
 #    table / planner / prefix-KV-attention unit tests plus the
@@ -24,6 +29,14 @@ cd "$(dirname "$0")/.."
 
 python -m pip install -e ".[test]" >/dev/null 2>&1 \
     || echo "ci.sh: pip install skipped (offline?) — using installed deps"
+
+PYTHONPATH=src python -c "
+import sys
+sys.modules['jax'] = None          # poison: any 'import jax' raises
+sys.modules['jaxlib'] = None
+import repro.core.schedule, repro.core.schedules, repro.plan
+"
+echo "ci.sh: analytical layer (schedule IR, generators, planner) imports jax-free"
 
 PYTHONPATH=src python scripts/render_schedules.py --check
 PYTHONPATH=src python -m doctest docs/ARCHITECTURE.md docs/SCHEDULES.md

@@ -70,19 +70,38 @@ GALLERY = [
      "backward phase shifts by n_seq-1 cycles and runs each "
      "microbatch's chunks in reverse, keeping the shallow-chunk "
      "temporal locality per unit."),
+    ("v_min", dict(P=4, m=4),
+     "V-shape fold-back placement (device d holds blocks d and 2P-1-d; "
+     "rows are *devices*): the just-in-time repeating unit FFBWBW holds "
+     "(4P+2)/6 in-flight units per device in steady state — ~1/3 of "
+     "1F1B's peak at depth (0.375 at P=8), though at this toy P=4 the "
+     "warm-up transient raises the measured peak to 0.5 — at the "
+     "longest warm-up ramp of the family."),
+    ("v_half", dict(P=4, m=4),
+     "The controllable-memory middle point: eager forwards under a "
+     "ceil(P/2) in-flight cap released at the deep chunk's backward — "
+     "peak exactly ceil(P/2)/P of m_a, roughly half of v_min's ramp."),
+    ("v_zb", dict(P=4, m=4),
+     "Eager forwards under a P in-flight cap: 1F1B-level peak "
+     "activation and the ideal ZB ramp (the warm-up packs completely; "
+     "deferred W tasks fill the cool-down)."),
 ]
 
 KIND_GLYPH = {"F": "F", "B": "B", "W": "W", "R": "R"}
 
 
 def render_timeline(sched: Schedule) -> str:
-    """ASCII timeline, one row per stage, one char per half-grain."""
+    """ASCII timeline, one row per *device*, one char per half-grain.
+    Devices coincide with stages under the interleaved placement (rows
+    labelled ``stage``); placement-carrying schedules (the V family)
+    label rows ``dev`` — each device then runs tasks of two stages."""
     t0 = min(to_half(t.start) for t in sched.tasks)
     t1 = max(to_half(t.end) for t in sched.tasks)
+    label = "stage" if sched.placement is None else "dev"
     rows = []
-    for s in range(sched.P):
+    for d in range(sched.P):
         row = ["."] * (t1 - t0)
-        for t in sched.stage_tasks(s):
+        for t in sched.device_tasks(d):
             a, b = to_half(t.start) - t0, to_half(t.end) - t0
             glyph = KIND_GLYPH[t.kind]
             if t.chunk % 2 == 1:
@@ -92,9 +111,9 @@ def render_timeline(sched: Schedule) -> str:
                 [str(t.mb % 10)] * (b - a - rech - 1)
             for i, ch in enumerate(cells):
                 assert row[a + i] == ".", \
-                    f"overlap at stage {s}, half-grain {a + i}"
+                    f"overlap on device {d}, half-grain {a + i}"
                 row[a + i] = ch
-        rows.append(f"stage {s} |" + "".join(row) + "|")
+        rows.append(f"{label} {d} |" + "".join(row) + "|")
     return "\n".join(rows)
 
 
@@ -105,9 +124,12 @@ def metrics_block(sched: Schedule) -> str:
         f"bubble {sched.bubble_ratio():.1%}; "
         f"ideal-compute {sched.ideal_compute_fraction():.1%}",
         f"- peak activation: {sched.peak_activation(count_transient=False):.4g}"
-        f" m_a (per-stage max, paper accounting)",
+        f" m_a (per-device max, paper accounting)",
     ]
     extra = []
+    if sched.placement is not None:
+        extra.append(f"placement: {sched.placement.name} "
+                     f"({sched.placement.describe()})")
     if sched.has_w:
         extra.append("split backward (B/W)")
     if sched.has_r:

@@ -71,6 +71,37 @@ def zb_h1_bubble(P: int, m: int, f: float = 1.0, b_in: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# V-shape controllable-memory family (Qi et al. 2024) closed forms
+# ---------------------------------------------------------------------------
+
+def v_min_bubble_bound(P: int, m: int) -> float:
+    """Upper bound on the constructed ``v_min`` bubble ratio.
+
+    The just-in-time V-Min construction (6-grain cycle, 2 chunks,
+    split backward) has zero steady-state bubble; all idle lives in the
+    warm-up/cool-down ramp, whose per-device span is at most
+    ``4P + 2`` grains (first F at grain 0 on device 0, last backward
+    released at ``4P + δ`` with ``δ <= 2``) against ``6m`` grains of
+    work.  This is the V-Min-class trade of *Pipeline Parallelism with
+    Controllable Memory*: ~1/3 of 1F1B's activation for roughly ``4/3``
+    of 1F1B's ``3(P-1)``-grain ramp."""
+    idle = 4 * P + 2
+    return idle / (idle + 6 * m)
+
+
+def vshape_zb_bubble(P: int, m: int, f: float = 1.0, b_in: float = 1.0,
+                     w: float = 1.0) -> float:
+    """Ideal bubble of the eager V-shape schedule (``v_zb``): the
+    ZB-H1 ramp ``(P-1)(f + b_in - w)`` against the V family's
+    ``2(f + b_in + w) m`` grains of per-device work (two chunks per
+    device).  The constructed :func:`repro.core.vshape.v_zb` achieves
+    this exactly for ``m >= P``."""
+    idle = (P - 1) * (f + b_in - w)
+    work = 2 * (f + b_in + w) * m
+    return idle / (idle + work)
+
+
+# ---------------------------------------------------------------------------
 # byte-level memory model
 # ---------------------------------------------------------------------------
 

@@ -2,12 +2,15 @@
 partial-manual ``jax.shard_map`` (manual over the pipeline axis, auto
 TP/DP inside stages).
 
-Layer layout: layers are striped chunk-major — chunk ``c`` on stage ``s``
-holds the contiguous block of ``K = L_pad/(v*P)`` layers starting at
-``(c*P+s)*K``.  K must be a multiple of the arch's *structural* period
-(attention/SSM interleave, MoE cadence); local/global attention patterns
-and padding ("null layers", gate=0 passthrough) ride along as per-layer
-data flags, so e.g. gemma3's 5:1 pattern needs no structural alignment.
+Layer layout: each (device ``d``, chunk ``c``) position holds the
+contiguous block of ``K = L_pad/(v*P)`` layers starting at
+``placement.block(d, c) * K`` — interleaved striping (block
+``c*P + d``) unless the schedule carries a placement (the V-shape
+family's fold-back puts blocks ``d`` and ``2P-1-d`` on device ``d``).
+K must be a multiple of the arch's *structural* period (attention/SSM
+interleave, MoE cadence); local/global attention patterns and padding
+("null layers", gate=0 passthrough) ride along as per-layer data flags,
+so e.g. gemma3's 5:1 pattern needs no structural alignment.
 
 Backward is boundary + rematerialize: each stage stores only its chunk's
 input payload and recomputes internals inside ``jax.vjp`` at B-task time
@@ -55,10 +58,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat
 from repro.configs.base import ModelConfig
+from repro.core.placement import Placement
 from repro.core.schedules import get_schedule
 from repro.core.tasktable import (BWD_FIRST, BWD_LAST, BWD_MID, FWD_FIRST,
-                                  FWD_LAST, FWD_MID, IDLE, RCP_MID, SEND_BWD,
-                                  SEND_FWD, SEND_HOPB, SEND_HOPF, TaskTable,
+                                  FWD_LAST, FWD_MID, IDLE, RCP_MID,
+                                  SEND_B_DOWN, SEND_B_LOC, SEND_BWD,
+                                  SEND_F_LOC, SEND_F_UP, SEND_FWD,
+                                  SEND_HOPB, SEND_HOPF, TaskTable,
                                   build_task_table)
 from repro.models import layers as L
 from repro.models.sharding import shard
@@ -86,34 +92,47 @@ class StageLayout:
     v: int
     L: int              # real layers
     L_pad: int
-    K: int              # layers per (stage, chunk) block
+    K: int              # layers per (device, chunk) block
     period: int         # structural period
     M: int              # periods per block = K // period
+    # layer-block <-> device assignment; None = interleaved striping
+    # (block c*P + d at (device d, chunk c)), the pre-placement layout
+    placement: Optional[Placement] = None
+
+    @property
+    def pl(self) -> Placement:
+        return self.placement if self.placement is not None \
+            else Placement(self.P, self.v)
 
     @staticmethod
-    def build(cfg: ModelConfig, P: int, v: int) -> "StageLayout":
+    def build(cfg: ModelConfig, P: int, v: int,
+              placement: Optional[Placement] = None) -> "StageLayout":
         per = pipeline_period(cfg)
         quantum = P * v * per
         L_pad = -(-cfg.num_layers // quantum) * quantum
         K = L_pad // (P * v)
         return StageLayout(P=P, v=v, L=cfg.num_layers, L_pad=L_pad, K=K,
-                           period=per, M=K // per)
+                           period=per, M=K // per, placement=placement)
 
-    def global_idx(self, s: int, c: int, j: int) -> int:
-        return (c * self.P + s) * self.K + j
+    def global_idx(self, d: int, c: int, j: int) -> int:
+        """Global layer index of local layer ``j`` of the block at
+        (device ``d``, chunk ``c``) — the placement's block assignment
+        (``(c*P + d)*K + j`` under interleaved striping)."""
+        return self.pl.block(d, c) * self.K + j
 
     def flags(self, cfg: ModelConfig) -> Dict[str, np.ndarray]:
-        """window [P,v,M,period] int32; gate [P,v,M,period] f32."""
+        """window [P,v,M,period] int32; gate [P,v,M,period] f32 —
+        indexed by (device, chunk), following the placement."""
         win = np.zeros((self.P, self.v, self.M, self.period), np.int32)
         gate = np.zeros((self.P, self.v, self.M, self.period), np.float32)
-        for s in range(self.P):
+        for d in range(self.P):
             for c in range(self.v):
                 for mi in range(self.M):
                     for j in range(self.period):
-                        g = self.global_idx(s, c, mi * self.period + j)
+                        g = self.global_idx(d, c, mi * self.period + j)
                         if g < self.L:
-                            gate[s, c, mi, j] = 1.0
-                            win[s, c, mi, j] = (
+                            gate[d, c, mi, j] = 1.0
+                            win[d, c, mi, j] = (
                                 0 if cfg.layer_is_global(g)
                                 else cfg.sliding_window)
         return {"window": win, "gate": gate}
@@ -123,9 +142,34 @@ class StageLayout:
 # parameter init (stage-stacked)
 # ---------------------------------------------------------------------------
 
+def remap_blocks(blocks, layout_src: StageLayout, layout_dst: StageLayout):
+    """Re-index stacked block leaves ``[P, v, M, ...]`` from one
+    placement's (device, chunk) layout to another's, preserving the
+    global layer each position holds — so two pipeline runs under
+    different placements compute the *same network* from remapped
+    parameters (and their gradients compare position-for-position
+    after the inverse remap)."""
+    assert (layout_src.P, layout_src.v, layout_src.K) == \
+        (layout_dst.P, layout_dst.v, layout_dst.K)
+    P, v = layout_src.P, layout_src.v
+    src_of = {layout_src.pl.block(d, c): (d, c)
+              for d in range(P) for c in range(v)}
+    idx_d = np.zeros((P, v), np.int64)
+    idx_c = np.zeros((P, v), np.int64)
+    for d in range(P):
+        for c in range(v):
+            idx_d[d, c], idx_c[d, c] = src_of[layout_dst.pl.block(d, c)]
+
+    def one(a):
+        return a[idx_d, idx_c]
+
+    return [jax.tree.map(one, t) for t in blocks]
+
+
 def init_pipeline_params(key, cfg: ModelConfig, layout: StageLayout):
     """Returns (params, logical_specs).  Block leaves are
-    [P, v, M, ...]; embed/head/final_norm/encoder replicated over pp."""
+    [P, v, M, ...] indexed by (device, chunk) under ``layout``'s
+    placement; embed/head/final_norm/encoder replicated over pp."""
     ks = jax.random.split(key, 4)
     dtype = jnp.dtype(cfg.param_dtype)
 
@@ -182,7 +226,6 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
                        microbatch: int, seq_len: int, schedule: str,
                        pp_axis: str = "pp", n_seq: int = 1,
                        **sched_kw) -> PipelineSpec:
-    layout = StageLayout.build(cfg, P, v)
     seq_schedules = ("seq1f1b", "chronos_seq")
     if schedule in seq_schedules:
         sched_kw["n_seq"] = n_seq
@@ -197,6 +240,12 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
                          **sched_kw)
     if schedule in ("1f1b", "zb_h1", "seq1f1b"):
         assert v == 1, f"{schedule} is a v=1 schedule, got v={v}"
+    assert sched.v == v, \
+        f"{schedule} constructs v={sched.v}, spec asked for v={v}"
+    # the layer->device assignment follows the schedule's placement
+    # (interleaved striping unless the generator carries one, e.g. the
+    # V-shape family's fold-back)
+    layout = StageLayout.build(cfg, P, v, placement=sched.placement)
     table = build_task_table(sched)
     prefix = cfg.vision.num_patches if cfg.vision is not None else 0
     enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
@@ -311,7 +360,18 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
     tab = spec.table
     P_, v = tab.P, tab.v
     pp = spec.pp_axis
-    table_arr = jnp.asarray(tab.arrays())              # [T, P, 12]
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 16]
+    # static routing channels (legacy interleaved tables use only
+    # f-down / b-up / wrap; V-shape adds f-up / b-down / local and
+    # never wraps) — unused routes compile away entirely
+    snd_codes = set(int(x) for x in np.unique(tab.send))
+    use_f_dn = SEND_FWD in snd_codes
+    use_f_up = SEND_F_UP in snd_codes
+    use_f_loc = SEND_F_LOC in snd_codes
+    use_b_up = SEND_BWD in snd_codes
+    use_b_dn = SEND_B_DOWN in snd_codes
+    use_b_loc = SEND_B_LOC in snd_codes
+    use_hop = (SEND_HOPF in snd_codes) or (SEND_HOPB in snd_codes)
     act_offsets = np.zeros(v, np.int64)
     total_act = 0
     for c in range(v):
@@ -418,10 +478,9 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
 
         def tick(carry, t):
-            row = table_arr[t, s_idx]                  # [12]
+            row = table_arr[t, s_idx]                  # [16]
             op, c, mb = row[0], row[1], row[2]
             src, aslot, snd = row[3], row[4], row[5]
-            rcf, rcb = row[6], row[7]
 
             blocks_c = [jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, False), t_)
@@ -441,13 +500,13 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             if remat:
                 # rematerialized chunks retire their act slot at the R
                 # tick; their B reads the boundary from the remat ring
-                grm = r_offsets[c] + jnp.maximum(row[9], 0)
+                grm = r_offsets[c] + jnp.maximum(row[13], 0)
                 rmt_in = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
                                                            False),
                     carry["rmt"])
                 bnd_in = jax.tree.map(
-                    lambda r_, a_: jnp.where(row[9] >= 0, r_, a_),
+                    lambda r_, a_: jnp.where(row[13] >= 0, r_, a_),
                     rmt_in, act_in)
             else:
                 bnd_in = act_in
@@ -531,7 +590,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                 # ---- split backward: B = input grad + stash, W = weight
                 # grad from stash.  Both halves linearize the same forward
                 # at the same primal point as the fused path.
-                gw = w_offsets[c] + jnp.maximum(row[8], 0)
+                gw = w_offsets[c] + jnp.maximum(row[12], 0)
 
                 def stash_rd(buf):
                     return jax.tree.map(
@@ -617,7 +676,7 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                                                                False),
                         carry["rmt"])
                     val = jax.tree.map(
-                        lambda new, old: jnp.where(row[9] >= 0, new, old),
+                        lambda new, old: jnp.where(row[13] >= 0, new, old),
                         act_in, cur)
                     rmt = jax.tree.map(
                         lambda buf, p: jax.lax.dynamic_update_index_in_dim(
@@ -631,24 +690,25 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
             carry, out = jax.lax.switch(op, branches, carry)
 
             # ---- route ----
+            # per-channel delivery: the producer's send code picks the
+            # physical route (down / up / wrap / local ppermute), the
+            # consumer's recv columns (rows 6-11) say which queue slot
+            # each channel's arrival lands in.  Wrap arrivals reuse the
+            # down (F @ device 0) / up (B @ device P-1) columns, which
+            # those devices cannot otherwise receive on.  Channels a
+            # table never uses are compiled out (static booleans).
             def sel(code):
                 return jax.tree.map(
                     lambda a: jnp.where(snd == code, a,
                                         jnp.zeros_like(a)), out)
-            perm_f = [(i, i + 1) for i in range(P_ - 1)]
-            perm_b = [(i + 1, i) for i in range(P_ - 1)]
+            perm_dn = [(i, i + 1) for i in range(P_ - 1)]
+            perm_up = [(i + 1, i) for i in range(P_ - 1)]
             perm_h = ([(P_ - 1, 0), (0, P_ - 1)] if P_ > 1 else [(0, 0)])
-            moved_f = _ppermute(sel(SEND_FWD), pp, perm_f)
-            moved_b = _ppermute(sel(SEND_BWD), pp, perm_b)
-            hop_pay = jax.tree.map(lambda a, b: a + b,
-                                   sel(SEND_HOPF), sel(SEND_HOPB))
-            moved_h = _ppermute(hop_pay, pp, perm_h)
-
-            arrive_f = jax.tree.map(
-                lambda a, b: jnp.where(s_idx == 0, b, a), moved_f, moved_h)
-            arrive_b = jax.tree.map(
-                lambda a, b: jnp.where(s_idx == P_ - 1, b, a),
-                moved_b, moved_h)
+            moved_h = None
+            if use_hop:
+                hop_pay = jax.tree.map(lambda a, b: a + b,
+                                       sel(SEND_HOPF), sel(SEND_HOPB))
+                moved_h = _ppermute(hop_pay, pp, perm_h)
 
             def q_write(q, slot, val):
                 cur = jax.tree.map(
@@ -661,9 +721,35 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
                     lambda a, vv: jax.lax.dynamic_update_index_in_dim(
                         a, vv, jnp.maximum(slot, 0), 0), q, val)
 
-            carry = dict(carry,
-                         fq=pin_buf(q_write(carry["fq"], rcf, arrive_f)),
-                         bq=pin_buf(q_write(carry["bq"], rcb, arrive_b)),
+            fq, bq = carry["fq"], carry["bq"]
+            if use_f_dn or use_hop:
+                arr = _ppermute(sel(SEND_FWD), pp, perm_dn) if use_f_dn \
+                    else jax.tree.map(jnp.zeros_like, zero_pay)
+                if use_hop:
+                    arr = jax.tree.map(
+                        lambda a, b: jnp.where(s_idx == 0, b, a),
+                        arr, moved_h)
+                fq = q_write(fq, row[6], arr)
+            if use_f_up:
+                fq = q_write(fq, row[7],
+                             _ppermute(sel(SEND_F_UP), pp, perm_up))
+            if use_f_loc:
+                fq = q_write(fq, row[8], sel(SEND_F_LOC))
+            if use_b_up or use_hop:
+                arr = _ppermute(sel(SEND_BWD), pp, perm_up) if use_b_up \
+                    else jax.tree.map(jnp.zeros_like, zero_pay)
+                if use_hop:
+                    arr = jax.tree.map(
+                        lambda a, b: jnp.where(s_idx == P_ - 1, b, a),
+                        arr, moved_h)
+                bq = q_write(bq, row[10], arr)
+            if use_b_dn:
+                bq = q_write(bq, row[9],
+                             _ppermute(sel(SEND_B_DOWN), pp, perm_dn))
+            if use_b_loc:
+                bq = q_write(bq, row[11], sel(SEND_B_LOC))
+
+            carry = dict(carry, fq=pin_buf(fq), bq=pin_buf(bq),
                          act=pin_buf(carry["act"]))
             if split:
                 carry = dict(carry, wx=pin_buf(carry["wx"]),

@@ -6,8 +6,18 @@ block of one microbatch (the paper's ``T_unit``).  Backward blocks take
 ``b`` grains (default 2, the paper's T_bwd = 2*T_fwd assumption) plus a
 recompute prefix for rematerialized chunks.
 
-Layer striping follows interleaved/chronos convention: chunk ``c`` on
-stage ``s`` holds layer-block index ``c*P + s``; chunk 0 is shallowest.
+Placement (:mod:`repro.core.placement`): *stage* is the pipeline
+position along a chunk's path (every dependency below is written in
+stage space); which **device** executes a (stage, chunk) pair — and
+which layer-block therefore lives there — is the schedule's pluggable
+``placement``.  ``placement=None`` means the classic interleaved
+striping (device = stage, block = ``c*P + s``, chunk 0 shallowest);
+:class:`~repro.core.placement.VShapePlacement` folds odd chunks back
+(device = ``P-1-s``) so the chunk hops are device-local and device
+``d`` holds blocks ``d`` and ``2P-1-d`` (the V-shape family of
+*Pipeline Parallelism with Controllable Memory*).  Occupancy (no
+overlap), comm latency (``tc`` applies only to device-*crossing*
+edges), and ``peak_activation`` are all accounted per device.
 
 Dependencies:
     F(i,c,s)  <- F(i,c,s-1)            (s>0)
@@ -77,6 +87,8 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+from repro.core.placement import Placement
 
 F, B, W, R = "F", "B", "W", "R"
 
@@ -149,6 +161,15 @@ class Schedule:
     # sequence chunks per microbatch (seqpipe family; 1 = whole-sequence
     # tasks, the pre-seqpipe behavior)
     n_seq: int = 1
+    # (stage, chunk) -> device / layer-block mapping; None = interleaved
+    # striping (device == stage), the pre-placement behavior
+    placement: Optional[Placement] = None
+
+    @property
+    def pl(self) -> Placement:
+        """The effective placement (identity/interleaved when unset)."""
+        return self.placement if self.placement is not None \
+            else Placement(self.P, self.v)
 
     @property
     def has_w(self) -> bool:
@@ -171,15 +192,32 @@ class Schedule:
         return sorted([t for t in self.tasks if t.stage == s],
                       key=lambda t: t.start)
 
+    def device_tasks(self, d: int) -> List[Task]:
+        """Tasks executing on device ``d`` (== :meth:`stage_tasks` for
+        the interleaved placement), in start order."""
+        pl = self.pl
+        return sorted([t for t in self.tasks
+                       if pl.device(t.stage, t.chunk) == d],
+                      key=lambda t: t.start)
+
     # -- validity ---------------------------------------------------------
     def check(self, tc: float = 0.0) -> None:
         idx = self.by_key()
         P, v, m, ns = self.P, self.v, self.m, self.n_seq
+        pl = self.pl
         rcs = self.r_chunks()
         kinds = 3 if self.has_w else 2
         n_expect = (kinds * P * v * m + len(rcs) * P * m) * ns
         assert len(self.tasks) == n_expect, \
             f"expected {n_expect} tasks, got {len(self.tasks)}"
+
+        def comm(prod_stage: int, prod_chunk: int, t: Task) -> float:
+            """P2P latency of the edge — zero when the placement keeps
+            producer and consumer on the same device (e.g. the V-shape
+            chunk hops)."""
+            return 0.0 if pl.is_local(prod_stage, prod_chunk,
+                                      t.stage, t.chunk) else tc
+
         for t in self.tasks:
             q = t.seq
             # (dep time, label, time the dep must be satisfied by)
@@ -187,11 +225,13 @@ class Schedule:
             if t.kind == F:
                 if t.stage > 0:
                     deps.append((idx[(F, t.mb, t.chunk, t.stage - 1,
-                                      q)].end + tc,
+                                      q)].end
+                                 + comm(t.stage - 1, t.chunk, t),
                                  "fwd chain", t.start))
                 elif t.chunk > 0:
                     deps.append((idx[(F, t.mb, t.chunk - 1, P - 1,
-                                      q)].end + tc,
+                                      q)].end
+                                 + comm(P - 1, t.chunk - 1, t),
                                  "fwd chunk hop", t.start))
                 if q > 0:
                     deps.append((idx[(F, t.mb, t.chunk, t.stage,
@@ -217,10 +257,12 @@ class Schedule:
                                  "dkv carry", t.grad_needed_at))
                 if t.stage < P - 1:
                     deps.append((idx[(B, t.mb, t.chunk, t.stage + 1,
-                                      q)].end + tc,
+                                      q)].end
+                                 + comm(t.stage + 1, t.chunk, t),
                                  "bwd chain", t.grad_needed_at))
                 elif t.chunk < v - 1:
-                    deps.append((idx[(B, t.mb, t.chunk + 1, 0, q)].end + tc,
+                    deps.append((idx[(B, t.mb, t.chunk + 1, 0, q)].end
+                                 + comm(0, t.chunk + 1, t),
                                  "bwd chunk hop", t.grad_needed_at))
                 else:
                     deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
@@ -228,13 +270,13 @@ class Schedule:
             for d, why, ok_at in deps:
                 assert ok_at >= d - 1e-9, \
                     f"{t.key()} starts {ok_at} before dep ({why}) at {d}"
-        # no overlap per stage
-        for s in range(P):
-            ts = self.stage_tasks(s)
+        # no overlap per device (== per stage for interleaved placement)
+        for dev in range(P):
+            ts = self.device_tasks(dev)
             for a, bb in zip(ts, ts[1:]):
                 assert bb.start >= a.end - 1e-9, \
-                    f"overlap on stage {s}: {a.key()}@{a.start}+{a.dur} vs " \
-                    f"{bb.key()}@{bb.start}"
+                    f"overlap on device {dev}: {a.key()}@{a.start}+{a.dur}" \
+                    f" vs {bb.key()}@{bb.start}"
 
     # -- metrics ----------------------------------------------------------
     def total_time(self) -> float:
@@ -266,9 +308,12 @@ class Schedule:
     def peak_activation(self, per_stage: bool = False,
                         count_transient: bool = True):
         """Peak resident activation in units of m_a (whole-net activation
-        of one microbatch).  Each (stage, chunk, mb) block holds
+        of one microbatch), accounted per *device* (``per_stage=True``
+        returns one entry per device; devices == stages under the
+        interleaved placement).  Each (stage, chunk, mb) block holds
         1/(v*P)*stored_frac[chunk] of m_a from the start of its F until
-        the end of its B.  Recomputed chunks additionally materialize
+        the end of its B, resident on the device the placement assigns
+        to (stage, chunk).  Recomputed chunks additionally materialize
         their own block activation transiently during the replay — from
         the start of the explicit R task when the schedule has one, else
         from the start of the B task's recompute prefix; the paper's
@@ -286,13 +331,15 @@ class Schedule:
         resident until their (late) backwards, which the per-unit
         accounting captures exactly."""
         idx = self.by_key()
+        pl = self.pl
         unit = 1.0 / (self.v * self.P * self.n_seq)
         peaks = []
-        for s in range(self.P):
+        for dev in range(self.P):
             events = []   # (time, delta)
-            for mb in range(self.m):
-                for c in range(self.v):
-                    fr = self.stored_frac.get(c, 1.0)
+            for c in range(self.v):
+                s = pl.stage(dev, c)      # the stage of chunk c here
+                fr = self.stored_frac.get(c, 1.0)
+                for mb in range(self.m):
                     for q in range(self.n_seq):
                         ft = idx[(F, mb, c, s, q)]
                         bt = idx[(B, mb, c, s, q)]
@@ -315,14 +362,17 @@ class Schedule:
         return peaks if per_stage else max(peaks)
 
     def warmup_cooldown_bubbles(self, stage: Optional[int] = None):
-        """Idle intervals on a stage before its first B-of-last-chunk
+        """Idle intervals on a device before its first B-of-last-chunk
         cooldown task etc. — used by the Chronos-Offload planner.
-        Returns list of (t0, t1) idle gaps on the stage."""
-        s = self.P - 1 if stage is None else stage
-        ts = self.stage_tasks(s)
+        Returns list of (t0, t1) idle gaps on the device (the ``stage``
+        argument names a device; they coincide for the interleaved
+        placement).  Gap detection runs on the exact integer half-grain
+        lattice — no float slop."""
+        d = self.P - 1 if stage is None else stage
+        ts = self.device_tasks(d)
         gaps = []
         for a, bb in zip(ts, ts[1:]):
-            if bb.start > a.end + 1e-9:
+            if to_half(bb.start) > to_half(a.end):
                 gaps.append((a.end, bb.start))
         return gaps
 
@@ -330,26 +380,35 @@ class Schedule:
 def retime_with_comm(sched: Schedule, tc: float,
                      sync: bool = False) -> Schedule:
     """Re-simulate start times with a P2P latency ``tc`` (grains) on every
-    cross-stage dependency edge, preserving each stage's task order.
+    device-*crossing* dependency edge, preserving each device's task
+    order.  Under the interleaved placement every cross-stage edge
+    crosses devices (the pre-placement behavior); under a V-shape
+    placement the chunk hops are device-local and pay no latency.
 
     ``sync=False`` (default) models fully-asynchronous P2P (XLA async
     collective-permute): latency delays only the consumer.  ``sync=True``
     reproduces the paper's accounting, where each send/receive blocks the
     stage for ``tc`` (mainstream-framework synchronous P2P): every task
-    with a cross-stage input or output is lengthened by ``tc`` per edge.
-    Under sync the paper's result emerges: chronos with v chunks pays ~v x
-    the 1F1B P2P bubble; under async chronos actually hides P2P *better*
-    than 1F1B (beyond-paper observation, EXPERIMENTS.md §Perf).
+    with a device-crossing input or output is lengthened by ``tc`` per
+    edge.  Under sync the paper's result emerges: chronos with v chunks
+    pays ~v x the 1F1B P2P bubble; under async chronos actually hides
+    P2P *better* than 1F1B (beyond-paper observation, EXPERIMENTS.md
+    §Perf).
     """
-    order: Dict[int, List[Task]] = {s: sched.stage_tasks(s)
-                                    for s in range(sched.P)}
+    pl = sched.pl
+    order: Dict[int, List[Task]] = {d: sched.device_tasks(d)
+                                    for d in range(sched.P)}
     new: Dict[Tuple, Task] = {}
     done: Dict[Tuple, float] = {}
-    ptr = {s: 0 for s in range(sched.P)}
-    free = {s: 0.0 for s in range(sched.P)}
+    ptr = {d: 0 for d in range(sched.P)}
+    free = {d: 0.0 for d in range(sched.P)}
     P, v, ns = sched.P, sched.v, sched.n_seq
     rcs = sched.r_chunks()
     n_total = len(sched.tasks)
+
+    def edge_tc(prod_stage: int, prod_chunk: int, t: Task) -> float:
+        return 0.0 if pl.is_local(prod_stage, prod_chunk,
+                                  t.stage, t.chunk) else tc
 
     def dep_times(t: Task) -> Tuple[float, float]:
         """(earliest start, earliest grad_needed_at) constraints."""
@@ -357,9 +416,11 @@ def retime_with_comm(sched: Schedule, tc: float,
         q = t.seq
         if t.kind == F:
             if t.stage > 0:
-                es = done[(F, t.mb, t.chunk, t.stage - 1, q)] + tc
+                es = done[(F, t.mb, t.chunk, t.stage - 1, q)] \
+                    + edge_tc(t.stage - 1, t.chunk, t)
             elif t.chunk > 0:
-                es = done[(F, t.mb, t.chunk - 1, P - 1, q)] + tc
+                es = done[(F, t.mb, t.chunk - 1, P - 1, q)] \
+                    + edge_tc(P - 1, t.chunk - 1, t)
             if q > 0:       # stage-local KV prefix, no P2P cost
                 es = max(es, done[(F, t.mb, t.chunk, t.stage, q - 1)])
             return es, es
@@ -373,9 +434,11 @@ def retime_with_comm(sched: Schedule, tc: float,
         if t.chunk in rcs:
             es = max(es, done[(R, t.mb, t.chunk, t.stage, q)])
         if t.stage < P - 1:
-            g = done[(B, t.mb, t.chunk, t.stage + 1, q)] + tc
+            g = done[(B, t.mb, t.chunk, t.stage + 1, q)] \
+                + edge_tc(t.stage + 1, t.chunk, t)
         elif t.chunk < v - 1:
-            g = done[(B, t.mb, t.chunk + 1, 0, q)] + tc
+            g = done[(B, t.mb, t.chunk + 1, 0, q)] \
+                + edge_tc(0, t.chunk + 1, t)
         else:
             g = done[(F, t.mb, t.chunk, t.stage, q)]
         if q < ns - 1:      # stage-local dKV carry, no P2P cost
@@ -383,35 +446,44 @@ def retime_with_comm(sched: Schedule, tc: float,
         return es, g
 
     def comm_edges(t: Task) -> int:
-        """cross-stage inputs + outputs of this task (for sync mode)."""
+        """device-crossing inputs + outputs of this task (sync mode)."""
+        me = pl.device(t.stage, t.chunk)
         n = len([k for k in _dep_keys(t, P, v, rcs, ns)
-                 if k[3] != t.stage])
+                 if pl.device(k[3], k[2]) != me])
         if t.kind == F:
-            if t.stage < P - 1 or t.chunk < v - 1:
-                n += 1                      # sends activation onward
+            if t.stage < P - 1:
+                n += 0 if pl.is_local(t.stage, t.chunk,
+                                      t.stage + 1, t.chunk) else 1
+            elif t.chunk < v - 1:
+                n += 0 if pl.is_local(t.stage, t.chunk,
+                                      0, t.chunk + 1) else 1
         elif t.kind == B:
-            if t.stage > 0 or t.chunk > 0:
-                n += 1                      # sends gradient onward
+            if t.stage > 0:
+                n += 0 if pl.is_local(t.stage, t.chunk,
+                                      t.stage - 1, t.chunk) else 1
+            elif t.chunk > 0:
+                n += 0 if pl.is_local(t.stage, t.chunk,
+                                      P - 1, t.chunk - 1) else 1
         return n
 
     progressed = True
     while len(new) < n_total:
         progressed = False
-        for s in range(sched.P):
-            while ptr[s] < len(order[s]):
-                t = order[s][ptr[s]]
+        for d in range(sched.P):
+            while ptr[d] < len(order[d]):
+                t = order[d][ptr[d]]
                 ready = all(k in done for k in _dep_keys(t, P, v, rcs, ns))
                 if not ready:
                     break
                 es, g = dep_times(t)
-                start = max(free[s], es, g - t.recomp)
+                start = max(free[d], es, g - t.recomp)
                 extra = tc * comm_edges(t) if sync else 0.0
                 nt = dataclasses.replace(t, start=start, dur=t.dur + extra,
                                          comm=t.comm + extra)
                 new[t.key()] = nt
                 done[t.key()] = nt.end
-                free[s] = nt.end
-                ptr[s] += 1
+                free[d] = nt.end
+                ptr[d] += 1
                 progressed = True
         if not progressed and len(new) < n_total:
             raise RuntimeError(

@@ -63,8 +63,18 @@ def _align(t: float, cls: int, cyc: int) -> float:
 # baselines
 # ---------------------------------------------------------------------------
 
+def _quant_recomp(recomp: float) -> float:
+    """Quantize a uniform-recompute time prefix up onto the half-grain
+    lattice (the *memory* fraction keeps the exact value; only the
+    modeled replay time rounds, so every constructed start/end stays
+    an exact half-grain multiple)."""
+    import math
+    return math.ceil(recomp * FWD * HALF - 1e-12) / HALF
+
+
 def gpipe(P: int, m: int, recomp: float = 0.0) -> Schedule:
     tasks = []
+    rq = _quant_recomp(recomp)
     for i in range(m):
         for s in range(P):
             tasks.append(Task(F, i, 0, s, i + s, FWD))
@@ -73,7 +83,7 @@ def gpipe(P: int, m: int, recomp: float = 0.0) -> Schedule:
         for s in reversed(range(P)):
             tasks.append(Task(B, i, 0, s,
                               base + j * BWD + (P - 1 - s) * BWD,
-                              BWD + recomp, recomp))
+                              BWD + rq, rq))
     sched = Schedule("gpipe", P, 1, m, FWD, BWD, tasks,
                      stored_frac={0: 1.0 - recomp})
     sched = retime_with_comm(sched, 0.0)
@@ -85,7 +95,8 @@ def onef1b(P: int, m: int, recomp: float = 0.0) -> Schedule:
     """1F1B (DAPPLE).  ``recomp`` in [0,1]: uniform recompute fraction
     (1F1B+R in the paper); adds recomp*FWD grains to every backward."""
     tasks = []
-    bdur = BWD + recomp * FWD
+    rq = _quant_recomp(recomp)
+    bdur = BWD + rq
     for s in range(P):
         warm = min(P - s, m)
         order = [(F, i) for i in range(warm)]
@@ -100,7 +111,7 @@ def onef1b(P: int, m: int, recomp: float = 0.0) -> Schedule:
             if kind == F:
                 tasks.append(Task(F, i, 0, s, t, FWD)); t += FWD
             else:
-                tasks.append(Task(B, i, 0, s, t, bdur, recomp * FWD))
+                tasks.append(Task(B, i, 0, s, t, bdur, rq))
                 t += bdur
     # recompute fraction R discards R of the activations (recompute R of
     # the layers fully): stored fraction = 1 - R.
@@ -504,9 +515,10 @@ REGISTRY = {
     "chronos_zb": chronos_zb,
 }
 
-# sequence-chunked generators (repro.seqpipe) register themselves here;
-# the import is at module end so seqpipe.schedules only depends on the
-# leaf IR module (repro.core.schedule), never back on this one.
+# sequence-chunked generators (repro.seqpipe) and the V-shape family
+# (repro.core.vshape) register themselves here; the imports are at
+# module end so those modules only depend on the leaf IR modules
+# (repro.core.schedule / repro.core.placement), never back on this one.
 
 
 def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
@@ -530,6 +542,17 @@ def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
     rho=, recomp_chunks=``) — their tasks carry the fifth scheduling
     coordinate ``Task.seq`` with causal KV-prefix / dKV-carry deps, and
     the task-table compiler adds per-microbatch KV-carry + dKV rings.
+    V-shape controllable-memory generators (``repro.core.vshape``):
+    ``v_min``, ``v_half``, ``v_zb`` (v=2, split backward) — their
+    schedules carry a :class:`~repro.core.placement.VShapePlacement`
+    (device ``d`` hosts layer-blocks ``d`` and ``2P-1-d``; chunk hops
+    are device-local), and the task-table compiler / SPMD runtime route
+    payloads by placement-mapped device deltas.
+
+    The authoritative generator list is generated from the registry —
+    registered: {registry}.  (``tests/test_schedules.py`` asserts this
+    docstring and :data:`REGISTRY` agree, so new families cannot
+    silently go undocumented.)
 
     A rendered timeline gallery for every generator lives in
     ``docs/SCHEDULES.md`` (regenerated by
@@ -542,6 +565,14 @@ def get_schedule(name: str, P: int, m: int, **kw) -> Schedule:
     return REGISTRY[name](P, m, **kw)
 
 
+from repro.core.vshape import register as _register_vshape  # noqa: E402
 from repro.seqpipe.schedules import register as _register_seqpipe  # noqa: E402
 
+_register_vshape(REGISTRY)
 _register_seqpipe(REGISTRY)
+
+# the generator list in the docstring is generated, not hand-written —
+# it cannot drift from REGISTRY
+if get_schedule.__doc__:            # (not under python -OO)
+    get_schedule.__doc__ = get_schedule.__doc__.replace(
+        "{registry}", ", ".join(f"``{n}``" for n in sorted(REGISTRY)))

@@ -18,8 +18,27 @@ Op codes: 0 idle | 1 fwd-mid | 2 fwd-first | 3 fwd-last (turnaround) |
           4 bwd-mid | 5 bwd-first | 6 bwd-last |
           7 wgrad-mid | 8 wgrad-first | 9 wgrad-last |
           10 remat-mid | 11 remat-first | 12 remat-last
-Send codes: 0 none | 1 fwd-shift | 2 hop F (P-1 -> 0) |
-            3 bwd-shift | 4 hop B (0 -> P-1)
+
+The table is indexed by **device**, not stage: every column is one mesh
+position along the pipeline axis, and the schedule's
+:class:`~repro.core.placement.Placement` decides which (stage, chunk)
+task lands in which column.  Send codes name the *device delta* of the
+payload's consumer (the placement maps stage-space edges to physical
+routes):
+
+Send codes: 0 none | 1 F down (d -> d+1) | 2 hop F (wrap P-1 -> 0) |
+            3 B up (d -> d-1) | 4 hop B (wrap 0 -> P-1) |
+            5 F up (d -> d-1) | 6 B down (d -> d+1) |
+            7 F local (stays on device) | 8 B local
+
+Under the interleaved placement only codes 0-4 appear (the legacy
+routes); a V-shape placement uses 5-8 for the folded chunk (its forward
+moves *up* the devices) and the device-local chunk hops, and never
+wraps.  Receive slots are split per arrival channel (down / up / local)
+so opposite-direction payloads of the same kind can land on one device
+in the same tick; the wrap channels reuse the down (F at device 0) and
+up (B at device P-1) columns, which those devices cannot otherwise
+receive on.
 
 Split-backward schedules (those carrying ``W`` tasks) compile the bwd
 op codes as *input-gradient only* steps: the B tick computes dx, sends
@@ -61,11 +80,15 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.core.placement import Placement
 from repro.core.schedule import B, F, R, Schedule, W, _dep_keys
 
 (IDLE, FWD_MID, FWD_FIRST, FWD_LAST, BWD_MID, BWD_FIRST, BWD_LAST,
  WGT_MID, WGT_FIRST, WGT_LAST, RCP_MID, RCP_FIRST, RCP_LAST) = range(13)
-SEND_NONE, SEND_FWD, SEND_HOPF, SEND_BWD, SEND_HOPB = range(5)
+(SEND_NONE, SEND_FWD, SEND_HOPF, SEND_BWD, SEND_HOPB,
+ SEND_F_UP, SEND_B_DOWN, SEND_F_LOC, SEND_B_LOC) = range(9)
+
+RECV_CHANNELS = ("dn", "up", "loc")
 
 
 @dataclass
@@ -74,14 +97,16 @@ class TaskTable:
     v: int
     m: int
     T: int                       # number of ticks
-    op: np.ndarray               # [T, P] int32
+    op: np.ndarray               # [T, P] int32 (columns indexed by DEVICE)
     chunk: np.ndarray            # [T, P]
     mb: np.ndarray               # [T, P]
     src_slot: np.ndarray         # [T, P] queue slot read by this task (-1)
     act_slot: np.ndarray         # [T, P] boundary store/read slot (-1)
     send: np.ndarray             # [T, P] send code
-    recv_f: np.ndarray           # [T, P] F-queue slot written this tick (-1)
-    recv_b: np.ndarray           # [T, P] B-queue slot written this tick (-1)
+    recv_f: Dict[str, np.ndarray]  # channel ("dn"|"up"|"loc") -> [T, P]
+                                 # F-queue slot written this tick (-1);
+                                 # wrap (hop) arrivals use "dn"
+    recv_b: Dict[str, np.ndarray]  # same for B payloads; wraps use "up"
     w_slot: np.ndarray           # [T, P] W-stash slot: write at B, read at W
     r_slot: np.ndarray           # [T, P] remat-ring slot: write at R, read at B
     fq_depth: int                # F payload queue depth
@@ -98,6 +123,7 @@ class TaskTable:
     kv_depth: Dict[int, int] = dataclasses.field(default_factory=dict)
                                  # chunk -> KV-carry slots (per microbatch,
                                  # lifetime F[mb,0] -> B[mb,0])
+    placement_name: str = "interleaved"
 
     @property
     def has_w(self) -> bool:
@@ -108,14 +134,21 @@ class TaskTable:
         return bool(self.rmt_depth)
 
     def arrays(self):
-        """Stacked int32 [T, P, 12] for device transfer."""
+        """Stacked int32 [T, P, 16] for device transfer.  Column order:
+        op, chunk, mb, src_slot, act_slot, send, rcf_dn, rcf_up,
+        rcf_loc, rcb_dn, rcb_up, rcb_loc, w_slot, r_slot, seq,
+        kv_slot."""
         seq = self.seq if self.seq is not None \
             else np.zeros_like(self.op)
         kvs = self.kv_slot if self.kv_slot is not None \
             else -np.ones_like(self.op)
         return np.stack([self.op, self.chunk, self.mb, self.src_slot,
-                         self.act_slot, self.send, self.recv_f,
-                         self.recv_b, self.w_slot,
+                         self.act_slot, self.send,
+                         self.recv_f["dn"], self.recv_f["up"],
+                         self.recv_f["loc"],
+                         self.recv_b["dn"], self.recv_b["up"],
+                         self.recv_b["loc"],
+                         self.w_slot,
                          self.r_slot, seq, kvs], axis=-1).astype(np.int32)
 
 
@@ -138,37 +171,83 @@ def _op_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
     return BWD_MID
 
 
-def _send_code(kind: str, chunk: int, stage: int, P: int, v: int) -> int:
+def _payload_consumer(kind: str, chunk: int, stage: int, P: int, v: int):
+    """(stage, chunk) of the task consuming this task's payload, or
+    None (W/R tasks and the pipeline endpoints send nothing)."""
     if kind == F:
         if stage < P - 1:
-            return SEND_FWD
-        return SEND_HOPF if chunk < v - 1 else SEND_NONE
+            return stage + 1, chunk
+        return (0, chunk + 1) if chunk < v - 1 else None
     if kind in (W, R):
-        return SEND_NONE
+        return None
     if stage > 0:
+        return stage - 1, chunk
+    return (P - 1, chunk - 1) if chunk > 0 else None
+
+
+def _send_code(kind: str, chunk: int, stage: int, P: int, v: int,
+               pl: Placement) -> int:
+    cons = _payload_consumer(kind, chunk, stage, P, v)
+    if cons is None:
+        return SEND_NONE
+    d0 = pl.device(stage, chunk)
+    d1 = pl.device(cons[0], cons[1])
+    hop = cons[1] != chunk          # chunk hop vs chain edge
+    if kind == F:
+        if d1 == d0:
+            return SEND_F_LOC
+        if hop:
+            # a device-crossing chunk hop always uses the wrap channel
+            # (edge-type, not delta: at P=2 the interleaved P-1 -> 0
+            # hop *looks* like an up-shift but must stay on the wrap
+            # route the legacy tables and the seqpipe runtime expect)
+            assert (d0, d1) == (P - 1, 0), f"unroutable F hop {d0}->{d1}"
+            return SEND_HOPF
+        if d1 == d0 + 1:
+            return SEND_FWD
+        assert d1 == d0 - 1, f"unroutable F chain {d0}->{d1}"
+        return SEND_F_UP
+    if d1 == d0:
+        return SEND_B_LOC
+    if hop:
+        assert (d0, d1) == (0, P - 1), f"unroutable B hop {d0}->{d1}"
+        return SEND_HOPB
+    if d1 == d0 - 1:
         return SEND_BWD
-    return SEND_HOPB if chunk > 0 else SEND_NONE
+    assert d1 == d0 + 1, f"unroutable B chain {d0}->{d1}"
+    return SEND_B_DOWN
+
+
+# arrival channel of each send code (see module docstring: wraps land on
+# the otherwise-unreceivable dn/up columns of the edge devices)
+_SEND_CHANNEL = {SEND_FWD: "dn", SEND_HOPF: "dn", SEND_F_UP: "up",
+                 SEND_F_LOC: "loc", SEND_BWD: "up", SEND_HOPB: "up",
+                 SEND_B_DOWN: "dn", SEND_B_LOC: "loc"}
 
 
 def build_task_table(sched: Schedule) -> TaskTable:
     P, v, m, ns = sched.P, sched.v, sched.m, sched.n_seq
+    pl = sched.pl
     rcs = sched.r_chunks()
     units = [(i, q) for i in range(m) for q in range(ns)]
 
-    # ---- tick assignment (topological levels, stage order preserved) ----
+    def dev(stage: int, chunk: int) -> int:
+        return pl.device(stage, chunk)
+
+    # ---- tick assignment (topological levels, device order preserved) --
     tasks = sorted(sched.tasks, key=lambda t: (t.start, t.kind == B,
                                                t.stage))
     tick: Dict[Tuple, int] = {}
-    stage_last = [-1] * P
+    dev_last = [-1] * P
     for t in tasks:
-        lo = stage_last[t.stage] + 1
+        d = dev(t.stage, t.chunk)
+        lo = dev_last[d] + 1
         for dep in _dep_keys(t, P, v, rcs, ns):
-            if dep[3] != t.stage:
-                lo = max(lo, tick[dep] + 1)     # cross-stage: 1-tick latency
-            else:
-                lo = max(lo, tick[dep] + 1)
+            # cross-device or same-device: either way the payload /
+            # result is visible one tick later
+            lo = max(lo, tick[dep] + 1)
         tick[t.key()] = lo
-        stage_last[t.stage] = lo
+        dev_last[d] = lo
     T = max(tick.values()) + 1
 
     def ring_depth(open_kind, close_kind, chunks=None):
@@ -274,13 +353,14 @@ def build_task_table(sched: Schedule) -> TaskTable:
                                     (B, i, c - 1, P - 1, q)))
 
     def color(edges):
-        """Greedy interval coloring per consumer stage.
-        Interval: (arrive=tick[prod], free=tick[cons]]."""
+        """Greedy interval coloring per consumer *device* (the queue
+        buffers live per device).  Interval: (arrive=tick[prod],
+        free=tick[cons]]."""
         slots: Dict[Tuple, int] = {}
         depth = 1
         per_stage: Dict[int, List[Tuple[int, int, Tuple]]] = {}
         for prod, cons in edges:
-            per_stage.setdefault(cons[3], []).append(
+            per_stage.setdefault(dev(cons[3], cons[2]), []).append(
                 (tick[prod], tick[cons], prod))
         for s, ivs in per_stage.items():
             ivs.sort()
@@ -319,8 +399,8 @@ def build_task_table(sched: Schedule) -> TaskTable:
     src = -np.ones(shape, np.int32)
     act = -np.ones(shape, np.int32)
     snd = np.zeros(shape, np.int32)
-    rcf = -np.ones(shape, np.int32)
-    rcb = -np.ones(shape, np.int32)
+    rcf = {ch: -np.ones(shape, np.int32) for ch in RECV_CHANNELS}
+    rcb = {ch: -np.ones(shape, np.int32) for ch in RECV_CHANNELS}
     wsl = -np.ones(shape, np.int32)
     rsl = -np.ones(shape, np.int32)
     seq = np.zeros(shape, np.int32)
@@ -328,51 +408,60 @@ def build_task_table(sched: Schedule) -> TaskTable:
 
     for t in sched.tasks:
         tt, s, q = tick[t.key()], t.stage, t.seq
+        d = dev(s, t.chunk)              # the table column (device)
         # backward-phase unit order (writers and readers of the W-stash
         # and remat rings both follow it, so mod-depth stays FIFO)
         beta = t.mb * ns + (ns - 1 - q)
         oc = _op_code(t.kind, t.chunk, s, P, v)
-        op[tt, s] = oc
-        chunk[tt, s] = t.chunk
-        mbt[tt, s] = t.mb
-        seq[tt, s] = q
-        snd[tt, s] = _send_code(t.kind, t.chunk, s, P, v)
+        op[tt, d] = oc
+        chunk[tt, d] = t.chunk
+        mbt[tt, d] = t.mb
+        seq[tt, d] = q
+        code = _send_code(t.kind, t.chunk, s, P, v, pl)
+        snd[tt, d] = code
         # KV-carry/dKV ring slot (FIFO by mb): every F appends its
         # chunk's K/V; every B replays from it and accumulates dKV
         if ns > 1 and t.kind in (F, B):
-            kvs[tt, s] = t.mb % kv_depth[t.chunk]
+            kvs[tt, d] = t.mb % kv_depth[t.chunk]
         # W-stash slot: written at the B tick, read at W
         if has_w and t.kind in (B, W):
-            wsl[tt, s] = beta % wstash_depth[t.chunk]
+            wsl[tt, d] = beta % wstash_depth[t.chunk]
         # remat-ring slot: written at R, read at the B.
         # First-position blocks have no boundary payload to hand off
         # (their input is the token batch, re-fetched at B time).
         if t.chunk in rcs and t.kind in (R, B) \
                 and oc not in (RCP_FIRST, BWD_FIRST):
-            rsl[tt, s] = beta % rmt_depth[t.chunk]
+            rsl[tt, d] = beta % rmt_depth[t.chunk]
         # boundary activation slot (FIFO by mb when n_seq == 1, exact
         # interval coloring otherwise); rematerialized chunks retire
         # their act slot at the R tick, so their B reads the remat ring
         if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST, RCP_FIRST) \
                 and not (t.kind == B and t.chunk in rcs):
-            act[tt, s] = (t.mb % act_depth[t.chunk] if ns == 1
+            act[tt, d] = (t.mb % act_depth[t.chunk] if ns == 1
                           else act_color[(t.chunk, s, t.mb, q)])
         # input queue slot
         if t.kind == F and oc not in (FWD_FIRST,):
             prod = (F, t.mb, t.chunk, s - 1, q) if s > 0 else \
                 (F, t.mb, t.chunk - 1, P - 1, q)
-            src[tt, s] = f_slots[prod]
+            src[tt, d] = f_slots[prod]
         if t.kind == B and oc not in (BWD_LAST,):
             prod = (B, t.mb, t.chunk, s + 1, q) if s < P - 1 else \
                 (B, t.mb, t.chunk + 1, 0, q)
-            src[tt, s] = b_slots[prod]
-        # receive side: payload I produce lands at the consumer this tick
+            src[tt, d] = b_slots[prod]
+        # receive side: the payload I produce lands at the consumer's
+        # device this tick, on the channel my send code feeds
         if t.kind == F and t.key() in cons_f:
-            cs = cons_f[t.key()][3]
-            rcf[tt, cs] = f_slots[t.key()]
+            ck = cons_f[t.key()]
+            cd, ch = dev(ck[3], ck[2]), _SEND_CHANNEL[code]
+            assert rcf[ch][tt, cd] < 0, \
+                f"tick {tt}: two F payloads on channel {ch} at device {cd}"
+            rcf[ch][tt, cd] = f_slots[t.key()]
         if t.kind == B and t.key() in cons_b:
-            cs = cons_b[t.key()][3]
-            rcb[tt, cs] = b_slots[t.key()]
+            ck = cons_b[t.key()]
+            cd, ch = dev(ck[3], ck[2]), _SEND_CHANNEL[code]
+            assert rcb[ch][tt, cd] < 0, \
+                f"tick {tt}: two B payloads on channel {ch} at device {cd}"
+            rcb[ch][tt, cd] = b_slots[t.key()]
 
     return TaskTable(P=P, v=v, m=m, T=T, op=op, chunk=chunk, mb=mbt,
                      src_slot=src, act_slot=act, send=snd, recv_f=rcf,
@@ -380,7 +469,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
                      bq_depth=bq_depth, act_depth=act_depth,
                      wstash_depth=wstash_depth, rmt_depth=rmt_depth,
                      name=sched.name, n_seq=ns, seq=seq, kv_slot=kvs,
-                     kv_depth=kv_depth)
+                     kv_depth=kv_depth, placement_name=pl.name)
 
 
 def validate_table(tab: TaskTable) -> None:
@@ -516,15 +605,14 @@ def validate_table(tab: TaskTable) -> None:
                             del live_kv[key]
             assert not live_act, f"stage {s}: unread act slots {live_act}"
             assert not live_kv, f"stage {s}: unreleased KV slots {live_kv}"
-    # queue write-before-read per slot
+    # queue writes land in range and at most one payload per (tick,
+    # device, channel); a device receives at most one F and one B
+    # payload per (tick, channel) by construction
     for qname, rc, depth in (("F", tab.recv_f, tab.fq_depth),
                              ("B", tab.recv_b, tab.bq_depth)):
-        for s in range(P):
-            writes = {}
-            for t in range(tab.T):
-                slot = rc[t, s]
-                if slot >= 0:
-                    writes[slot] = t
-            # consumption must follow a write
+        for ch, arr in rc.items():
+            assert arr.shape == tab.op.shape
+            assert int(arr.max(initial=-1)) < depth, \
+                f"{qname}-queue {ch} slot out of range"
     # (full read/write causality is covered by the numerical equivalence
     #  test of the executor against single-device autodiff)

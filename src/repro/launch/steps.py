@@ -280,6 +280,9 @@ def make_serve_steps(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
 # pipeline (multi-pod) train step
 # ---------------------------------------------------------------------------
 
+VSHAPE_SCHEDULES = ("v_min", "v_half", "v_zb")
+
+
 def plan_schedule_kwargs(plan: ParallelPlan) -> Dict[str, Any]:
     """ParallelPlan -> schedule-generator kwargs beyond (P, m, v).
 
@@ -288,8 +291,11 @@ def plan_schedule_kwargs(plan: ParallelPlan) -> Dict[str, Any]:
     explicit ``R`` tasks); ``1f1b``/``gpipe`` take the uniform-recompute
     fraction (1F1B+R baseline); ``chronos_seq`` composes recompute with
     sequence chunking (``plan.seq_chunks`` rides separately through
-    ``make_pipeline_spec(n_seq=...)``); other generators need nothing
-    extra."""
+    ``make_pipeline_spec(n_seq=...)``); the V-shape family
+    (:data:`VSHAPE_SCHEDULES`) is a fixed v=2 construction carrying its
+    own placement — the layer->device assignment then comes from the
+    schedule's ``Placement`` (see ``StageLayout``), not the implicit
+    interleaved stripe; other generators need nothing extra."""
     rc = plan.recompute
     if (plan.schedule == "chronos_recomp" and rc.mode != "none") or \
             (plan.schedule == "chronos_seq" and rc.mode == "chronos"
@@ -331,6 +337,10 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     mbg = plan.microbatch_size * dp
     m = max(2, shape.global_batch // mbg)
 
+    if plan.schedule in VSHAPE_SCHEDULES:
+        assert plan.num_chunks == 2, \
+            f"{plan.schedule} is a fixed v=2 V-shape construction, " \
+            f"got num_chunks={plan.num_chunks}"
     spec = make_pipeline_spec(
         cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
         seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis,

@@ -9,6 +9,14 @@ same model code runs everywhere.
 Inside a partial-manual shard_map (pipeline mode, manual over "pp"/"pod")
 raw PartitionSpecs still work for the auto axes — validated against
 jax 0.8.
+
+Pipeline block parameters are stacked ``[P, v, M, ...]`` with the
+leading logical "pp" axis enumerating *devices*; which layer-block a
+``[device, chunk]`` position holds is decided by the schedule's
+:class:`repro.core.placement.Placement` (interleaved striping or the
+V-shape fold-back), resolved through
+``repro.core.pipeline_runtime.StageLayout.global_idx`` — sharding never
+assumes the implicit ``c*P + s`` stripe.
 """
 from __future__ import annotations
 

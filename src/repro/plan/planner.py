@@ -2,7 +2,10 @@
 
 Given a :class:`~repro.configs.base.ModelConfig`, a (pp, tp) mesh shape,
 and an HBM budget, search the registered schedule families x recompute
-ratio x offload depth using the schedule IR's constructed metrics (peak
+ratio x offload depth x seq-chunk count x **placement** (interleaved
+striping vs the V-shape fold-back of *Pipeline Parallelism with
+Controllable Memory* — the axis *OptPipe* shows is jointly optimizable
+with scheduling) using the schedule IR's constructed metrics (peak
 activation, bubble, ideal-compute fraction) and the byte-level
 :class:`~repro.core.analysis.MemoryModel`, and emit an *executable*
 plan: a :class:`~repro.configs.base.ParallelPlan` plus the constructed
@@ -55,6 +58,11 @@ class PlannerQuery:
     max_seq_chunks: int = 4         # largest sequence-chunk count searched
                                     # (only counts dividing seq_len - 1
                                     # are executable, see _seq_counts)
+    # placement axis: which layer->device assignments to search.  The
+    # V-shape family (v_min / v_half / v_zb) only enters the space when
+    # "vshape" is listed; restrict to ("interleaved",) for the
+    # pre-placement design space.
+    placements: Tuple[str, ...] = ("interleaved", "vshape")
     # activation-estimator calibration (1.0 = this repo's Megatron-
     # selective accounting; ``benchmarks.common.PAPER_ACT_SCALE``
     # reproduces the paper's full-storage-no-SP accounting)
@@ -100,6 +108,7 @@ class DesignPoint:
     offload_overlap: float          # Eq. (5) hidden fraction (1.0 = free)
     score: float                    # throughput proxy used for ranking
     seq_chunks: int = 1             # sequence chunks (repro.seqpipe)
+    placement: str = "interleaved"  # layer->device assignment axis
 
     @property
     def offload_frac(self) -> float:
@@ -168,6 +177,7 @@ class ExecutablePlan:
         p = self.point
         return {
             "pick": p.describe(), "schedule": p.schedule, "v": p.v,
+            "placement": p.placement,
             "seq_chunks": p.seq_chunks,
             "recomp_chunks": p.recomp_chunks,
             "offload_chunks": p.offload_chunks,
@@ -235,27 +245,35 @@ def _seq_counts(q: PlannerQuery):
 
 def _candidates(q: PlannerQuery):
     """(schedule name, kwargs, v, recomp_chunks, uniform_recomp,
-    seq_chunks)."""
+    seq_chunks, placement)."""
     out = []
     for r in (0.0, 0.25, 0.5, 0.75):
-        out.append(("1f1b", {"recomp": r} if r else {}, 1, 0, r, 1))
-    out.append(("zb_h1", {}, 1, 0, 0.0, 1))
+        out.append(("1f1b", {"recomp": r} if r else {}, 1, 0, r, 1,
+                    "interleaved"))
+    out.append(("zb_h1", {}, 1, 0, 0.0, 1, "interleaved"))
     for v in range(2, q.max_v + 1):
-        out.append(("interleaved", {"v": v}, v, 0, 0.0, 1))
-        out.append(("chronos", {"v": v}, v, 0, 0.0, 1))
-        out.append(("chronos_zb", {"v": v}, v, 0, 0.0, 1))
+        out.append(("interleaved", {"v": v}, v, 0, 0.0, 1, "interleaved"))
+        out.append(("chronos", {"v": v}, v, 0, 0.0, 1, "interleaved"))
+        out.append(("chronos_zb", {"v": v}, v, 0, 0.0, 1, "interleaved"))
         for rc in range(1, v):
             out.append(("chronos_recomp", {"v": v, "recomp_chunks": rc},
-                        v, rc, 0.0, 1))
-    out.append(("chronos_zero2", {"v": 2, "group": 2}, 2, 0, 0.0, 1))
+                        v, rc, 0.0, 1, "interleaved"))
+    out.append(("chronos_zero2", {"v": 2, "group": 2}, 2, 0, 0.0, 1,
+                "interleaved"))
     # sequence-chunked family (repro.seqpipe): long-context points
     for k in _seq_counts(q):
-        out.append(("seq1f1b", {"n_seq": k}, 1, 0, 0.0, k))
-        out.append(("chronos_seq", {"v": 2, "n_seq": k}, 2, 0, 0.0, k))
+        out.append(("seq1f1b", {"n_seq": k}, 1, 0, 0.0, k, "interleaved"))
+        out.append(("chronos_seq", {"v": 2, "n_seq": k}, 2, 0, 0.0, k,
+                    "interleaved"))
         out.append(("chronos_seq",
                     {"v": 2, "n_seq": k, "recomp_chunks": 1},
-                    2, 1, 0.0, k))
-    return out
+                    2, 1, 0.0, k, "interleaved"))
+    # V-shape controllable-memory family (repro.core.vshape): the
+    # placement axis — device d holds blocks d and 2P-1-d, split B/W
+    if "vshape" in q.placements:
+        for name in ("v_min", "v_half", "v_zb"):
+            out.append((name, {}, 2, 0, 0.0, 1, "vshape"))
+    return [c for c in out if c[6] in q.placements]
 
 
 def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
@@ -268,7 +286,7 @@ def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
     m_sched = 4 * q.pp
     L = q.cfg.num_layers
     points = []
-    for name, kw, v, rc, unif, nsq in _candidates(q):
+    for name, kw, v, rc, unif, nsq, plname in _candidates(q):
         kwt = tuple(sorted(kw.items()))
         act_frac, bubble, cf, has_cooldown, kv_frac = _metrics(
             name, q.pp, m_sched, kwt)
@@ -305,7 +323,8 @@ def enumerate_points(q: PlannerQuery) -> List[DesignPoint]:
                 act_frac=act_frac, bubble=bubble, compute_frac=cf,
                 act_bytes=act, state_bytes=state, total_bytes=total,
                 fits=total <= q.hbm_bytes, max_layers=max_l,
-                offload_overlap=overlap, score=score, seq_chunks=nsq))
+                offload_overlap=overlap, score=score, seq_chunks=nsq,
+                placement=plname))
     points.sort(key=lambda p: (-p.score, p.total_bytes))
     return points
 

@@ -110,9 +110,11 @@ def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
     tab = spec.table
     P_, v, ns = tab.P, tab.v, tab.n_seq
     assert ns > 1 and not tab.has_w
+    assert tab.placement_name == "interleaved", \
+        "seq-chunked executor supports the interleaved placement only"
     pp = spec.pp_axis
     Sc = spec.S // ns
-    table_arr = jnp.asarray(tab.arrays())              # [T, P, 12]
+    table_arr = jnp.asarray(tab.arrays())              # [T, P, 16]
 
     def offsets(depths):
         off = np.zeros(v, np.int64)
@@ -202,11 +204,13 @@ def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
             return jax.lax.dynamic_index_in_dim(arr, mb, 0, keepdims=False)
 
         def tick(carry, t):
-            row = table_arr[t, s_idx]                  # [12]
+            row = table_arr[t, s_idx]                  # [16]
             op, c, mb = row[0], row[1], row[2]
             src, aslot, snd = row[3], row[4], row[5]
-            rcf, rcb = row[6], row[7]
-            q, kvslot = row[10], row[11]
+            # seq tables are interleaved-placement only: F payloads
+            # arrive on the down channel, B payloads on the up channel
+            rcf, rcb = row[6], row[10]
+            q, kvslot = row[14], row[15]
             pos0 = q * Sc
 
             blocks_c = [jax.tree.map(
@@ -232,13 +236,13 @@ def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
                 lambda a: jax.lax.dynamic_index_in_dim(a, gkv, 0, False),
                 carry["dkv"])
             if remat:
-                grm = r_offsets[c] + jnp.maximum(row[9], 0)
+                grm = r_offsets[c] + jnp.maximum(row[13], 0)
                 rmt_in = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(a, grm, 0,
                                                            False),
                     carry["rmt"])
                 bnd_in = jax.tree.map(
-                    lambda r_, a_: jnp.where(row[9] >= 0, r_, a_),
+                    lambda r_, a_: jnp.where(row[13] >= 0, r_, a_),
                     rmt_in, act_in)
             else:
                 bnd_in = act_in
@@ -383,7 +387,7 @@ def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
                                                                False),
                         carry["rmt"])
                     val = jax.tree.map(
-                        lambda new, old: jnp.where(row[9] >= 0, new, old),
+                        lambda new, old: jnp.where(row[13] >= 0, new, old),
                         act_in, cur)
                     rmt = jax.tree.map(
                         lambda buf, p: jax.lax.dynamic_update_index_in_dim(

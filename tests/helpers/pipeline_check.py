@@ -72,16 +72,18 @@ lm_params, _ = lm.init(jax.random.key(9))
 
 def to_lm_stack(pipe_leaf, j):
     """pipeline leaf [P, v, M, ...] (period position j) -> lm stacked
-    [num_periods, ...] in global layer order (real layers only)."""
+    [num_periods, ...] in global layer order (real layers only).  The
+    (device, chunk) -> global-layer assignment comes from the layout's
+    placement (interleaved striping or V-shape fold-back)."""
     a = np.asarray(pipe_leaf)
     nper = L_ // per
     out = np.zeros((nper,) + a.shape[3:], a.dtype)
-    for s in range(P_):
+    for d in range(P_):
         for c in range(v):
             for mi in range(M):
-                g = (c * P_ + s) * K + mi * per + j
+                g = spec.layout.global_idx(d, c, mi * per + j)
                 if g < L_ and g % per == j:
-                    out[g // per] = a[s, c, mi]
+                    out[g // per] = a[d, c, mi]
     return jnp.asarray(out)
 
 

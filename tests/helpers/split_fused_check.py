@@ -16,8 +16,15 @@ Pairs:
             gradients and the loss differ only by float summation
             order (one dot over S vs n_seq partial dots + adds) —
             tolerance 2e-5.
+    vshape  chronos v=2 (interleaved placement, fused backward) vs
+            v_min (V-shape placement: device d holds blocks d and
+            2P-1-d, split B/W backward).  The v_min parameters are the
+            chronos parameters remapped position-for-position to the
+            V layout (`remap_blocks`), so both runs compute the same
+            network; gradients are remapped back before comparing.
+            Same-math-different-split tolerance as the zb pair (1e-5).
 
-Usage: python split_fused_check.py [--pair zb|recomp|seq] [P] [m]
+Usage: python split_fused_check.py [--pair zb|recomp|seq|vshape] [P] [m]
 Exits 0 when max |g_a - g_b| <= tol; prints MAXERR=... for the parent
 test to parse.
 """
@@ -70,10 +77,24 @@ elif pair == "seq":
                                 n_seq=2)
     assert spec_b.n_seq == 2 and spec_b.table.n_seq == 2
     tol = 2e-5
+elif pair == "vshape":
+    spec_a = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="chronos")
+    spec_b = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                seq_len=S, schedule="v_min")
+    assert spec_b.table.placement_name == "vshape" and spec_b.table.has_w
+    tol = 1e-5
 else:
     raise SystemExit(f"unknown pair {pair!r}")
 
 params, _ = init_pipeline_params(jax.random.key(0), cfg, spec_a.layout)
+params_b = params
+if pair == "vshape":
+    # same network under both placements: remap the interleaved-layout
+    # blocks position-for-position into the V layout
+    from repro.core.pipeline_runtime import remap_blocks
+    params_b = dict(params, blocks=remap_blocks(
+        params["blocks"], spec_a.layout, spec_b.layout))
 tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                             cfg.vocab_size)
 batch = {"tokens": tokens}
@@ -85,7 +106,13 @@ if pair == "seq":
 
 with shard_env(mesh, {}):
     g_a, met_a = jax.jit(make_train_grads_fn(spec_a, mesh))(params, batch)
-    g_b, met_b = jax.jit(make_train_grads_fn(spec_b, mesh))(params, batch)
+    g_b, met_b = jax.jit(make_train_grads_fn(spec_b, mesh))(params_b,
+                                                            batch)
+if pair == "vshape":
+    # map the V-layout block grads back so every position compares the
+    # same global layer
+    g_b = dict(g_b, blocks=remap_blocks(g_b["blocks"], spec_b.layout,
+                                        spec_a.layout))
 
 errs = [abs(float(met_a["loss"]) - float(met_b["loss"]))]
 for a, b in zip(jax.tree.leaves(g_a), jax.tree.leaves(g_b)):

@@ -93,6 +93,37 @@ def test_offload_pipeline_step_shapes():
     assert "OK=1" in r.stdout
 
 
+def test_vshape_matches_interleaved_runtime():
+    """v_min (V-shape placement: device d holds blocks d and 2P-1-d,
+    split B/W backward, device-local chunk hops incl. the new up/down/
+    local routing channels) must reproduce the interleaved chronos
+    pipeline gradients on the same network (parameters remapped
+    position-for-position between placements) to <= 1e-5."""
+    r = _run([sys.executable, SPLIT_HELPER, "--pair", "vshape", "2", "4"])
+    assert r.returncode == 0, \
+        f"vshape-vs-interleaved failed:\n{r.stdout[-2000:]}\n" \
+        f"{r.stderr[-3000:]}"
+    assert "MAXERR=" in r.stdout
+
+
+@pytest.mark.slow
+def test_vshape_deeper_pipeline_matches_interleaved():
+    """P=4 exercises every V routing channel (F up, B down, locals) and
+    the mid-stage op codes on the folded chunk."""
+    r = _run([sys.executable, SPLIT_HELPER, "--pair", "vshape", "4", "8"])
+    assert r.returncode == 0, \
+        f"vshape P=4 failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "MAXERR=" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule", ["v_min", "v_half", "v_zb"])
+def test_vshape_grad_equivalence_vs_single_device(schedule):
+    """The whole V family against single-device autodiff (the reference
+    mapping runs through the placement-aware ``StageLayout.global_idx``)."""
+    run_case("tinyllama-1.1b", schedule, P=2, v=2, m=4)
+
+
 def test_seq_chunked_matches_unchunked_runtime():
     """chronos_seq (sequence-chunked units, prefix-KV causal attention,
     dKV accumulation through the vjp cotangents) must reproduce the

@@ -104,6 +104,34 @@ def test_planner_seq_chunking_beats_recompute_when_tight():
     assert plan.seq_chunks == p.seq_chunks
 
 
+def test_planner_vshape_takes_an_hbm_cell_from_chronos_recomp():
+    """Acceptance: the placement axis must pay off — in an
+    HBM-constrained cell the pre-placement design space solved with
+    chronos_recomp (paying the replay tax), the full space picks a
+    V-shape point: v_min's ~3/8 m_a peak fits and its useful-compute
+    fraction beats recompute's.  (Both queries pin max_seq_chunks=1 to
+    isolate the placement axis, as the legacy recompute test does.)"""
+    kw = dict(pp=8, tp=8, hbm_bytes=20 * GB, reserve=1 * GB,
+              act_scale=_paper_query().act_scale, max_seq_chunks=1)
+    legacy = plan_under_budget(with_layers(48),
+                               placements=("interleaved",), **kw)
+    assert legacy.point.schedule == "chronos_recomp"
+    assert legacy.point.placement == "interleaved"
+    ep = plan_under_budget(with_layers(48), **kw)
+    p = ep.point
+    assert p.placement == "vshape"
+    assert p.schedule in ("v_min", "v_half", "v_zb")
+    assert p.recomp_chunks == 0 and p.offload_chunks == 0
+    assert p.score > legacy.point.score
+    # and the pick is executable end-to-end
+    sched = ep.schedule()
+    assert sched.placement is not None and sched.placement.name == "vshape"
+    tab = ep.task_table()
+    assert tab.placement_name == "vshape" and tab.has_w
+    plan = ep.parallel_plan()
+    assert plan.schedule == p.schedule and plan.num_chunks == 2
+
+
 def test_planner_prefers_cheapest_sufficient_memory_saver():
     """With a roomy budget the planner should NOT pay the recompute /
     offload taxes: the pick is a plain fused or split-backward schedule

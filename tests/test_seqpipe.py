@@ -206,7 +206,7 @@ def test_seq_tables_compile_and_validate(name, kw):
     ns = kw["n_seq"]
     assert tab.n_seq == ns
     assert set(tab.kv_depth) == set(range(sched.v))
-    assert tab.arrays().shape[-1] == 12
+    assert tab.arrays().shape[-1] == 16
     # the seq column covers all chunk indices
     seqs = {int(q) for q in np.unique(tab.seq[tab.op > 0])}
     assert seqs == set(range(ns))
