@@ -1,0 +1,224 @@
+"""Executor micro-benchmark: legacy per-tick interpreter vs the
+phase-compiled executor (PR 5's tentpole), measured per schedule family.
+
+For each (family, executor) cell this records
+
+- **trace_s** — ``jax.jit(fn).lower(...)`` wall time (Python tracing),
+- **compile_s** — ``lowered.compile()`` wall time (XLA),
+- **steady_ms** — steady-state per-step wall-clock: min over
+  ``--reps`` calls of the compiled step, best of ``--rounds``
+  interleaved rounds (interleaving de-biases machine drift; min-of-N is
+  the standard steady-state estimator on a shared host),
+- **steady_cpu_ms** — the same step's process-CPU time (less sensitive
+  to scheduling noise),
+- **predicted_grains** — ``sum(analysis.predicted_tick_costs(...))``,
+  the analytic lockstep cost of the table (max task duration per tick),
+- **grain_us** — steady_ms / predicted_grains: the executor's effective
+  grain time.  Comparing it across families separates schedule compute
+  (expected) from executor overhead (the thing this PR attacks).
+
+Writes ``BENCH_pipeline_exec.json`` (schema ``{bench, rows, host,
+commit}``) at the repo root and prints a summary table.  ``--check``
+runs the smoke matrix (the acceptance cell ``chronos P=4 v=2 m=8``
+only, fewer reps) and writes ``BENCH_pipeline_exec_check.json`` so the
+committed full-matrix record is never clobbered by a smoke run —
+``scripts/ci.sh`` runs the smoke every PR so perf numbers regenerate
+alongside the code.
+
+Must run as a standalone script: the virtual pipeline devices require
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax import.
+"""
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+P_DEVICES = 4
+
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={P_DEVICES}")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+FULL_MATRIX = (
+    # family, schedule kwargs, v, n_seq
+    ("chronos", {}, 2, 1),
+    ("1f1b", {}, 1, 1),
+    ("zb_h1", {}, 1, 1),
+    ("chronos_recomp", {"rho": 1.0, "recomp_chunks": 1}, 2, 1),
+    ("v_min", {}, 2, 1),
+    ("chronos_seq", {}, 2, 2),
+)
+SMOKE_MATRIX = FULL_MATRIX[:1]
+
+
+def bench_cell(spec, sched, mesh, params, batch, executor, reps):
+    import jax
+
+    from repro.core.analysis import predicted_tick_costs
+    from repro.core.pipeline_runtime import make_train_grads_fn
+    from repro.models import shard_env
+    with shard_env(mesh, {}):
+        fn = make_train_grads_fn(spec, mesh, executor=executor)
+        t0 = time.perf_counter()
+        lowered = jax.jit(fn).lower(params, batch)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        jax.block_until_ready(compiled(params, batch))
+        ts = []
+        for _ in range(reps):
+            ta, ca = time.perf_counter(), time.process_time()
+            jax.block_until_ready(compiled(params, batch))
+            ts.append((time.perf_counter() - ta,
+                       time.process_time() - ca))
+    grains = float(predicted_tick_costs(sched, spec.table).sum())
+    steady = min(t[0] for t in ts)
+    return {"trace_s": round(t1 - t0, 3),
+            "compile_s": round(t2 - t1, 3),
+            "steady_ms": round(steady * 1e3, 1),
+            "steady_cpu_ms": round(min(t[1] for t in ts) * 1e3, 1),
+            "predicted_grains": round(grains, 1),
+            "grain_us": round(steady * 1e6 / grains, 1)}
+
+
+def run(check=False, reps=None, rounds=None, json_out=None):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.pipeline_runtime import (init_pipeline_params,
+                                             make_pipeline_spec)
+    from repro.core.schedules import get_schedule
+    from repro.jax_compat import make_mesh
+
+    matrix = SMOKE_MATRIX if check else FULL_MATRIX
+    reps = reps or (6 if check else 12)
+    rounds = rounds or (2 if check else 3)
+    P_, m, mbB, S = P_DEVICES, 8, 2, 17
+    cfg = get_reduced("tinyllama-1.1b")
+    mesh = make_mesh((P_,), ("pp",))
+
+    cells = {}
+    for family, kw, v, n_seq in matrix:
+        spec = make_pipeline_spec(cfg, P=P_, v=v, m=m, microbatch=mbB,
+                                  seq_len=S, schedule=family,
+                                  n_seq=n_seq, **kw)
+        vkw = {"v": v} if family in ("chronos", "chronos_recomp",
+                                     "chronos_seq") else {}
+        if n_seq > 1:
+            vkw["n_seq"] = n_seq
+        sched = get_schedule(family, P_, m, **vkw, **kw)
+        params, _ = init_pipeline_params(jax.random.key(0), cfg,
+                                         spec.layout)
+        tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
+                                    cfg.vocab_size)
+        cells[family] = (spec, sched, params, {"tokens": tokens})
+
+    # aggregation: MEDIAN across rounds for the one-shot costs (trace /
+    # compile vary with environmental noise; the median is the robust
+    # central estimate), MIN for the steady-state step (the standard
+    # steady-state estimator — the fastest observed step is the one
+    # least disturbed by the host).
+    import statistics
+    rows = []
+    best = {}
+    for rnd in range(rounds):
+        for family, (spec, sched, params, batch) in cells.items():
+            for executor in ("legacy", "phase"):
+                best.setdefault((family, executor), []).append(
+                    bench_cell(spec, sched, mesh, params, batch,
+                               executor, reps))
+    agg = {}
+    for key, rs in best.items():
+        agg[key] = {
+            "trace_s": round(statistics.median(
+                r["trace_s"] for r in rs), 3),
+            "compile_s": round(statistics.median(
+                r["compile_s"] for r in rs), 3),
+            "steady_ms": min(r["steady_ms"] for r in rs),
+            "steady_cpu_ms": min(r["steady_cpu_ms"] for r in rs),
+            "predicted_grains": rs[0]["predicted_grains"],
+        }
+        agg[key]["grain_us"] = round(
+            agg[key]["steady_ms"] * 1e3
+            / agg[key]["predicted_grains"], 1)
+    best = agg
+    for (family, executor), r in best.items():
+        rows.append({"family": family, "P": P_, "m": m,
+                     "v": cells[family][0].layout.v,
+                     "executor": executor, **r})
+
+    summary = {}
+    for family in cells:
+        leg = best[(family, "legacy")]
+        ph = best[(family, "phase")]
+        tc_ratio = (leg["trace_s"] + leg["compile_s"]) / \
+            (ph["trace_s"] + ph["compile_s"])
+        speedup = 1.0 - ph["steady_ms"] / leg["steady_ms"]
+        summary[family] = {
+            "trace_compile_ratio": round(tc_ratio, 2),
+            "steady_speedup_pct": round(100 * speedup, 1),
+            "steady_cpu_speedup_pct": round(
+                100 * (1 - ph["steady_cpu_ms"] / leg["steady_cpu_ms"]),
+                1),
+        }
+
+    try:
+        commit = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                                capture_output=True, text=True,
+                                cwd=REPO).stdout.strip()
+    except OSError:
+        commit = "unknown"
+    doc = {"bench": "pipeline_exec",
+           "rows": rows,
+           "host": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "jax": jax.__version__,
+                    "cpus": os.cpu_count(),
+                    "devices": P_DEVICES,
+                    "mode": "check" if check else "full"},
+           "commit": commit,
+           "summary": summary}
+    # the smoke run writes its own record: overwriting the committed
+    # full-matrix trajectory with a 1-family smoke would lose it
+    default_name = "BENCH_pipeline_exec_check.json" if check \
+        else "BENCH_pipeline_exec.json"
+    out_path = json_out or os.path.join(REPO, default_name)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+    hdr = (f"{'family':15s} {'executor':7s} {'trace':>6s} {'compile':>8s} "
+           f"{'steady':>9s} {'cpu':>9s} {'grain':>8s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['family']:15s} {r['executor']:7s} {r['trace_s']:5.2f}s "
+              f"{r['compile_s']:7.2f}s {r['steady_ms']:7.1f}ms "
+              f"{r['steady_cpu_ms']:7.1f}ms {r['grain_us']:6.1f}us")
+    for family, s in summary.items():
+        print(f"{family}: trace+compile {s['trace_compile_ratio']}x, "
+              f"steady -{s['steady_speedup_pct']}% "
+              f"(cpu -{s['steady_cpu_speedup_pct']}%)")
+    print(f"wrote {out_path}")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="smoke matrix (acceptance cell only, few reps)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    run(check=args.check, reps=args.reps, rounds=args.rounds,
+        json_out=args.json_out)
+
+
+if __name__ == "__main__":
+    main()

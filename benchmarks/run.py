@@ -4,8 +4,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
 ``python benchmarks/run.py --check`` runs the fast tier-1 test suite
 instead (slow marker deselected) — the exact invocation scripts/ci.sh
 uses, so the bench harness and CI share one entry path.
+
+``python benchmarks/run.py --json-out`` additionally writes one
+``BENCH_<module>.json`` per analytic bench module at the repo root
+(schema ``{bench, rows, host, commit}``), seeding the repo's perf
+record.  The executor micro-benchmark lives in its own entry
+(``benchmarks/pipeline_exec.py`` — it must pin the virtual device count
+before jax imports) and writes ``BENCH_pipeline_exec.json`` with the
+same schema.
 """
+import json
 import os
+import platform
 import subprocess
 import sys
 
@@ -25,23 +35,56 @@ def run_tier1(extra_args=()) -> int:
          *extra_args], env=env, cwd=REPO)
 
 
+def _host():
+    return {"platform": platform.platform(),
+            "python": platform.python_version(),
+            "cpus": os.cpu_count()}
+
+
+def _commit():
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              cwd=REPO).stdout.strip()
+    except OSError:
+        return "unknown"
+
+
+def write_json(name: str, rows) -> str:
+    """Write one ``BENCH_<name>.json`` perf record (schema:
+    ``{bench, rows, host, commit}``)."""
+    path = os.path.join(REPO, f"BENCH_{name}.json")
+    doc = {"bench": name,
+           "rows": [{"name": n, "us_per_call": round(us, 1),
+                     "derived": repr(derived)} for n, us, derived in rows],
+           "host": _host(), "commit": _commit()}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     if "--check" in sys.argv:
         extra = [a for a in sys.argv[1:] if a != "--check"]
         sys.exit(run_tier1(extra))
+    json_out = "--json-out" in sys.argv
     from benchmarks.common import Bench
     from benchmarks import (paper_fig9_memory, paper_fig10_recomp,
                             paper_fig11_seqlen, paper_fig12_models,
                             paper_fig13_p2p, paper_fig14_offload,
                             paper_fig15_16_dse, paper_sec41_bubble,
                             planner_dse, roofline_table, zb_schedules)
-    bench = Bench()
     for mod in (paper_sec41_bubble, paper_fig9_memory, paper_fig10_recomp,
                 paper_fig11_seqlen, paper_fig12_models, paper_fig13_p2p,
                 paper_fig14_offload, paper_fig15_16_dse, planner_dse,
                 zb_schedules, roofline_table):
+        bench = Bench()
         mod.run(bench)
-    bench.emit()
+        bench.emit()
+        if json_out:
+            name = mod.__name__.rsplit(".", 1)[-1]
+            print(f"# wrote {write_json(name, bench.rows)}")
 
 
 if __name__ == '__main__':

@@ -13,6 +13,12 @@
 # 3. Docs step: the schedule gallery (docs/SCHEDULES.md) is generated
 #    from the registered generators — regenerate and fail on diff —
 #    and the docs' `>>>` code blocks run under doctest.
+# 3b. Executor perf record: benchmarks/pipeline_exec.py --check
+#    re-measures the legacy vs phase-compiled executor on the
+#    acceptance cell (chronos P=4 v=2 m=8) every PR and writes
+#    BENCH_pipeline_exec_check.json (the committed full-matrix record
+#    BENCH_pipeline_exec.json is refreshed by running the script
+#    without --check).
 # 4. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).  The
 #    repro.seqpipe tests ride in tier-1 with the same slow split: IR /
@@ -41,5 +47,8 @@ echo "ci.sh: analytical layer (schedule IR, generators, planner) imports jax-fre
 PYTHONPATH=src python scripts/render_schedules.py --check
 PYTHONPATH=src python -m doctest docs/ARCHITECTURE.md docs/SCHEDULES.md
 echo "ci.sh: docs gallery in sync; doctests passed"
+
+python benchmarks/pipeline_exec.py --check
+echo "ci.sh: executor perf record regenerated (BENCH_pipeline_exec_check.json)"
 
 exec python benchmarks/run.py --check "$@"

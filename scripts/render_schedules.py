@@ -140,7 +140,26 @@ def metrics_block(sched: Schedule) -> str:
                      f"(KV-prefix / dKV deps, repro.seqpipe)")
     if extra:
         lines.append(f"- {'; '.join(extra)}")
+    lines.append(f"- {phase_note(sched)}")
     return "\n".join(lines)
+
+
+def phase_note(sched: Schedule) -> str:
+    """Phase factorization of the compiled task table (the executor's
+    warmup / steady-period / cooldown segmentation; see
+    `repro.core.tasktable.factor_phases`).  Rendered at the gallery's
+    toy sizes — the steady compression grows with m while warmup,
+    period and cooldown stay fixed."""
+    from repro.core.tasktable import build_task_table, factor_phases
+    plan = factor_phases(build_task_table(sched))
+    if not plan.period:
+        return (f"phase factorization: no steady period at this toy m "
+                f"({plan.T} ticks; larger m exposes one)")
+    cool = plan.T - plan.cooldown_start
+    return (f"phase factorization: {plan.T} ticks = warmup {plan.warmup} "
+            f"+ {plan.n_periods} x period {plan.period} (mb stride "
+            f"{plan.mb_stride}) + cooldown {cool} — compressed op-stream "
+            f"{plan.compressed_ticks} ticks")
 
 
 def render_doc() -> str:

@@ -102,6 +102,55 @@ def vshape_zb_bubble(P: int, m: int, f: float = 1.0, b_in: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# executor tick-cost model (benchmarks/pipeline_exec.py)
+# ---------------------------------------------------------------------------
+
+def predicted_tick_costs(sched, tab=None):
+    """Analytic per-tick compute cost of the compiled lockstep table.
+
+    The SPMD executor runs the task table one tick at a time with a
+    collective barrier per tick, so the predicted wall-clock of tick
+    ``t`` is the *maximum* scheduled duration (grains) over the devices'
+    tasks at that tick — idle devices wait at the exchange.  Returns a
+    float array ``[T]``; ``benchmarks/pipeline_exec.py`` divides the
+    measured per-step wall-clock by ``sum(predicted)`` to report the
+    executor's effective grain time, making predicted-vs-measured tick
+    cost comparable across schedule families (a family with more
+    compute per tick is *expected* to take proportionally longer — the
+    residual is executor overhead)."""
+    import numpy as np
+
+    from repro.core.tasktable import (B_OPS, F_OPS, R_OPS, W_OPS,
+                                      build_task_table)
+    if tab is None:
+        tab = build_task_table(sched)
+    durs = {t.key(): t.dur for t in sched.tasks}
+    kind_of = {}
+    for ops, k in ((F_OPS, "F"), (B_OPS, "B"), (W_OPS, "W"),
+                   (R_OPS, "R")):
+        for o in ops:
+            kind_of[o] = k
+    out = []
+    for t in range(tab.T):
+        worst = 0.0
+        for d in range(tab.P):
+            op = int(tab.op[t, d])
+            if op == 0:
+                continue
+            key = (kind_of[op], int(tab.mb[t, d]), int(tab.chunk[t, d]),
+                   _stage_of(sched, d, int(tab.chunk[t, d])),
+                   int(tab.seq[t, d]) if tab.seq is not None else 0)
+            worst = max(worst, durs[key])
+        out.append(worst)
+    return np.asarray(out)
+
+
+def _stage_of(sched, device: int, chunk: int) -> int:
+    """Inverse of the placement's (stage, chunk) -> device map."""
+    return sched.pl.stage(device, chunk)
+
+
+# ---------------------------------------------------------------------------
 # byte-level memory model
 # ---------------------------------------------------------------------------
 

@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -60,15 +61,127 @@ from repro import jax_compat
 from repro.configs.base import ModelConfig
 from repro.core.placement import Placement
 from repro.core.schedules import get_schedule
-from repro.core.tasktable import (BWD_FIRST, BWD_LAST, BWD_MID, FWD_FIRST,
-                                  FWD_LAST, FWD_MID, IDLE, RCP_MID,
-                                  SEND_B_DOWN, SEND_B_LOC, SEND_BWD,
-                                  SEND_F_LOC, SEND_F_UP, SEND_FWD,
-                                  SEND_HOPB, SEND_HOPF, TaskTable,
-                                  build_task_table)
+from repro.core.tasktable import (B_OPS, BWD_FIRST, BWD_LAST, BWD_MID,
+                                  F_OPS, FWD_FIRST, FWD_LAST, FWD_MID,
+                                  IDLE, R_OPS, RCP_MID, SEND_B_DOWN,
+                                  SEND_B_LOC, SEND_BWD, SEND_F_LOC,
+                                  SEND_F_UP, SEND_FWD, SEND_HOPB,
+                                  SEND_HOPF, TaskTable, W_OPS, WGT_FIRST,
+                                  WGT_LAST, WGT_MID, build_task_table,
+                                  factor_phases, replay_phases)
 from repro.models import layers as L
 from repro.models.sharding import shard
 from repro.models.transformer import _apply_layer, _init_layer
+
+#: executor selection: "phase" (phase-compiled, the default) or "legacy"
+#: (the pre-phase per-tick interpreter, kept for A/B benchmarking —
+#: ``benchmarks/pipeline_exec.py`` measures both).
+EXECUTOR_ENV = "REPRO_PIPELINE_EXECUTOR"
+
+#: wire-protocol switch point (bytes of all-gathered payload per tick):
+#: at or below this, the phase executors use the single-collective
+#: all_gather exchange; above it, the bandwidth-exact rotation pair.
+#: Override with the REPRO_EXCHANGE_AG_MAX env var.
+EXCHANGE_AG_MAX = 4 << 20
+
+
+def _exchange_ag_max() -> int:
+    return int(os.environ.get("REPRO_EXCHANGE_AG_MAX",
+                              str(EXCHANGE_AG_MAX)))
+
+
+def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
+                 s_idx):
+    """Shared wire protocol of the phase executors (core + seqpipe).
+
+    Two statically-chosen forms (see the module docstrings):
+
+    - *rotation pair*: hop wraps fold into full ring rotations and
+      same-direction F/B payloads stack — at most one ``ppermute`` per
+      direction per tick, no bandwidth waste (large payloads).
+    - *single-collective exchange* (``use_ag``): every device's send
+      code is static table data, so receivers select their arrivals
+      from ONE ``all_gather`` of the raw wire payload — one rendezvous
+      per tick, which dominates when the per-tick collective is
+      latency- rather than bandwidth-bound (small payloads).
+
+    Channels the table never uses compile away.  Returns
+    ``route(carry, out, row_all, row) -> (fq, bq)``; callers re-pin and
+    store the queues."""
+    def wr(buf, val, i):
+        return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
+
+    def qwrite(qbuf, slot, val, depth):
+        return wr(qbuf, val, jnp.where(slot < 0, depth, slot))
+
+    def sel_from(payload, code_val, want):
+        have = [cd for cd in want if cd in snds]
+        if not have:
+            return None
+        m = functools.reduce(jnp.logical_or,
+                             [code_val == cd for cd in have])
+        return jnp.where(m, payload, jnp.zeros_like(payload))
+
+    def route_rotations(carry, out, row_all, row):
+        snd = row[5]
+        rot_dn = [(i, (i + 1) % P_) for i in range(P_)]
+        rot_up = [(i, (i - 1) % P_) for i in range(P_)]
+        fq, bq = carry["fq"], carry["bq"]
+        for perm, f_want, b_want, rcf_c, rcb_c in (
+                (rot_dn, (SEND_FWD, SEND_HOPF), (SEND_B_DOWN,), 6, 9),
+                (rot_up, (SEND_F_UP,), (SEND_BWD, SEND_HOPB), 7, 10)):
+            fp = sel_from(out, snd, f_want)
+            bp_ = sel_from(out, snd, b_want)
+            if fp is not None and bp_ is not None:
+                mv = _ppermute(jnp.stack([fp, bp_]), pp, perm)
+                fp, bp_ = mv[0], mv[1]
+            elif fp is not None:
+                fp = _ppermute(fp, pp, perm)
+            elif bp_ is not None:
+                bp_ = _ppermute(bp_, pp, perm)
+            if fp is not None:
+                fq = qwrite(fq, row[rcf_c], fp, tab.fq_depth)
+            if bp_ is not None:
+                bq = qwrite(bq, row[rcb_c], bp_, tab.bq_depth)
+        return fq, bq
+
+    def route_exchange(carry, out, row_all, row):
+        if P_ > 1:
+            outs = jax.lax.all_gather(out, pp, axis=0, tiled=False)
+        else:
+            outs = out[None]
+        prev = (s_idx + P_ - 1) % P_
+        nxt = (s_idx + 1) % P_
+        out_dn, snd_dn = outs[prev], row_all[prev, 5]
+        out_up, snd_up = outs[nxt], row_all[nxt, 5]
+        fq, bq = carry["fq"], carry["bq"]
+        for payload, code_val, want, qname, col in (
+                (out_dn, snd_dn, (SEND_FWD, SEND_HOPF), "f", 6),
+                (out_dn, snd_dn, (SEND_B_DOWN,), "b", 9),
+                (out_up, snd_up, (SEND_F_UP,), "f", 7),
+                (out_up, snd_up, (SEND_BWD, SEND_HOPB), "b", 10)):
+            arr = sel_from(payload, code_val, want)
+            if arr is None:
+                continue
+            if qname == "f":
+                fq = qwrite(fq, row[col], arr, tab.fq_depth)
+            else:
+                bq = qwrite(bq, row[col], arr, tab.bq_depth)
+        return fq, bq
+
+    def route(carry, out, row_all, row):
+        snd = row[5]
+        fq, bq = (route_exchange if use_ag
+                  else route_rotations)(carry, out, row_all, row)
+        fl = sel_from(out, snd, (SEND_F_LOC,))
+        if fl is not None:
+            fq = qwrite(fq, row[8], fl, tab.fq_depth)
+        bl = sel_from(out, snd, (SEND_B_LOC,))
+        if bl is not None:
+            bq = qwrite(bq, row[11], bl, tab.bq_depth)
+        return fq, bq
+
+    return route
 
 
 def pipeline_period(cfg: ModelConfig) -> int:
@@ -344,18 +457,51 @@ def _head_loss(spec: PipelineSpec, params, payload, labels, loss_mask):
     return ce + spec.aux_weight * payload["aux"][0]
 
 
-def make_train_grads_fn(spec: PipelineSpec, mesh):
+def make_train_grads_fn(spec: PipelineSpec, mesh,
+                        executor: Optional[str] = None):
     """Returns fn(params, batch) -> (grads, metrics) running the full
     pipeline schedule.  batch: tokens [m, mbB, S_tokens] (+ optional
     patch_embeds [m, mbB, prefix, d], frame_embeds [m, mbB, enc_len, d],
     loss_mask [m, mbB, S_tokens-1]).
 
+    ``executor`` selects the compiled form (default from the
+    ``REPRO_PIPELINE_EXECUTOR`` env var, else ``"phase"``):
+
+    - ``"phase"`` — the phase-compiled executor: unified op branches
+      (one masked forward body instead of first/mid/last triplicates,
+      traced once), warmup / steady-period / cooldown scans from
+      :func:`repro.core.tasktable.factor_phases`, byte-packed boundary
+      payloads, and at most two ``ppermute`` s per tick (hop wraps fold
+      into full ring rotations).
+    - ``"legacy"`` — the pre-phase per-tick interpreter (a ~13-way
+      switch re-tracing the chunk body per branch and up to five
+      ``ppermute`` s per tick); kept so ``benchmarks/pipeline_exec.py``
+      can record both sides of the comparison.
+
+    Both executors compute identical gradients for a given schedule up
+    to XLA fusion order; the cross-schedule equivalence pairs
+    (``tests/helpers/split_fused_check.py``) hold at their original
+    tolerances — bitwise for the recomp pair — under either.
+
     Sequence-chunked specs (``spec.n_seq > 1``) dispatch to the
     :mod:`repro.seqpipe` executor, which adds the KV-carry / dKV rings
     for chunked causal attention."""
+    if executor is None:
+        executor = os.environ.get(EXECUTOR_ENV, "phase")
+    if executor not in ("phase", "legacy"):
+        raise ValueError(f"unknown executor {executor!r}: "
+                         f"expected 'phase' or 'legacy'")
     if spec.n_seq > 1:
         from repro.seqpipe.runtime import make_seq_train_grads_fn
-        return make_seq_train_grads_fn(spec, mesh)
+        return make_seq_train_grads_fn(spec, mesh, executor=executor)
+    if executor == "phase":
+        return _make_train_grads_phase(spec, mesh)
+    return _make_train_grads_legacy(spec, mesh)
+
+
+def _make_train_grads_legacy(spec: PipelineSpec, mesh):
+    """The pre-phase per-tick interpreter (see
+    :func:`make_train_grads_fn`, ``executor="legacy"``)."""
     cfg = spec.cfg
     tab = spec.table
     P_, v = tab.P, tab.v
@@ -801,5 +947,604 @@ def make_train_grads_fn(spec: PipelineSpec, mesh):
     return call
 
 
+# ---------------------------------------------------------------------------
+# phase-compiled executor
+# ---------------------------------------------------------------------------
+
+def _payload_struct(spec: PipelineSpec,
+                    S: Optional[int] = None) -> List[Tuple[str,
+                                                           Tuple[int, ...],
+                                                           Any]]:
+    """(key, shape, dtype) of every boundary-payload leaf, in wire
+    order.  The phase executor stores payloads *byte-packed*: one
+    ``uint16 [mbB, W]`` row-block per payload, so every ring buffer,
+    queue and collective moves a single array instead of a tree.
+    ``S`` overrides the sequence length (the seqpipe executor packs
+    1/n_seq-size sequence-chunk boundaries)."""
+    dtype = jnp.dtype(spec.cfg.compute_dtype)
+    S = spec.S if S is None else S
+    entries = [("x", (spec.mbB, S, spec.cfg.d_model), dtype),
+               ("aux", (1,), jnp.dtype(jnp.float32))]
+    if spec.enc_len:
+        entries.append(("enc", (spec.mbB, spec.enc_len, spec.cfg.d_model),
+                        dtype))
+    return entries
+
+
+def _payload_words(spec: PipelineSpec, S: Optional[int] = None) -> int:
+    """Packed row width (uint16 words per batch row)."""
+    w = 0
+    for key, shape, dt in _payload_struct(spec, S):
+        ws = jnp.dtype(dt).itemsize // 2
+        n = int(np.prod(shape)) * ws
+        w += n if key == "aux" else n // spec.mbB
+    return w
+
+
+def _pack_payload(spec: PipelineSpec, pay: Dict[str, Any],
+                  S: Optional[int] = None) -> jnp.ndarray:
+    """Payload dict -> packed ``uint16 [mbB, W]`` (bitcast, exact).  The
+    batch axis stays leading so ring buffers remain dp-shardable; the
+    batch-free ``aux`` scalar is broadcast across rows and read back
+    from row 0."""
+    B = spec.mbB
+    parts = []
+    for key, shape, dt in _payload_struct(spec, S):
+        a = pay[key]
+        w = jax.lax.bitcast_convert_type(a, jnp.uint16)
+        if key == "aux":
+            w = jnp.broadcast_to(w.reshape(1, -1), (B, w.size))
+        else:
+            w = w.reshape(B, -1)
+        parts.append(w)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def _unpack_payload(spec: PipelineSpec, flat: jnp.ndarray,
+                    S: Optional[int] = None) -> Dict[str, Any]:
+    """Inverse of :func:`_pack_payload` (bitwise round-trip)."""
+    B = spec.mbB
+    out: Dict[str, Any] = {}
+    off = 0
+    for key, shape, dt in _payload_struct(spec, S):
+        ws = jnp.dtype(dt).itemsize // 2
+        if key == "aux":
+            n = int(np.prod(shape)) * ws
+            seg = flat[0:1, off:off + n]
+            out[key] = jax.lax.bitcast_convert_type(
+                seg.reshape(shape + ((ws,) if ws > 1 else ())), dt)
+        else:
+            n = int(np.prod(shape)) * ws // B
+            seg = flat[:, off:off + n]
+            out[key] = jax.lax.bitcast_convert_type(
+                seg.reshape(shape + ((ws,) if ws > 1 else ())), dt)
+        off += n
+    return out
+
+
+def _traced_once(fn):
+    """Wrap ``fn`` so its Python body is traced exactly once per
+    executor: the first call records a jaxpr (``jax.make_jaxpr``) and
+    every subsequent call — including under ``jax.vjp`` in the backward
+    branches — replays the recorded equations via
+    ``jax.core.jaxpr_as_fun``.  Unlike an inner ``jax.jit``, the replay
+    inlines into the surrounding trace, so XLA sees exactly the same
+    HLO as a direct call (no call boundary, no lost fusion) while the
+    Python-level layer construction runs once.  Falls back to direct
+    calls when the installed JAX tracks varying manual axes: ``pcast``
+    inside the body cannot replay under ``make_jaxpr``'s fresh trace
+    (the legacy executor remains fully supported there)."""
+    if jax_compat.HAS_VMA:
+        return fn
+    cache: Dict[str, Any] = {}
+
+    def wrapped(*args):
+        flat, treedef = jax.tree_util.tree_flatten(args)
+        if "jaxpr" not in cache:
+            def flat_fn(*fl):
+                out = fn(*jax.tree_util.tree_unflatten(treedef, list(fl)))
+                out_flat, cache["out_tree"] = \
+                    jax.tree_util.tree_flatten(out)
+                return out_flat
+            cache["jaxpr"] = jax.make_jaxpr(flat_fn)(*flat)
+            cache["in_tree"] = treedef
+        assert cache["in_tree"] == treedef, \
+            "traced-once body called with a different input structure"
+        outs = jax.core.jaxpr_as_fun(cache["jaxpr"])(*flat)
+        return jax.tree_util.tree_unflatten(cache["out_tree"], outs)
+
+    return wrapped
+
+
+def _make_train_grads_phase(spec: PipelineSpec, mesh):
+    """The phase-compiled executor (see :func:`make_train_grads_fn`).
+
+    Three structural changes versus the legacy per-tick interpreter:
+
+    1. **Unified op branches, traced once.**  The first/mid/last x
+       {F, B, W} branch triplicates collapse into one masked forward
+       body: the block input is ``select(is_first, embed(tokens),
+       wire_payload)`` and the loss head runs unconditionally with its
+       cotangent seeded ``select(is_last, 1, 0)``.  Selects and
+       zero-cotangent pullbacks are exact, so gradients are unchanged
+       (the cross-schedule pairs stay bitwise where they were bitwise).
+       The body is wrapped in an inner ``jax.jit``, so its Python trace
+       runs exactly once per executor — every branch (forward, and the
+       B/W/input-grad branches through ``jax.vjp``) reuses the cached
+       jaxpr.  The ``lax.switch`` then has at most 5 branches
+       (idle/F/B/W/R), pruned per phase to the op codes its rows use.
+    2. **Phase segmentation.**  :func:`~repro.core.tasktable
+       .factor_phases` factors ``[T, P]`` into warmup + a steady-state
+       period replayed with a per-period microbatch stride + cooldown;
+       the hot scan runs over the compressed periodic op-stream (the
+       compiled program becomes independent of ``m`` once the steady
+       state covers the extra microbatches), and warmup/cooldown scans
+       carry only their own op codes and routes.  FIFO ring slots are
+       re-derived from ``mb`` on device (:func:`~repro.core.tasktable
+       .derive_slots`), which is what lets the steady period be one
+       microbatch's footprint rather than the lcm of the ring depths.
+    3. **Collective batching.**  Payloads travel byte-packed
+       (:func:`_pack_payload`), hop wraps fold into full ring rotations
+       (the table already lands wrap arrivals on the edge devices'
+       dn/up recv columns), and same-direction F/B payloads stack into
+       one ``ppermute`` — at most two collectives per tick, zero on
+       device-local routes.  Queue writes use a trash slot (one spare
+       row per ring) instead of the read-modify-write select pair.
+    """
+    cfg = spec.cfg
+    tab = spec.table
+    P_, v = tab.P, tab.v
+    pp = spec.pp_axis
+    plan = factor_phases(tab)
+    A = tab.arrays()                               # [T, P, 16]
+    stream = replay_phases(tab, plan)
+    assert np.array_equal(stream, A), \
+        "phase factorization is not a pure re-encoding of the table"
+
+    split, remat = tab.has_w, tab.has_r
+
+    def ring_offsets(depths: Dict[int, int]):
+        off = np.zeros(v, np.int64)
+        total = 0
+        for c in range(v):
+            off[c] = total
+            total += depths.get(c, 0)
+        return jnp.asarray(off), total
+
+    act_offsets, total_act = ring_offsets(tab.act_depth)
+    w_offsets, total_w = ring_offsets(tab.wstash_depth)
+    r_offsets, total_rmt = ring_offsets(tab.rmt_depth)
+    flags_np = spec.layout.flags(cfg)
+    Wb = _payload_words(spec)
+    counts = {"embed": 0, "chunk": 0, "head": 0}
+
+    def spmd(stage_iota, params, batch):
+        s_idx = stage_iota[0]
+        blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
+        flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
+        shared = {k: params[k] for k in params if k != "blocks"}
+
+        def to_varying(a):
+            return jax_compat.to_varying(a, pp)
+
+        def vary(x):
+            return jax.tree.map(to_varying, x)
+
+        # ---- unified forward body: traced ONCE, reused by every branch
+        # directly or through jax.vjp.  The chunk body is its own
+        # traced-once core — the hot mid-position backward branches
+        # differentiate it directly, exactly like the legacy mid
+        # branches — and the full body wraps it with the embed
+        # (is_first) and loss head (is_last) inside ``lax.cond``, so
+        # mid ticks skip their compute at runtime.  Cond transposes to
+        # cond, whose untaken side contributes exact zeros — gradients
+        # match the separate first/mid/last branches bitwise. ----
+        def chunk_core(blocks_c, pay, flags_c):
+            counts["chunk"] += 1
+            return vary(_chunk_fwd(spec, blocks_c, flags_c, pay))
+
+        def embed_core(shared_p, tok, patch, frames):
+            counts["embed"] += 1
+            return vary(_embed_tokens(spec, shared_p, tok, patch, frames))
+
+        def head_core(pay_out, shared_p, labels, mask):
+            counts["head"] += 1
+            return to_varying(_head_loss(spec, shared_p, pay_out, labels,
+                                         mask))
+
+        jchunk = _traced_once(chunk_core)
+        jembed = _traced_once(embed_core)
+        jhead = _traced_once(head_core)
+
+        def fwd_core(blocks_c, shared_p, pay, tok, patch, frames, labels,
+                     mask, flags_c, is_first, is_last):
+            pay = jax.lax.cond(
+                is_first,
+                lambda _: jembed(shared_p, tok, patch, frames),
+                lambda _: vary(dict(pay)), None)
+            out = jchunk(blocks_c, pay, flags_c)
+            ce = jax.lax.cond(
+                is_last,
+                lambda _: jhead(dict(out), shared_p, labels, mask),
+                lambda _: jnp.zeros((), jnp.float32), None)
+            return vary(out), to_varying(ce)
+
+        jcore = _traced_once(fwd_core)
+
+        def zero_gs():
+            return jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), shared)
+
+        zero_wire = to_varying(jnp.zeros((spec.mbB, Wb), jnp.uint16))
+        zero_blocks_g = jax.tree.map(jnp.zeros_like, blocks)
+
+        def pin_buf(a):
+            """Packed rings are [slots, mbB, W]: batch over dp."""
+            if a.ndim >= 3:
+                return shard(a, None, "dp", None)
+            return a
+
+        def ring(slots, trash):
+            return pin_buf(jnp.zeros((slots + (1 if trash else 0),
+                                      spec.mbB, Wb), jnp.uint16))
+
+        def carry_init():
+            carry = {
+                "fq": ring(tab.fq_depth, True),
+                "bq": ring(tab.bq_depth, True),
+                "act": ring(total_act, True),
+                "gb": zero_blocks_g,
+                "gs": zero_gs(),
+                "loss": jnp.zeros((), jnp.float32),
+                "nloss": jnp.zeros((), jnp.float32),
+            }
+            if split:
+                carry["wx"] = ring(total_w, True)
+                carry["wdy"] = ring(total_w, True)
+            if remat:
+                carry["rmt"] = ring(total_rmt, True)
+            return carry
+
+        def rd(buf, i):
+            return jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+        def wr(buf, val, i):
+            return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
+
+        def tick_core(carry, row_all, codes):
+            row = row_all[s_idx]                   # [16]
+            op, c = row[0], row[1]
+            mb, src = row[2], row[3]
+            aslot = row[4]
+            gact = jnp.where(aslot < 0, total_act,
+                             act_offsets[c] + jnp.maximum(aslot, 0))
+            gw = (w_offsets[c] + jnp.maximum(row[12], 0)) if split \
+                else None
+            rslot = row[13]
+            grm = jnp.where(rslot < 0, total_rmt,
+                            r_offsets[c] + jnp.maximum(rslot, 0)) \
+                if remat else None
+
+            def blocks_at():
+                blocks_c = [jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, False),
+                    t_) for t_ in blocks]
+                flags_c = {k: jax.lax.dynamic_index_in_dim(vv, c, 0, False)
+                           for k, vv in flags.items()}
+                return blocks_c, flags_c
+
+            def batch_inputs():
+                tokens = rd(batch["tokens"], mb)
+                tok_in, labels = tokens[:, :-1], tokens[:, 1:]
+                patch = (rd(batch["patch_embeds"], mb)
+                         if "patch_embeds" in batch else None)
+                frames = (rd(batch["frame_embeds"], mb)
+                          if "frame_embeds" in batch else None)
+                mask = (rd(batch["loss_mask"], mb)
+                        if "loss_mask" in batch else None)
+                return tok_in, patch, frames, labels, mask
+
+            def bnd_read(carry):
+                a = rd(carry["act"], gact)
+                if remat:
+                    a = jnp.where(rslot >= 0, rd(carry["rmt"], grm), a)
+                return a
+
+            def masked_dy(dy_pk, is_last):
+                dy = _unpack_payload(spec, dy_pk)
+                return jax.tree.map(
+                    lambda a: jnp.where(is_last, jnp.zeros_like(a), a), dy)
+
+            # ---- branches are PURE PRODUCERS: they read the carry's
+            # ring buffers (conditional inputs alias freely) but every
+            # state write — rings, gradient accumulators, loss — happens
+            # unconditionally AFTER the switch.  XLA conditionals copy
+            # every carry element they return (pass-through included),
+            # so threading multi-MB gradient accumulators through the
+            # switch would pay a full copy per non-idle tick; pure
+            # branches return only their tick-sized products:
+            # (wire_out, gb_delta, gs_delta, ce, n_loss, stash_a[,
+            # stash_b]), with exact zeros where a branch has nothing to
+            # contribute. ----
+            def zeros_gbd():
+                return [jax.tree.map(
+                    lambda a: jnp.zeros(a.shape[1:], a.dtype), t)
+                    for t in zero_blocks_g]
+
+            def gs_of(gs_raw):
+                return jax.tree.map(lambda z, g: g.astype(z.dtype),
+                                    zero_gs(), gs_raw)
+
+            z32 = jnp.zeros((), jnp.float32)
+
+            def ret(out=None, gbd=None, gsd=None, ce=None, nl=None,
+                    st_a=None, st_b=None):
+                r = (out if out is not None else zero_wire,
+                     gbd if gbd is not None else zeros_gbd(),
+                     gsd if gsd is not None else zero_gs(),
+                     ce if ce is not None else z32,
+                     nl if nl is not None else z32,
+                     st_a if st_a is not None else zero_wire)
+                if split:
+                    r += (st_b if st_b is not None else zero_wire,)
+                return r
+
+            def br_idle(_):
+                return ret()
+
+            def br_fwd(_):
+                is_first = op == FWD_FIRST
+                is_last = op == FWD_LAST
+                blocks_c, flags_c = blocks_at()
+                tok, patch, frames, labels, mask = batch_inputs()
+                pin = rd(carry["fq"], jnp.maximum(src, 0))
+                out, ce = jcore(blocks_c, shared,
+                                _unpack_payload(spec, pin), tok, patch,
+                                frames, labels, mask, flags_c, is_first,
+                                is_last)
+                return ret(out=_pack_payload(spec, out), ce=ce,
+                           nl=jnp.where(is_last, 1.0, 0.0), st_a=pin)
+
+            def br_bwd(_):               # fused backward, all positions:
+                # one chunk-pullback body; the head (is_last) and embed
+                # (is_first) pullbacks chain around it inside lax.cond —
+                # the same composition reverse-mode AD performs inside a
+                # monolithic vjp, so gradients are unchanged, but the
+                # mid-position hot path executes the bare chunk vjp only
+                is_first = op == BWD_FIRST
+                is_last = op == BWD_LAST
+                blocks_c, flags_c = blocks_at()
+                tok, patch, frames, labels, mask = batch_inputs()
+                bnd = bnd_read(carry)
+                pay_in = jax.lax.cond(
+                    is_first,
+                    lambda _: jembed(shared, tok, patch, frames),
+                    lambda _: vary(_unpack_payload(spec, bnd)), None)
+                out, vjp = jax.vjp(
+                    lambda bp, pay: jchunk(bp, pay, flags_c),
+                    vary(blocks_c), vary(pay_in))
+                qdy = _unpack_payload(spec,
+                                      rd(carry["bq"], jnp.maximum(src, 0)))
+
+                def head_pull(_):
+                    _, hvjp = jax.vjp(
+                        lambda po, sp: jhead(po, sp, labels, mask),
+                        vary(dict(out)), vary(shared))
+                    return hvjp(to_varying(jnp.ones((), jnp.float32)))
+
+                dy, gs = jax.lax.cond(
+                    is_last, head_pull,
+                    lambda _: (vary(dict(qdy)), zero_gs()), None)
+                gb_c, dx = vjp(dy)
+
+                def embed_pull(_):
+                    _, evjp = jax.vjp(
+                        lambda sp: jembed(sp, tok, patch, frames),
+                        vary(shared))
+                    (gs_e,) = evjp(vary(dict(dx)))
+                    return gs_e
+
+                gs = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gs,
+                    jax.lax.cond(is_first, embed_pull,
+                                 lambda _: zero_gs(), None))
+                return ret(out=_pack_payload(spec, dx), gbd=gb_c,
+                           gsd=gs_of(gs))
+
+            def br_bwdi_mid(_):          # split backward, mid position:
+                # payload-only diff of the bare chunk body + stash
+                blocks_c, flags_c = blocks_at()
+                bnd = bnd_read(carry)
+                dy_pk = rd(carry["bq"], jnp.maximum(src, 0))
+                dy = _unpack_payload(spec, dy_pk)
+                _, vjp = jax.vjp(
+                    lambda pay: jchunk(vary(blocks_c), pay, flags_c),
+                    vary(_unpack_payload(spec, bnd)))
+                (dx,) = vjp(vary(dy))
+                return ret(out=_pack_payload(spec, dx), st_a=bnd,
+                           st_b=dy_pk)
+
+            def br_bwdi(_):              # split backward, first/last:
+                # input grad + stash through the full unified body
+                is_first = op == BWD_FIRST
+                is_last = op == BWD_LAST
+                blocks_c, flags_c = blocks_at()
+                tok, patch, frames, labels, mask = batch_inputs()
+                bnd = bnd_read(carry)
+                dy_pk = rd(carry["bq"], jnp.maximum(src, 0))
+                dy = masked_dy(dy_pk, is_last)
+                seed = jnp.where(is_last, 1.0, 0.0)
+                _, vjp = jax.vjp(
+                    lambda pay: jcore(vary(blocks_c), vary(shared), pay,
+                                      tok, patch, frames, labels, mask,
+                                      flags_c, is_first, is_last),
+                    vary(_unpack_payload(spec, bnd)))
+                (dx,) = vjp((vary(dy), to_varying(seed)))
+                return ret(out=_pack_payload(spec, dx), st_a=bnd,
+                           st_b=dy_pk)
+
+            def br_w_mid(_):             # split weight grad, mid: like
+                # the legacy mid branch, blocks-only differentiation of
+                # the bare chunk body
+                blocks_c, flags_c = blocks_at()
+                pay = _unpack_payload(spec, rd(carry["wx"], gw))
+                dy = _unpack_payload(spec, rd(carry["wdy"], gw))
+                _, vjp = jax.vjp(
+                    lambda bp: jchunk(bp, vary(pay), flags_c),
+                    vary(blocks_c))
+                (gb_c,) = vjp(vary(dy))
+                return ret(gbd=gb_c)
+
+            def br_w_edge(_):            # split weight grad, first/last
+                is_first = op == WGT_FIRST
+                is_last = op == WGT_LAST
+                blocks_c, flags_c = blocks_at()
+                tok, patch, frames, labels, mask = batch_inputs()
+                pay = _unpack_payload(spec, rd(carry["wx"], gw))
+                dy = masked_dy(rd(carry["wdy"], gw), is_last)
+                seed = jnp.where(is_last, 1.0, 0.0)
+                _, vjp = jax.vjp(
+                    lambda bp, sp: jcore(bp, sp, vary(pay), tok, patch,
+                                         frames, labels, mask, flags_c,
+                                         is_first, is_last),
+                    vary(blocks_c), vary(shared))
+                gb_c, gs = vjp((vary(dy), to_varying(seed)))
+                return ret(gbd=gb_c, gsd=gs_of(gs))
+
+            def br_rcp(_):               # hand act checkpoint -> remat
+                return ret(st_a=rd(carry["act"], gact))
+
+            if split:
+                groups = ((IDLE,), F_OPS,
+                          (BWD_MID,), (BWD_FIRST, BWD_LAST),
+                          (WGT_MID,), (WGT_FIRST, WGT_LAST), R_OPS)
+                builders = (br_idle, br_fwd, br_bwdi_mid, br_bwdi,
+                            br_w_mid, br_w_edge, br_rcp)
+            else:
+                groups = ((IDLE,), F_OPS, B_OPS, R_OPS)
+                builders = (br_idle, br_fwd, br_bwd, br_rcp)
+            remap = np.zeros(13, np.int32)
+            branches = []
+            for ops, fn in zip(groups, builders):
+                if any(cd in codes for cd in ops):
+                    for cd in ops:
+                        remap[cd] = len(branches)
+                    branches.append(fn)
+            if len(branches) == 1:
+                res = branches[0](())
+            else:
+                res = jax.lax.switch(jnp.asarray(remap)[op], branches, ())
+            out, gb_d, gs_d, ce, nl, st_a = res[:6]
+            st_b = res[6] if split else None
+
+            # ---- unconditional state writes (trash slots swallow the
+            # inactive op classes; slice updates stay in place) ----
+            is_f = (op >= FWD_MID) & (op <= FWD_LAST)
+            carry = dict(carry, act=wr(
+                carry["act"], st_a, jnp.where(is_f, gact, total_act)))
+            if split:
+                is_b = (op >= BWD_MID) & (op <= BWD_LAST)
+                ws = jnp.where(is_b, gw, total_w)
+                carry = dict(carry, wx=wr(carry["wx"], st_a, ws),
+                             wdy=wr(carry["wdy"], st_b, ws))
+            if remat:
+                is_r = op >= RCP_MID
+                carry = dict(carry, rmt=wr(
+                    carry["rmt"], st_a, jnp.where(is_r, grm, total_rmt)))
+            gb = [jax.tree.map(
+                lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                    g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
+                    + d, c, 0), gt, dt)
+                for gt, dt in zip(carry["gb"], gb_d)]
+            gs = jax.tree.map(lambda a, b: a + b, carry["gs"], gs_d)
+            carry = dict(carry, gb=gb, gs=gs,
+                         loss=carry["loss"] + ce,
+                         nloss=carry["nloss"] + nl)
+            return carry, out, row
+
+        # ---- route: the shared wire protocol (:func:`_build_route`) —
+        # rotation pair above :data:`EXCHANGE_AG_MAX` all-gathered bytes
+        # per tick, single-collective exchange below it.  The table's
+        # static send-code set compiles unused routes away.
+        codes = tuple(int(x) for x in np.unique(A[:, :, 0]))
+        snds = frozenset(int(x) for x in np.unique(A[:, :, 5]))
+        use_ag = P_ * spec.mbB * Wb * 2 <= _exchange_ag_max()
+
+        def make_tick():
+            route = _build_route(tab, P_, pp, snds, use_ag, s_idx)
+
+            def tick(carry, row_all):
+                carry, out, row = tick_core(carry, row_all, codes)
+                fq, bq = route(carry, out, row_all, row)
+                carry = dict(carry, fq=pin_buf(fq), bq=pin_buf(bq))
+                carry = dict(carry, act=pin_buf(carry["act"]))
+                if split:
+                    carry = dict(carry, wx=pin_buf(carry["wx"]),
+                                 wdy=pin_buf(carry["wdy"]))
+                if remat:
+                    carry = dict(carry, rmt=pin_buf(carry["rmt"]))
+                return carry
+
+            return tick
+
+        # ---- the op stream: the factored plan replayed tick-for-tick
+        # (warmup rows, the steady-state period template advanced by its
+        # per-period mb stride, cooldown rows, modular ring slots
+        # re-derived per tick) — replay_phases() is asserted above to be
+        # a pure re-encoding of the table, so the executor literally
+        # consumes the factorization.  One scan, one compiled tick body.
+        tick = make_tick()
+        carry, _ = jax.lax.scan(
+            lambda cr, rw: (tick(cr, rw), None),
+            vary(carry_init()), jnp.asarray(stream))
+
+        gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
+        gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
+        loss = jax.lax.psum(carry["loss"], pp)
+        n = jax.lax.psum(carry["nloss"], pp)
+        metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
+        return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+
+    def call(params, batch):
+        in_specs = (
+            P(pp),
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            jax.tree.map(lambda _: P(), batch),
+        )
+        out_specs = (
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            {"loss": P(), "n_microbatches": P()},
+        )
+
+        def spmd_entry(stage_iota, params, batch):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():
+                return spmd(stage_iota, params, batch)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes={pp})(stage_iota, params,
+                                                      batch)
+
+    call.trace_counts = counts
+    call.phase_plan = plan
+    return call
+
+
 def _ppermute(x, axis, perm):
+    """Tree-mapped ``lax.ppermute``; degenerate permutations (P=1 or any
+    all-identity perm, e.g. the single-device hop wrap) skip the
+    collective entirely and pass the payload through."""
+    if all(s == d for s, d in perm):
+        return x
     return jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm), x)

@@ -88,9 +88,13 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.placement import Placement
 
 F, B, W, R = "F", "B", "W", "R"
+
+_KIND_CODE = {F: 0, B: 1, W: 2, R: 3}
 
 HALF = 2          # integer half-grains per grain
 
@@ -200,83 +204,133 @@ class Schedule:
                        if pl.device(t.stage, t.chunk) == d],
                       key=lambda t: t.start)
 
+    # -- vectorized task-array view ---------------------------------------
+    def _arrays(self):
+        """Numpy view of the task set: (kind, mb, chunk, stage, seq,
+        start, dur, end, recomp) plus the dense key->index lookup
+        ``ind[kind, mb, chunk, stage, seq]`` (-1 where absent) and the
+        (stage, chunk) -> device map.  The vectorized ``check`` /
+        ``peak_activation`` / ``retime_with_comm`` hot paths all run on
+        these arrays instead of per-task Python objects."""
+        ts = self.tasks
+        n = len(ts)
+        kind = np.fromiter((_KIND_CODE[t.kind] for t in ts), np.int64, n)
+        mb = np.fromiter((t.mb for t in ts), np.int64, n)
+        chunk = np.fromiter((t.chunk for t in ts), np.int64, n)
+        stage = np.fromiter((t.stage for t in ts), np.int64, n)
+        seq = np.fromiter((t.seq for t in ts), np.int64, n)
+        start = np.fromiter((t.start for t in ts), np.float64, n)
+        dur = np.fromiter((t.dur for t in ts), np.float64, n)
+        recomp = np.fromiter((t.recomp for t in ts), np.float64, n)
+        ind = -np.ones((4, self.m, self.v, self.P, self.n_seq), np.int64)
+        ind[kind, mb, chunk, stage, seq] = np.arange(n)
+        pl = self.pl
+        dev_map = np.array([[pl.device(s, c) for c in range(self.v)]
+                            for s in range(self.P)])
+        return dict(kind=kind, mb=mb, chunk=chunk, stage=stage, seq=seq,
+                    start=start, dur=dur, end=start + dur, recomp=recomp,
+                    ind=ind, dev=dev_map)
+
     # -- validity ---------------------------------------------------------
     def check(self, tc: float = 0.0) -> None:
-        idx = self.by_key()
         P, v, m, ns = self.P, self.v, self.m, self.n_seq
-        pl = self.pl
         rcs = self.r_chunks()
         kinds = 3 if self.has_w else 2
         n_expect = (kinds * P * v * m + len(rcs) * P * m) * ns
         assert len(self.tasks) == n_expect, \
             f"expected {n_expect} tasks, got {len(self.tasks)}"
+        a = self._arrays()
+        kind, mb, chunk, stage, seq = (a["kind"], a["mb"], a["chunk"],
+                                       a["stage"], a["seq"])
+        start, end, recomp, ind, dev = (a["start"], a["end"], a["recomp"],
+                                        a["ind"], a["dev"])
+        assert (ind >= 0).sum() == len(self.tasks), "duplicate task keys"
+        gneed = start + recomp
 
-        def comm(prod_stage: int, prod_chunk: int, t: Task) -> float:
-            """P2P latency of the edge — zero when the placement keeps
-            producer and consumer on the same device (e.g. the V-shape
-            chunk hops)."""
-            return 0.0 if pl.is_local(prod_stage, prod_chunk,
-                                      t.stage, t.chunk) else tc
+        def expect(mask, dep_idx, ok_at, extra_tc, why):
+            """All masked tasks' ``ok_at`` must be >= dep end (+ tc on
+            device-crossing edges)."""
+            if not mask.any():
+                return
+            di = dep_idx[mask]
+            assert (di >= 0).all(), f"missing dep ({why})"
+            need = end[di] + extra_tc[mask]
+            ok = ok_at[mask]
+            bad = ok < need - 1e-9
+            if bad.any():
+                i = np.flatnonzero(mask)[np.argmax(bad)]
+                raise AssertionError(
+                    f"{self.tasks[i].key()} starts {ok[bad][0]} before "
+                    f"dep ({why}) at {need[bad][0]}")
 
-        for t in self.tasks:
-            q = t.seq
-            # (dep time, label, time the dep must be satisfied by)
-            deps: List[Tuple[float, str, float]] = []
-            if t.kind == F:
-                if t.stage > 0:
-                    deps.append((idx[(F, t.mb, t.chunk, t.stage - 1,
-                                      q)].end
-                                 + comm(t.stage - 1, t.chunk, t),
-                                 "fwd chain", t.start))
-                elif t.chunk > 0:
-                    deps.append((idx[(F, t.mb, t.chunk - 1, P - 1,
-                                      q)].end
-                                 + comm(P - 1, t.chunk - 1, t),
-                                 "fwd chunk hop", t.start))
-                if q > 0:
-                    deps.append((idx[(F, t.mb, t.chunk, t.stage,
-                                      q - 1)].end,
-                                 "kv prefix", t.start))
-            elif t.kind == W:
-                deps.append((idx[(B, t.mb, t.chunk, t.stage, q)].end,
-                             "own bwd", t.start))
-            elif t.kind == R:
-                deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
-                             "own fwd", t.start))
-            else:
-                deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
-                             "own fwd", t.start))
-                if t.chunk in rcs:
-                    assert t.recomp == 0.0, \
-                        f"{t.key()}: explicit R task and recompute prefix"
-                    deps.append((idx[(R, t.mb, t.chunk, t.stage, q)].end,
-                                 "own remat", t.start))
-                if q < ns - 1:
-                    deps.append((idx[(B, t.mb, t.chunk, t.stage,
-                                      q + 1)].end,
-                                 "dkv carry", t.grad_needed_at))
-                if t.stage < P - 1:
-                    deps.append((idx[(B, t.mb, t.chunk, t.stage + 1,
-                                      q)].end
-                                 + comm(t.stage + 1, t.chunk, t),
-                                 "bwd chain", t.grad_needed_at))
-                elif t.chunk < v - 1:
-                    deps.append((idx[(B, t.mb, t.chunk + 1, 0, q)].end
-                                 + comm(0, t.chunk + 1, t),
-                                 "bwd chunk hop", t.grad_needed_at))
-                else:
-                    deps.append((idx[(F, t.mb, t.chunk, t.stage, q)].end,
-                                 "turnaround", t.grad_needed_at))
-            for d, why, ok_at in deps:
-                assert ok_at >= d - 1e-9, \
-                    f"{t.key()} starts {ok_at} before dep ({why}) at {d}"
+        def edge_tc(m_, ps, pc):
+            """tc on device-crossing edges, 0 on placement-local ones
+            (ps/pc: producer stage/chunk arrays under mask m_)."""
+            out = np.zeros(len(kind))
+            out[m_] = np.where(dev[ps[m_], pc[m_]]
+                               == dev[stage[m_], chunk[m_]], 0.0, tc)
+            return out
+
+        is_f, is_b = kind == 0, kind == 1
+        is_w, is_r = kind == 2, kind == 3
+        in_rcs = np.isin(chunk, list(rcs)) if rcs else np.zeros(
+            len(kind), bool)
+
+        # F deps
+        m_ = is_f & (stage > 0)
+        expect(m_, ind[0, mb, chunk, np.maximum(stage - 1, 0), seq],
+               start, edge_tc(m_, np.maximum(stage - 1, 0), chunk),
+               "fwd chain")
+        m_ = is_f & (stage == 0) & (chunk > 0)
+        expect(m_, ind[0, mb, np.maximum(chunk - 1, 0), P - 1, seq],
+               start, edge_tc(m_, np.full_like(stage, P - 1),
+                              np.maximum(chunk - 1, 0)), "fwd chunk hop")
+        m_ = is_f & (seq > 0)
+        expect(m_, ind[0, mb, chunk, stage, np.maximum(seq - 1, 0)],
+               start, np.zeros(len(kind)), "kv prefix")
+        # W / R deps
+        expect(is_w, ind[1, mb, chunk, stage, seq], start,
+               np.zeros(len(kind)), "own bwd")
+        expect(is_r, ind[0, mb, chunk, stage, seq], start,
+               np.zeros(len(kind)), "own fwd")
+        # B deps
+        expect(is_b, ind[0, mb, chunk, stage, seq], start,
+               np.zeros(len(kind)), "own fwd")
+        m_ = is_b & in_rcs
+        if m_.any():
+            assert (recomp[m_] == 0.0).all(), \
+                "explicit R task and recompute prefix"
+        expect(m_, ind[3, mb, chunk, stage, seq], start,
+               np.zeros(len(kind)), "own remat")
+        m_ = is_b & (seq < ns - 1)
+        expect(m_, ind[1, mb, chunk, stage, np.minimum(seq + 1, ns - 1)],
+               gneed, np.zeros(len(kind)), "dkv carry")
+        m_ = is_b & (stage < P - 1)
+        expect(m_, ind[1, mb, chunk, np.minimum(stage + 1, P - 1), seq],
+               gneed, edge_tc(m_, np.minimum(stage + 1, P - 1), chunk),
+               "bwd chain")
+        m_ = is_b & (stage == P - 1) & (chunk < v - 1)
+        expect(m_, ind[1, mb, np.minimum(chunk + 1, v - 1), 0, seq],
+               gneed, edge_tc(m_, np.zeros_like(stage),
+                              np.minimum(chunk + 1, v - 1)),
+               "bwd chunk hop")
+        m_ = is_b & (stage == P - 1) & (chunk == v - 1)
+        expect(m_, ind[0, mb, chunk, stage, seq], gneed,
+               np.zeros(len(kind)), "turnaround")
+
         # no overlap per device (== per stage for interleaved placement)
-        for dev in range(P):
-            ts = self.device_tasks(dev)
-            for a, bb in zip(ts, ts[1:]):
-                assert bb.start >= a.end - 1e-9, \
-                    f"overlap on device {dev}: {a.key()}@{a.start}+{a.dur}" \
-                    f" vs {bb.key()}@{bb.start}"
+        d_of = dev[stage, chunk]
+        order = np.lexsort((start, d_of))
+        same = d_of[order][1:] == d_of[order][:-1]
+        prev_end = end[order][:-1]
+        nxt_start = start[order][1:]
+        bad = same & (nxt_start < prev_end - 1e-9)
+        if bad.any():
+            i = np.argmax(bad)
+            ta, tb = self.tasks[order[i]], self.tasks[order[i + 1]]
+            raise AssertionError(
+                f"overlap on device {d_of[order[i]]}: "
+                f"{ta.key()}@{ta.start}+{ta.dur} vs {tb.key()}@{tb.start}")
 
     # -- metrics ----------------------------------------------------------
     def total_time(self) -> float:
@@ -330,35 +384,41 @@ class Schedule:
         chunk's F until its own B — early chunks of a microbatch stay
         resident until their (late) backwards, which the per-unit
         accounting captures exactly."""
-        idx = self.by_key()
-        pl = self.pl
+        a = self._arrays()
+        kind, chunk, stage, start, end, ind = (
+            a["kind"], a["chunk"], a["stage"], a["start"], a["end"],
+            a["ind"])
         unit = 1.0 / (self.v * self.P * self.n_seq)
+        dev = a["dev"]
+        frs = np.array([self.stored_frac.get(c, 1.0)
+                        for c in range(self.v)])
+
+        # resident block: +unit*fr at F start, -unit*fr at B end
+        is_f, is_b = kind == 0, kind == 1
+        fi, bi = np.flatnonzero(is_f), np.flatnonzero(is_b)
+        times = [start[fi], end[bi]]
+        deltas = [unit * frs[chunk[fi]], -unit * frs[chunk[bi]]]
+        devs = [dev[stage[fi], chunk[fi]], dev[stage[bi], chunk[bi]]]
+        if count_transient and (frs < 1.0).any():
+            # transient rematerialized block: alive from the replay
+            # (explicit R, or B's recompute prefix) until the backward
+            # releases it
+            tb = bi[frs[chunk[bi]] < 1.0]
+            ri = ind[3, a["mb"][tb], chunk[tb], stage[tb], a["seq"][tb]]
+            t0 = np.where(ri >= 0, start[np.maximum(ri, 0)], start[tb])
+            times += [t0, end[tb]]
+            deltas += [unit * (1.0 - frs[chunk[tb]]),
+                       -unit * (1.0 - frs[chunk[tb]])]
+            devs += [dev[stage[tb], chunk[tb]], dev[stage[tb], chunk[tb]]]
+        times = np.concatenate(times)
+        deltas = np.concatenate(deltas)
+        devs = np.concatenate(devs)
         peaks = []
-        for dev in range(self.P):
-            events = []   # (time, delta)
-            for c in range(self.v):
-                s = pl.stage(dev, c)      # the stage of chunk c here
-                fr = self.stored_frac.get(c, 1.0)
-                for mb in range(self.m):
-                    for q in range(self.n_seq):
-                        ft = idx[(F, mb, c, s, q)]
-                        bt = idx[(B, mb, c, s, q)]
-                        events.append((ft.start, unit * fr))
-                        events.append((bt.end, -unit * fr))
-                        if fr < 1.0 and count_transient:
-                            # transient rematerialized block: alive from
-                            # the replay (explicit R, or B's recompute
-                            # prefix) until the backward releases it
-                            rt = idx.get((R, mb, c, s, q))
-                            t0 = rt.start if rt is not None else bt.start
-                            events.append((t0, unit * (1.0 - fr)))
-                            events.append((bt.end, -unit * (1.0 - fr)))
-            events.sort(key=lambda e: (e[0], e[1]))
-            cur = peak = 0.0
-            for _, d in events:
-                cur += d
-                peak = max(peak, cur)
-            peaks.append(peak)
+        for d in range(self.P):
+            m_ = devs == d
+            o = np.lexsort((deltas[m_], times[m_]))
+            run = np.cumsum(deltas[m_][o])
+            peaks.append(float(run.max(initial=0.0)))
         return peaks if per_stage else max(peaks)
 
     def warmup_cooldown_bubbles(self, stage: Optional[int] = None):
@@ -395,101 +455,123 @@ def retime_with_comm(sched: Schedule, tc: float,
     P2P *better* than 1F1B (beyond-paper observation, EXPERIMENTS.md
     §Perf).
     """
-    pl = sched.pl
-    order: Dict[int, List[Task]] = {d: sched.device_tasks(d)
-                                    for d in range(sched.P)}
-    new: Dict[Tuple, Task] = {}
-    done: Dict[Tuple, float] = {}
-    ptr = {d: 0 for d in range(sched.P)}
-    free = {d: 0.0 for d in range(sched.P)}
     P, v, ns = sched.P, sched.v, sched.n_seq
     rcs = sched.r_chunks()
     n_total = len(sched.tasks)
+    a = sched._arrays()
+    kind, mb, chunk, stage, seq = (a["kind"], a["mb"], a["chunk"],
+                                   a["stage"], a["seq"])
+    ind, dev = a["ind"], a["dev"]
+    recomp_a, dur_a = a["recomp"], a["dur"]
+    my_dev = dev[stage, chunk]
 
-    def edge_tc(prod_stage: int, prod_chunk: int, t: Task) -> float:
-        return 0.0 if pl.is_local(prod_stage, prod_chunk,
-                                  t.stage, t.chunk) else tc
+    # ---- precompute dependency arrays: for each task, a padded list of
+    # (dep index, +tc if device-crossing, applies-at-grad-needed) ----
+    dep_idx = [[] for _ in range(n_total)]
+    dep_tc = [[] for _ in range(n_total)]
+    dep_g = [[] for _ in range(n_total)]
 
-    def dep_times(t: Task) -> Tuple[float, float]:
-        """(earliest start, earliest grad_needed_at) constraints."""
-        es = 0.0
-        q = t.seq
-        if t.kind == F:
-            if t.stage > 0:
-                es = done[(F, t.mb, t.chunk, t.stage - 1, q)] \
-                    + edge_tc(t.stage - 1, t.chunk, t)
-            elif t.chunk > 0:
-                es = done[(F, t.mb, t.chunk - 1, P - 1, q)] \
-                    + edge_tc(P - 1, t.chunk - 1, t)
-            if q > 0:       # stage-local KV prefix, no P2P cost
-                es = max(es, done[(F, t.mb, t.chunk, t.stage, q - 1)])
-            return es, es
-        if t.kind == W:
-            es = done[(B, t.mb, t.chunk, t.stage, q)]
-            return es, es
-        if t.kind == R:
-            es = done[(F, t.mb, t.chunk, t.stage, q)]
-            return es, es
-        es = done[(F, t.mb, t.chunk, t.stage, q)]
-        if t.chunk in rcs:
-            es = max(es, done[(R, t.mb, t.chunk, t.stage, q)])
-        if t.stage < P - 1:
-            g = done[(B, t.mb, t.chunk, t.stage + 1, q)] \
-                + edge_tc(t.stage + 1, t.chunk, t)
-        elif t.chunk < v - 1:
-            g = done[(B, t.mb, t.chunk + 1, 0, q)] \
-                + edge_tc(0, t.chunk + 1, t)
-        else:
-            g = done[(F, t.mb, t.chunk, t.stage, q)]
-        if q < ns - 1:      # stage-local dKV carry, no P2P cost
-            g = max(g, done[(B, t.mb, t.chunk, t.stage, q + 1)])
-        return es, g
+    def add_deps(mask, idx_arr, prod_s, prod_c, is_g, local=False):
+        for i in np.flatnonzero(mask):
+            j = idx_arr[i]
+            assert j >= 0, \
+                f"missing dependency for {sched.tasks[i].key()}"
+            dep_idx[i].append(int(j))
+            dep_tc[i].append(0.0 if local or dev[prod_s[i], prod_c[i]]
+                             == my_dev[i] else tc)
+            dep_g[i].append(is_g)
 
-    def comm_edges(t: Task) -> int:
-        """device-crossing inputs + outputs of this task (sync mode)."""
-        me = pl.device(t.stage, t.chunk)
-        n = len([k for k in _dep_keys(t, P, v, rcs, ns)
-                 if pl.device(k[3], k[2]) != me])
-        if t.kind == F:
-            if t.stage < P - 1:
-                n += 0 if pl.is_local(t.stage, t.chunk,
-                                      t.stage + 1, t.chunk) else 1
-            elif t.chunk < v - 1:
-                n += 0 if pl.is_local(t.stage, t.chunk,
-                                      0, t.chunk + 1) else 1
-        elif t.kind == B:
-            if t.stage > 0:
-                n += 0 if pl.is_local(t.stage, t.chunk,
-                                      t.stage - 1, t.chunk) else 1
-            elif t.chunk > 0:
-                n += 0 if pl.is_local(t.stage, t.chunk,
-                                      P - 1, t.chunk - 1) else 1
-        return n
+    is_f, is_b = kind == 0, kind == 1
+    is_w, is_r = kind == 2, kind == 3
+    in_rcs = np.isin(chunk, list(rcs)) if rcs else np.zeros(n_total, bool)
+    sm1, cm1 = np.maximum(stage - 1, 0), np.maximum(chunk - 1, 0)
+    sp1, cp1 = np.minimum(stage + 1, P - 1), np.minimum(chunk + 1, v - 1)
+    qm1, qp1 = np.maximum(seq - 1, 0), np.minimum(seq + 1, ns - 1)
+    pl_P1 = np.full(n_total, P - 1)
+    pl_0 = np.zeros(n_total, np.int64)
+    add_deps(is_f & (stage > 0), ind[0, mb, chunk, sm1, seq], sm1, chunk,
+             False)
+    add_deps(is_f & (stage == 0) & (chunk > 0),
+             ind[0, mb, cm1, P - 1, seq], pl_P1, cm1, False)
+    add_deps(is_f & (seq > 0), ind[0, mb, chunk, stage, qm1], stage,
+             chunk, False, local=True)
+    add_deps(is_w, ind[1, mb, chunk, stage, seq], stage, chunk, False,
+             local=True)
+    add_deps(is_r, ind[0, mb, chunk, stage, seq], stage, chunk, False,
+             local=True)
+    add_deps(is_b, ind[0, mb, chunk, stage, seq], stage, chunk, False,
+             local=True)
+    add_deps(is_b & in_rcs, ind[3, mb, chunk, stage, seq], stage, chunk,
+             False, local=True)
+    add_deps(is_b & (stage < P - 1), ind[1, mb, chunk, sp1, seq], sp1,
+             chunk, True)
+    add_deps(is_b & (stage == P - 1) & (chunk < v - 1),
+             ind[1, mb, cp1, 0, seq], pl_0, cp1, True)
+    add_deps(is_b & (stage == P - 1) & (chunk == v - 1),
+             ind[0, mb, chunk, stage, seq], stage, chunk, True,
+             local=True)
+    add_deps(is_b & (seq < ns - 1), ind[1, mb, chunk, stage, qp1], stage,
+             chunk, True, local=True)
 
+    # sync mode: device-crossing inputs + outputs lengthen the task
+    n_cross = np.array([sum(1 for t_ in tcs if t_ > 0)
+                        for tcs in dep_tc], np.int64)
+    out_s = np.where(is_f, sp1, sm1)
+    out_s = np.where(is_f & (stage == P - 1), 0, out_s)
+    out_s = np.where(is_b & (stage == 0), P - 1, out_s)
+    out_c = np.where(is_f & (stage == P - 1), cp1,
+                     np.where(is_b & (stage == 0), cm1, chunk))
+    has_out = (is_f & ((stage < P - 1) | (chunk < v - 1))) | \
+        (is_b & ((stage > 0) | (chunk > 0)))
+    out_c_dev = dev[out_s, out_c]
+    n_cross = n_cross + (has_out & (out_c_dev != my_dev)).astype(np.int64)
+    extra_a = tc * n_cross if sync else np.zeros(n_total)
+
+    # ---- event-driven replay preserving each device's task order ----
+    order = {d: [i for i in np.lexsort((a["start"],))
+                 if my_dev[i] == d] for d in range(P)}
+    done = np.zeros(n_total, bool)
+    done_t = np.zeros(n_total)
+    new_start = np.zeros(n_total)
+    ptr = {d: 0 for d in range(P)}
+    free = {d: 0.0 for d in range(P)}
+    placed = 0
     progressed = True
-    while len(new) < n_total:
+    while placed < n_total:
         progressed = False
-        for d in range(sched.P):
-            while ptr[d] < len(order[d]):
-                t = order[d][ptr[d]]
-                ready = all(k in done for k in _dep_keys(t, P, v, rcs, ns))
-                if not ready:
+        for d in range(P):
+            lst = order[d]
+            while ptr[d] < len(lst):
+                i = lst[ptr[d]]
+                di = dep_idx[i]
+                if di and not done[di].all():
                     break
-                es, g = dep_times(t)
-                start = max(free[d], es, g - t.recomp)
-                extra = tc * comm_edges(t) if sync else 0.0
-                nt = dataclasses.replace(t, start=start, dur=t.dur + extra,
-                                         comm=t.comm + extra)
-                new[t.key()] = nt
-                done[t.key()] = nt.end
-                free[d] = nt.end
+                es = g = 0.0
+                for j, tcj, gj in zip(di, dep_tc[i], dep_g[i]):
+                    t_ = done_t[j] + tcj
+                    if gj:
+                        g = max(g, t_)
+                    else:
+                        es = max(es, t_)
+                start = max(free[d], es, g - recomp_a[i])
+                new_start[i] = start
+                done_t[i] = start + dur_a[i] + extra_a[i]
+                done[i] = True
+                free[d] = done_t[i]
                 ptr[d] += 1
+                placed += 1
                 progressed = True
-        if not progressed and len(new) < n_total:
+        if not progressed and placed < n_total:
             raise RuntimeError(
-                f"deadlock retiming {sched.name}: placed {len(new)}/{n_total}")
+                f"deadlock retiming {sched.name}: placed "
+                f"{placed}/{n_total}")
+    new_tasks = [dataclasses.replace(t, start=float(new_start[i]),
+                                     dur=t.dur + float(extra_a[i]),
+                                     comm=t.comm + float(extra_a[i]))
+                 for i, t in enumerate(sched.tasks)]
     out = dataclasses.replace(
-        sched, tasks=sorted(new.values(), key=lambda t: (t.start, t.stage)))
+        sched, tasks=sorted(new_tasks,
+                            key=lambda t: (t.start, t.stage)))
     out.meta = dict(sched.meta, tc=tc)
     return out
 

@@ -472,6 +472,188 @@ def build_task_table(sched: Schedule) -> TaskTable:
                      kv_depth=kv_depth, placement_name=pl.name)
 
 
+# ---------------------------------------------------------------------------
+# phase factorization (warmup / steady-state period / cooldown)
+# ---------------------------------------------------------------------------
+
+F_OPS = (FWD_MID, FWD_FIRST, FWD_LAST)
+B_OPS = (BWD_MID, BWD_FIRST, BWD_LAST)
+W_OPS = (WGT_MID, WGT_FIRST, WGT_LAST)
+R_OPS = (RCP_MID, RCP_FIRST, RCP_LAST)
+
+COL_OP, COL_CHUNK, COL_MB, COL_SRC, COL_ACT, COL_SND = range(6)
+COL_W, COL_R, COL_SEQ, COL_KV = 12, 13, 14, 15
+
+
+def derived_slot_cols(tab: TaskTable) -> Tuple[int, ...]:
+    """Columns of :meth:`TaskTable.arrays` the runtime re-derives from
+    ``(op, chunk, mb, seq)`` instead of reading from the table: the FIFO
+    ring slots are modular in the (backward-order) unit index, so
+    excluding them from the phase-equality test lets the steady state
+    compress at one microbatch's footprint instead of the lcm of every
+    ring depth it touches.  The activation ring is FIFO only for
+    ``n_seq == 1`` tables (sequence chunking switches it to exact
+    interval coloring, which stays a table column)."""
+    cols = [COL_W, COL_R, COL_KV]
+    if tab.n_seq == 1:
+        cols.append(COL_ACT)
+    return tuple(cols)
+
+
+def derive_slots(tab: TaskTable, op, chunk, mb, seq, np_=np):
+    """Recompute the modular ring-slot columns from task coordinates —
+    the exact formulas of :func:`build_task_table` (``beta % depth``
+    FIFO assignment with the op-code masks deciding which rows carry a
+    slot).  ``np_`` may be ``jax.numpy``; all inputs are broadcastable
+    int arrays.  Returns ``{col: values}`` for :func:`derived_slot_cols`.
+    """
+    v, ns = tab.v, tab.n_seq
+    rcs = np_.asarray([int(c in tab.rmt_depth) for c in range(v)])
+
+    def depth_arr(d: Dict[int, int]):
+        return np_.asarray([max(int(d.get(c, 0)), 1) for c in range(v)])
+
+    beta = mb * ns + (ns - 1 - seq)
+    isin = lambda ops: sum((op == o) for o in ops).astype(bool) \
+        if np_ is np else sum((op == o) for o in ops) > 0   # noqa: E731
+    is_b, is_w, is_r = isin(B_OPS), isin(W_OPS), isin(R_OPS)
+    is_rc = rcs[chunk] > 0
+    out = {}
+    out[COL_W] = np_.where(
+        (is_b | is_w) & bool(tab.has_w),
+        beta % depth_arr(tab.wstash_depth)[chunk], -1)
+    out[COL_R] = np_.where(
+        is_rc & (is_r | is_b) & (op != RCP_FIRST) & (op != BWD_FIRST),
+        beta % depth_arr(tab.rmt_depth)[chunk], -1)
+    if ns > 1:
+        out[COL_KV] = np_.where(
+            isin(F_OPS) | is_b,
+            mb % depth_arr(tab.kv_depth)[chunk], -1)
+    else:
+        out[COL_KV] = np_.where(op < 0, 0, -1) if np_ is not np \
+            else -np.ones_like(op)
+        has_act = isin(F_OPS) | is_b | is_r
+        has_act &= (op != FWD_FIRST) & (op != BWD_FIRST) & (op != RCP_FIRST)
+        has_act &= ~(is_b & is_rc)
+        out[COL_ACT] = np_.where(
+            has_act, mb % depth_arr(tab.act_depth)[chunk], -1)
+    return out
+
+
+@dataclass(frozen=True)
+class PhasePlan:
+    """Factorization of a ``[T, P]`` task table into three phases:
+
+    - **warmup** ticks ``[0, warmup)``,
+    - a **steady-state body** of ``period`` ticks replayed ``n_periods``
+      times (ticks ``[warmup, warmup + n_periods * period)``): tick
+      ``warmup + k*period + j`` equals body tick ``warmup + j`` in every
+      structural column, with the microbatch index advanced by
+      ``k * mb_stride`` at non-idle positions (and the modular ring-slot
+      columns of :func:`derived_slot_cols` following via
+      :func:`derive_slots`),
+    - **cooldown** ticks ``[cooldown_start, T)``.
+
+    ``period == 0`` means no compressible steady state was found and the
+    whole table is the warmup phase.  The factorization is a pure
+    re-encoding: :func:`replay_phases` reconstructs the original arrays
+    exactly (``tests/test_schedules.py`` asserts this for every
+    registered schedule x placement).
+    """
+    T: int
+    warmup: int
+    period: int = 0
+    n_periods: int = 0
+    mb_stride: int = 0
+
+    @property
+    def cooldown_start(self) -> int:
+        return self.warmup + self.n_periods * self.period
+
+    @property
+    def compressed_ticks(self) -> int:
+        """Ticks actually traced (warmup + one period + cooldown)."""
+        return self.warmup + self.period + (self.T - self.cooldown_start)
+
+
+def factor_phases(tab: TaskTable) -> PhasePlan:
+    """Find the steady-state period of a compiled task table.
+
+    Searches every candidate period ``p`` for the longest tick range in
+    which row ``t + p`` equals row ``t`` in every structural column
+    (op, chunk, seq, queue src/recv slots, send code — the modular ring
+    slots of :func:`derived_slot_cols` are re-derived from ``mb`` at
+    runtime and excluded), while ``mb`` advances by one uniform positive
+    stride at all non-idle positions (idle rows carry ``mb == 0`` on
+    both sides).  Returns the factorization maximizing the number of
+    ticks removed from the traced program, ``(n_periods - 1) * period``;
+    ties prefer the shorter period, then the earlier start.
+    """
+    A = tab.arrays().astype(np.int64)            # [T, P, 16]
+    T = tab.T
+    skip = set(derived_slot_cols(tab)) | {COL_MB}
+    cols = [i for i in range(A.shape[2]) if i not in skip]
+    idle = A[:, :, COL_OP] == IDLE
+    best = PhasePlan(T=T, warmup=T)
+    best_saved = 0
+    for p in range(1, T // 2 + 1):
+        same = np.all(A[:-p][:, :, cols] == A[p:][:, :, cols],
+                      axis=(1, 2))               # [T-p] structure matches
+        mbd = A[p:, :, COL_MB] - A[:-p, :, COL_MB]
+        act = ~idle[:-p]          # ops match above, so idle[t]==idle[t+p]
+        # idle positions must stay mb == 0 on both sides
+        idle_ok = np.all((mbd == 0) | act, axis=1)
+        # one uniform positive stride across all non-idle positions
+        has = act.any(axis=1)
+        stride = np.where(has, np.max(np.where(act, mbd, np.iinfo(
+            np.int64).min), axis=1), 0)
+        uniform = np.all((mbd == stride[:, None]) | ~act, axis=1)
+        ok = same & idle_ok & has & uniform & (stride > 0)
+        # maximal runs of ok ticks with constant stride
+        t = 0
+        while t < T - p:
+            if not ok[t]:
+                t += 1
+                continue
+            s = stride[t]
+            e = t
+            while e < T - p and ok[e] and stride[e] == s:
+                e += 1
+            L = e - t                            # periodicity window
+            n = L // p + 1                       # full periods covered
+            saved = (n - 1) * p
+            if n >= 2 and saved > best_saved:
+                best_saved = saved
+                best = PhasePlan(T=T, warmup=t, period=p, n_periods=n,
+                                 mb_stride=int(s))
+            t = e
+    return best
+
+
+def replay_phases(tab: TaskTable, plan: PhasePlan) -> np.ndarray:
+    """Reconstruct the full ``[T, P, 16]`` arrays from a
+    :class:`PhasePlan` — the inverse of :func:`factor_phases`, including
+    re-deriving the modular ring-slot columns the same way the executor
+    does at runtime.  Must equal ``tab.arrays()`` exactly; the
+    executor's steady-state scan performs the same replay on device."""
+    A = tab.arrays()
+    out = A.copy()
+    w, p, n, s = plan.warmup, plan.period, plan.n_periods, plan.mb_stride
+    if p:
+        body = A[w:w + p]
+        nonidle = body[:, :, COL_OP] != IDLE
+        for k in range(n):
+            seg = body.copy()
+            seg[:, :, COL_MB] = seg[:, :, COL_MB] + \
+                np.int32(k * s) * nonidle
+            out[w + k * p:w + (k + 1) * p] = seg
+    derived = derive_slots(tab, out[:, :, COL_OP], out[:, :, COL_CHUNK],
+                           out[:, :, COL_MB], out[:, :, COL_SEQ])
+    for col in derived_slot_cols(tab):
+        out[:, :, col] = derived[col]
+    return out.astype(np.int32)
+
+
 def validate_table(tab: TaskTable) -> None:
     """Re-derive invariants: every task present once; reads see writes;
     every stash ring (W-stash, remat, the act ring of rematerialized or

@@ -310,7 +310,8 @@ def plan_schedule_kwargs(plan: ParallelPlan) -> Dict[str, Any]:
 
 def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
                              plan: ParallelPlan, ocfg: OptimizerConfig,
-                             mesh, rules, extras: Optional[Dict] = None):
+                             mesh, rules, extras: Optional[Dict] = None,
+                             executor: Optional[str] = None):
     """ChronosPipe train step with pp mapped onto rules['pp'] (the "pod"
     axis in the production multi-pod mesh).  Returns the same 4-tuple as
     make_train_step.
@@ -326,6 +327,10 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     the refreshed bf16 deep weights before the next step's deep forward
     (Eq. (5)/(7) windows of the paper).  Pass ``extras`` (a dict) to
     receive the built ``PipelineSpec`` under ``extras["spec"]``.
+
+    ``executor`` selects the compiled executor form ("phase", the
+    default, or "legacy" — see
+    :func:`repro.core.pipeline_runtime.make_train_grads_fn`).
     """
     from repro.core.pipeline_runtime import (init_pipeline_params,
                                              make_pipeline_spec,
@@ -411,7 +416,7 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
         b_shard["frame_embeds"] = NamedSharding(
             mesh, sanitize_spec(P(None, _r(rules, "dp")), s, mesh))
 
-    grads_fn = make_train_grads_fn(spec, mesh)
+    grads_fn = make_train_grads_fn(spec, mesh, executor=executor)
 
     def step(params, opt_state, batch):
         with shard_env(mesh, rules):

@@ -101,11 +101,23 @@ def _chunk_fwd_seq(spec: PipelineSpec, block_params_c, flags_c, payload,
     return out, kv_out
 
 
-def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
+def make_seq_train_grads_fn(spec: PipelineSpec, mesh,
+                            executor: str = "phase"):
     """Seq-chunked counterpart of
     :func:`repro.core.pipeline_runtime.make_train_grads_fn` — same
     signature, same gradient semantics, 1/n_seq of the boundary-payload
-    working set plus the KV-carry rings."""
+    working set plus the KV-carry rings.  ``executor`` mirrors the core
+    runtime: ``"phase"`` (phase-compiled; pure-producer branches,
+    byte-packed sequence-chunk payloads, traced-once cores, single
+    collective exchange) or ``"legacy"`` (the pre-phase per-tick
+    interpreter, kept for A/B benchmarking)."""
+    if executor == "phase":
+        return _make_seq_train_grads_phase(spec, mesh)
+    assert executor == "legacy", executor
+    return _make_seq_train_grads_legacy(spec, mesh)
+
+
+def _make_seq_train_grads_legacy(spec: PipelineSpec, mesh):
     cfg = spec.cfg
     tab = spec.table
     P_, v, ns = tab.P, tab.v, tab.n_seq
@@ -484,5 +496,403 @@ def make_seq_train_grads_fn(spec: PipelineSpec, mesh):
     return call
 
 
+def _make_seq_train_grads_phase(spec: PipelineSpec, mesh):
+    """Phase-compiled seq executor — the
+    :func:`repro.core.pipeline_runtime._make_train_grads_phase` twin
+    with the KV-carry / dKV rings threaded through the pure-producer
+    branch protocol: branches additionally return ``st_kv`` (the F
+    tick's updated KV buffer) and ``st_dkv`` (the B tick's accumulated
+    cotangent), written back outside the switch through trash-slotted
+    ring updates."""
+    from repro.core.pipeline_runtime import (_build_route,
+                                             _exchange_ag_max,
+                                             _pack_payload, _payload_words,
+                                             _traced_once, _unpack_payload)
+    from repro.core.tasktable import (B_OPS, BWD_FIRST, BWD_LAST, F_OPS,
+                                      FWD_FIRST, FWD_LAST, FWD_MID, IDLE,
+                                      R_OPS, RCP_MID, factor_phases,
+                                      replay_phases)
+    import numpy as np
+
+    cfg = spec.cfg
+    tab = spec.table
+    P_, v, ns = tab.P, tab.v, tab.n_seq
+    assert ns > 1 and not tab.has_w
+    assert tab.placement_name == "interleaved", \
+        "seq-chunked executor supports the interleaved placement only"
+    pp = spec.pp_axis
+    Sc = spec.S // ns
+    plan = factor_phases(tab)
+    A = tab.arrays()
+    stream = replay_phases(tab, plan)
+    assert np.array_equal(stream, A), \
+        "phase factorization is not a pure re-encoding of the table"
+    remat = tab.has_r
+
+    def offsets(depths):
+        off = np.zeros(v, np.int64)
+        total = 0
+        for c in range(v):
+            off[c] = total
+            total += depths.get(c, 0)
+        return jnp.asarray(off), total
+
+    act_offsets, total_act = offsets(tab.act_depth)
+    kv_offsets, total_kv = offsets(tab.kv_depth)
+    r_offsets, total_rmt = offsets(tab.rmt_depth)
+    flags_np = spec.layout.flags(cfg)
+    M = spec.layout.M
+    per = spec.layout.period
+    G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Wb = _payload_words(spec, S=Sc)
+    counts = {"embed": 0, "chunk": 0, "head": 0}
+    codes = tuple(int(x) for x in np.unique(A[:, :, 0]))
+    snds = frozenset(int(x) for x in np.unique(A[:, :, 5]))
+    use_ag = P_ * spec.mbB * Wb * 2 <= _exchange_ag_max()
+
+    def spmd(stage_iota, params, batch):
+        s_idx = stage_iota[0]
+        blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
+        flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
+        shared = {k: params[k] for k in params if k != "blocks"}
+        dtype = jnp.dtype(cfg.compute_dtype)
+
+        def to_varying(a):
+            return jax_compat.to_varying(a, pp)
+
+        def vary(x):
+            return jax.tree.map(to_varying, x)
+
+        def chunk_core(blocks_c, pay, kvp, flags_c, pos0):
+            counts["chunk"] += 1
+            out, kv_out = _chunk_fwd_seq(spec, blocks_c, flags_c, pay,
+                                         kvp, pos0)
+            return vary(out), vary(kv_out)
+
+        def embed_core(shared_p, tok):
+            counts["embed"] += 1
+            return vary(_embed_tokens(spec, shared_p, tok))
+
+        def head_core(pay_out, shared_p, labels, mask, denom):
+            counts["head"] += 1
+            x = L.rmsnorm(shared_p["final_norm"], pay_out["x"],
+                          cfg.norm_eps)
+            logits = L.unembed(shared_p["embed"], x)
+            ce = L.softmax_xent(logits, labels, mask, denom=denom)
+            return to_varying(ce + spec.aux_weight * pay_out["aux"][0])
+
+        jchunk = _traced_once(chunk_core)
+        jembed = _traced_once(embed_core)
+        jhead = _traced_once(head_core)
+
+        zero_wire = to_varying(jnp.zeros((spec.mbB, Wb), jnp.uint16))
+        zero_kv_val = vary({
+            "k": jnp.zeros((M, per, spec.mbB, spec.S, G, hd), dtype),
+            "v": jnp.zeros((M, per, spec.mbB, spec.S, G, hd), dtype)})
+        zero_blocks_g = jax.tree.map(jnp.zeros_like, blocks)
+
+        def zero_gs():
+            return jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), shared)
+
+        def pin_buf(t):
+            def one(a):
+                if a.ndim == 7:
+                    return shard(a, None, None, None, "dp", None, None,
+                                 None)
+                if a.ndim >= 3:
+                    return shard(a, None, "dp", None)
+                return a
+            return jax.tree.map(one, t)
+
+        def ring(slots):
+            return pin_buf(jnp.zeros((slots + 1, spec.mbB, Wb),
+                                     jnp.uint16))
+
+        def kv_ring():
+            return pin_buf(jax.tree.map(
+                lambda a: jnp.zeros((total_kv + 1,) + a.shape, a.dtype),
+                zero_kv_val))
+
+        def carry_init():
+            carry = {
+                "fq": ring(tab.fq_depth),
+                "bq": ring(tab.bq_depth),
+                "act": ring(total_act),
+                "kv": kv_ring(),
+                "dkv": kv_ring(),
+                "gb": zero_blocks_g,
+                "gs": zero_gs(),
+                "loss": jnp.zeros((), jnp.float32),
+                "nloss": jnp.zeros((), jnp.float32),
+            }
+            if remat:
+                carry["rmt"] = ring(total_rmt)
+            return carry
+
+        def rd(buf, i):
+            return jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+
+        def wr(buf, val, i):
+            return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
+
+        def tick_core(carry, row_all):
+            row = row_all[s_idx]
+            op, c, mb, src = row[0], row[1], row[2], row[3]
+            aslot, rslot = row[4], row[13]
+            q, kvslot = row[14], row[15]
+            pos0 = q * Sc
+            gact = jnp.where(aslot < 0, total_act,
+                             act_offsets[c] + jnp.maximum(aslot, 0))
+            gkv = jnp.where(kvslot < 0, total_kv,
+                            kv_offsets[c] + jnp.maximum(kvslot, 0))
+            grm = jnp.where(rslot < 0, total_rmt,
+                            r_offsets[c] + jnp.maximum(rslot, 0)) \
+                if remat else None
+
+            def blocks_at():
+                blocks_c = [jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, False),
+                    t_) for t_ in blocks]
+                flags_c = {k: jax.lax.dynamic_index_in_dim(vv, c, 0, False)
+                           for k, vv in flags.items()}
+                return blocks_c, flags_c
+
+            def batch_inputs():
+                tokens = rd(batch["tokens"], mb)
+                tok_in = jax.lax.dynamic_slice(
+                    tokens[:, :-1], (0, pos0), (spec.mbB, Sc))
+                labels = jax.lax.dynamic_slice(
+                    tokens[:, 1:], (0, pos0), (spec.mbB, Sc))
+                if "loss_mask" in batch:
+                    mask_full = rd(batch["loss_mask"], mb)
+                    mask = jax.lax.dynamic_slice(mask_full, (0, pos0),
+                                                 (spec.mbB, Sc))
+                    denom = jnp.maximum(jnp.sum(mask_full), 1.0)
+                else:
+                    mask = None
+                    denom = jnp.asarray(float(spec.mbB * spec.S))
+                return tok_in, labels, mask, denom
+
+            def bnd_read():
+                a = rd(carry["act"], gact)
+                if remat:
+                    a = jnp.where(rslot >= 0, rd(carry["rmt"], grm), a)
+                return a
+
+            def kv_read(buf):
+                return jax.tree.map(lambda a: rd(a, gkv), buf)
+
+            def dkv_cot(dkv_in):
+                # zeros seed the first backward of the microbatch
+                return jax.tree.map(
+                    lambda a: jnp.where(q == ns - 1, jnp.zeros_like(a),
+                                        a), vary(dict(dkv_in)))
+
+            z32 = jnp.zeros((), jnp.float32)
+
+            def zeros_gbd():
+                return [jax.tree.map(
+                    lambda a: jnp.zeros(a.shape[1:], a.dtype), t)
+                    for t in zero_blocks_g]
+
+            def gs_of(gs_raw):
+                return jax.tree.map(lambda z, g: g.astype(z.dtype),
+                                    zero_gs(), gs_raw)
+
+            def ret(out=None, gbd=None, gsd=None, ce=None, nl=None,
+                    st_a=None, st_kv=None, st_dkv=None):
+                return (out if out is not None else zero_wire,
+                        gbd if gbd is not None else zeros_gbd(),
+                        gsd if gsd is not None else zero_gs(),
+                        ce if ce is not None else z32,
+                        nl if nl is not None else z32,
+                        st_a if st_a is not None else zero_wire,
+                        st_kv if st_kv is not None else zero_kv_val,
+                        st_dkv if st_dkv is not None else zero_kv_val)
+
+            def br_idle(_):
+                return ret()
+
+            def br_fwd(_):
+                is_first = op == FWD_FIRST
+                is_last = op == FWD_LAST
+                blocks_c, flags_c = blocks_at()
+                tok_in, labels, mask, denom = batch_inputs()
+                pin = rd(carry["fq"], jnp.maximum(src, 0))
+                pay = jax.lax.cond(
+                    is_first, lambda _: jembed(shared, tok_in),
+                    lambda _: vary(_unpack_payload(spec, pin, S=Sc)),
+                    None)
+                out, kv_out = jchunk(blocks_c, pay,
+                                     vary(kv_read(carry["kv"])), flags_c,
+                                     pos0)
+                ce = jax.lax.cond(
+                    is_last,
+                    lambda _: jhead(dict(out), shared, labels, mask,
+                                    denom),
+                    lambda _: jnp.zeros((), jnp.float32), None)
+                return ret(out=_pack_payload(spec, out, S=Sc), ce=ce,
+                           nl=jnp.where(is_last, 1.0 / ns, 0.0),
+                           st_a=pin, st_kv=kv_out)
+
+            def br_bwd(_):
+                is_first = op == BWD_FIRST
+                is_last = op == BWD_LAST
+                blocks_c, flags_c = blocks_at()
+                tok_in, labels, mask, denom = batch_inputs()
+                bnd = bnd_read()
+                kv_in = kv_read(carry["kv"])
+                pay_in = jax.lax.cond(
+                    is_first, lambda _: jembed(shared, tok_in),
+                    lambda _: vary(_unpack_payload(spec, bnd, S=Sc)),
+                    None)
+                (out, _), vjp = jax.vjp(
+                    lambda bp, pay, kvp: jchunk(bp, pay, kvp, flags_c,
+                                                pos0),
+                    vary(blocks_c), vary(pay_in), vary(dict(kv_in)))
+                qdy = _unpack_payload(
+                    spec, rd(carry["bq"], jnp.maximum(src, 0)), S=Sc)
+
+                def head_pull(_):
+                    _, hvjp = jax.vjp(
+                        lambda po, sp: jhead(po, sp, labels, mask,
+                                             denom),
+                        vary(dict(out)), vary(shared))
+                    return hvjp(to_varying(jnp.ones((), jnp.float32)))
+
+                dy, gs = jax.lax.cond(
+                    is_last, head_pull,
+                    lambda _: (vary(dict(qdy)), zero_gs()), None)
+                gb_c, dx, dkv = vjp((dy, dkv_cot(kv_read(carry["dkv"]))))
+
+                def embed_pull(_):
+                    _, evjp = jax.vjp(
+                        lambda sp: jembed(sp, tok_in), vary(shared))
+                    (gs_e,) = evjp(vary(dict(dx)))
+                    return gs_e
+
+                gs = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gs,
+                    jax.lax.cond(is_first, embed_pull,
+                                 lambda _: zero_gs(), None))
+                return ret(out=_pack_payload(spec, dx, S=Sc), gbd=gb_c,
+                           gsd=gs_of(gs), st_dkv=dkv)
+
+            def br_rcp(_):
+                return ret(st_a=rd(carry["act"], gact))
+
+            groups = ((IDLE,), F_OPS, B_OPS, R_OPS)
+            builders = (br_idle, br_fwd, br_bwd, br_rcp)
+            remap = np.zeros(13, np.int32)
+            branches = []
+            for ops, fn in zip(groups, builders):
+                if any(cd in codes for cd in ops):
+                    for cd in ops:
+                        remap[cd] = len(branches)
+                    branches.append(fn)
+            if len(branches) == 1:
+                res = branches[0](())
+            else:
+                res = jax.lax.switch(jnp.asarray(remap)[op], branches, ())
+            out, gb_d, gs_d, ce, nl, st_a, st_kv, st_dkv = res
+
+            is_f = (op >= FWD_MID) & (op <= FWD_LAST)
+            is_b = sum((op == o) for o in B_OPS) > 0
+            carry = dict(
+                carry,
+                act=wr(carry["act"], st_a,
+                       jnp.where(is_f, gact, total_act)),
+                kv=jax.tree.map(
+                    lambda buf, val: wr(buf, val,
+                                        jnp.where(is_f, gkv, total_kv)),
+                    carry["kv"], st_kv),
+                dkv=jax.tree.map(
+                    lambda buf, val: wr(buf, val,
+                                        jnp.where(is_b, gkv, total_kv)),
+                    carry["dkv"], st_dkv))
+            if remat:
+                is_r = op >= RCP_MID
+                carry = dict(carry, rmt=wr(
+                    carry["rmt"], st_a, jnp.where(is_r, grm, total_rmt)))
+            gb = [jax.tree.map(
+                lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                    g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
+                    + d, c, 0), gt, dt)
+                for gt, dt in zip(carry["gb"], gb_d)]
+            gs = jax.tree.map(lambda a, b: a + b, carry["gs"], gs_d)
+            carry = dict(carry, gb=gb, gs=gs,
+                         loss=carry["loss"] + ce,
+                         nloss=carry["nloss"] + nl)
+            return carry, out, row
+
+        def make_tick():
+            route = _build_route(tab, P_, pp, snds, use_ag, s_idx)
+
+            def tick(carry, row_all):
+                carry, out, row = tick_core(carry, row_all)
+                fq, bq = route(carry, out, row_all, row)
+                carry = dict(carry, fq=pin_buf(fq), bq=pin_buf(bq),
+                             act=pin_buf(carry["act"]),
+                             kv=pin_buf(carry["kv"]),
+                             dkv=pin_buf(carry["dkv"]))
+                if remat:
+                    carry = dict(carry, rmt=pin_buf(carry["rmt"]))
+                return carry
+
+            return tick
+
+        tick = make_tick()
+        carry, _ = jax.lax.scan(
+            lambda cr, rw: (tick(cr, rw), None),
+            jax.tree.map(to_varying, carry_init()), jnp.asarray(stream))
+
+        gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
+        gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
+        loss = jax.lax.psum(carry["loss"], pp)
+        n = jax.lax.psum(carry["nloss"], pp)
+        metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
+        return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+
+    def call(params, batch):
+        in_specs = (
+            P(pp),
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            jax.tree.map(lambda _: P(), batch),
+        )
+        out_specs = (
+            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                        params["blocks"]],
+             **{k: jax.tree.map(lambda _: P(), params[k])
+                for k in params if k != "blocks"}},
+            {"loss": P(), "n_microbatches": P()},
+        )
+
+        def spmd_entry(stage_iota, params, batch):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():
+                return spmd(stage_iota, params, batch)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes={pp})(stage_iota, params,
+                                                      batch)
+
+    call.trace_counts = counts
+    call.phase_plan = plan
+    return call
+
+
 def _ppermute(x, axis, perm):
+    """Tree-mapped ``lax.ppermute``; all-identity permutations (e.g. the
+    P=1 hop wrap) skip the collective and pass the payload through."""
+    if all(s == d for s, d in perm):
+        return x
     return jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm), x)

@@ -1,0 +1,50 @@
+"""Subprocess helper: trace-dedup accounting for the phase-compiled
+executor.
+
+Builds and LOWERS (no compile — tracing is what's under test) the phase
+executor for a fused family (chronos), a split-backward family
+(chronos_zb, exercising the B/W stash path), and the seqpipe twin
+(chronos_seq), then prints each executor's ``trace_counts``: how many
+times the embed / chunk / head Python bodies actually ran during
+tracing.  The parent test asserts every count is exactly 1 — the
+``_traced_once`` wrappers record each body a single time and every
+switch branch (including the vjp-based backward branches) replays the
+recorded jaxpr, so branch re-tracing cannot regress silently.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import jax  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
+                                         make_pipeline_spec,
+                                         make_train_grads_fn)
+from repro.jax_compat import make_mesh  # noqa: E402
+from repro.models import shard_env  # noqa: E402
+
+cfg = get_reduced("tinyllama-1.1b")
+P_, m, mbB, S = 2, 4, 2, 17
+mesh = make_mesh((P_,), ("pp",))
+
+cases = (
+    ("fused", "chronos", dict(v=2)),
+    ("split", "chronos_zb", dict(v=2)),
+    ("seq", "chronos_seq", dict(v=2, n_seq=2)),
+)
+for label, schedule, kw in cases:
+    n_seq = kw.pop("n_seq", 1)
+    spec = make_pipeline_spec(cfg, P=P_, v=kw["v"], m=m, microbatch=mbB,
+                              seq_len=S, schedule=schedule, n_seq=n_seq)
+    params, _ = init_pipeline_params(jax.random.key(0), cfg, spec.layout)
+    tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
+                                cfg.vocab_size)
+    with shard_env(mesh, {}):
+        fn = make_train_grads_fn(spec, mesh, executor="phase")
+        jax.jit(fn).lower(params, {"tokens": tokens})
+    c = fn.trace_counts
+    print(f"COUNTS {label} embed={c['embed']} chunk={c['chunk']} "
+          f"head={c['head']}")
+sys.exit(0)
