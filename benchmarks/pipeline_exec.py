@@ -1,7 +1,11 @@
 """Executor micro-benchmark: legacy per-tick interpreter vs the
-phase-compiled executor (PR 5's tentpole), measured per schedule family.
+phase-compiled executor (PR 5's tentpole), measured per schedule family,
+and — per family — the compute-backend axis: ``kernels="xla"`` vs
+``kernels="fused"`` (the repro.models.backend seam dispatching the
+Pallas kernel library; interpret=True on this CPU host, so the fused
+column measures seam + interpret overhead, not TPU kernel speed).
 
-For each (family, executor) cell this records
+For each (family, executor, kernels) cell this records
 
 - **trace_s** — ``jax.jit(fn).lower(...)`` wall time (Python tracing),
 - **compile_s** — ``lowered.compile()`` wall time (XLA),
@@ -15,7 +19,8 @@ For each (family, executor) cell this records
   the analytic lockstep cost of the table (max task duration per tick),
 - **grain_us** — steady_ms / predicted_grains: the executor's effective
   grain time.  Comparing it across families separates schedule compute
-  (expected) from executor overhead (the thing this PR attacks).
+  (expected) from executor overhead; comparing it across the kernels
+  column prices the fused backend per family.
 
 Writes ``BENCH_pipeline_exec.json`` (schema ``{bench, rows, host,
 commit}``) at the repo root and prints a summary table.  ``--check``
@@ -105,19 +110,20 @@ def run(check=False, reps=None, rounds=None, json_out=None):
 
     cells = {}
     for family, kw, v, n_seq in matrix:
-        spec = make_pipeline_spec(cfg, P=P_, v=v, m=m, microbatch=mbB,
-                                  seq_len=S, schedule=family,
-                                  n_seq=n_seq, **kw)
+        specs = {kern: make_pipeline_spec(
+            cfg, P=P_, v=v, m=m, microbatch=mbB, seq_len=S,
+            schedule=family, n_seq=n_seq, kernels=kern, **kw)
+            for kern in ("xla", "fused")}
         vkw = {"v": v} if family in ("chronos", "chronos_recomp",
                                      "chronos_seq") else {}
         if n_seq > 1:
             vkw["n_seq"] = n_seq
         sched = get_schedule(family, P_, m, **vkw, **kw)
         params, _ = init_pipeline_params(jax.random.key(0), cfg,
-                                         spec.layout)
+                                         specs["xla"].layout)
         tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                                     cfg.vocab_size)
-        cells[family] = (spec, sched, params, {"tokens": tokens})
+        cells[family] = (specs, sched, params, {"tokens": tokens})
 
     # aggregation: MEDIAN across rounds for the one-shot costs (trace /
     # compile vary with environmental noise; the median is the robust
@@ -127,11 +133,15 @@ def run(check=False, reps=None, rounds=None, json_out=None):
     import statistics
     rows = []
     best = {}
+    # the kernels axis rides the phase executor only: the legacy
+    # interpreter is kept as the xla-backend baseline and the fused
+    # backend targets the production (phase) executor
+    cell_axes = (("legacy", "xla"), ("phase", "xla"), ("phase", "fused"))
     for rnd in range(rounds):
-        for family, (spec, sched, params, batch) in cells.items():
-            for executor in ("legacy", "phase"):
-                best.setdefault((family, executor), []).append(
-                    bench_cell(spec, sched, mesh, params, batch,
+        for family, (specs, sched, params, batch) in cells.items():
+            for executor, kern in cell_axes:
+                best.setdefault((family, executor, kern), []).append(
+                    bench_cell(specs[kern], sched, mesh, params, batch,
                                executor, reps))
     agg = {}
     for key, rs in best.items():
@@ -148,15 +158,16 @@ def run(check=False, reps=None, rounds=None, json_out=None):
             agg[key]["steady_ms"] * 1e3
             / agg[key]["predicted_grains"], 1)
     best = agg
-    for (family, executor), r in best.items():
+    for (family, executor, kern), r in best.items():
         rows.append({"family": family, "P": P_, "m": m,
-                     "v": cells[family][0].layout.v,
-                     "executor": executor, **r})
+                     "v": cells[family][0]["xla"].layout.v,
+                     "executor": executor, "kernels": kern, **r})
 
     summary = {}
     for family in cells:
-        leg = best[(family, "legacy")]
-        ph = best[(family, "phase")]
+        leg = best[(family, "legacy", "xla")]
+        ph = best[(family, "phase", "xla")]
+        fu = best[(family, "phase", "fused")]
         tc_ratio = (leg["trace_s"] + leg["compile_s"]) / \
             (ph["trace_s"] + ph["compile_s"])
         speedup = 1.0 - ph["steady_ms"] / leg["steady_ms"]
@@ -166,6 +177,11 @@ def run(check=False, reps=None, rounds=None, json_out=None):
             "steady_cpu_speedup_pct": round(
                 100 * (1 - ph["steady_cpu_ms"] / leg["steady_cpu_ms"]),
                 1),
+            # fused-vs-xla grain on the phase executor (CPU interpret
+            # overhead on this host; the TPU number is the interesting
+            # one, this row just keeps the axis measured)
+            "fused_grain_ratio": round(
+                fu["grain_us"] / ph["grain_us"], 2),
         }
 
     try:
@@ -193,17 +209,19 @@ def run(check=False, reps=None, rounds=None, json_out=None):
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
 
-    hdr = (f"{'family':15s} {'executor':7s} {'trace':>6s} {'compile':>8s} "
-           f"{'steady':>9s} {'cpu':>9s} {'grain':>8s}")
+    hdr = (f"{'family':15s} {'executor':7s} {'kernels':7s} {'trace':>6s} "
+           f"{'compile':>8s} {'steady':>9s} {'cpu':>9s} {'grain':>8s}")
     print(hdr)
     for r in rows:
-        print(f"{r['family']:15s} {r['executor']:7s} {r['trace_s']:5.2f}s "
-              f"{r['compile_s']:7.2f}s {r['steady_ms']:7.1f}ms "
-              f"{r['steady_cpu_ms']:7.1f}ms {r['grain_us']:6.1f}us")
+        print(f"{r['family']:15s} {r['executor']:7s} {r['kernels']:7s} "
+              f"{r['trace_s']:5.2f}s {r['compile_s']:7.2f}s "
+              f"{r['steady_ms']:7.1f}ms {r['steady_cpu_ms']:7.1f}ms "
+              f"{r['grain_us']:6.1f}us")
     for family, s in summary.items():
         print(f"{family}: trace+compile {s['trace_compile_ratio']}x, "
               f"steady -{s['steady_speedup_pct']}% "
-              f"(cpu -{s['steady_cpu_speedup_pct']}%)")
+              f"(cpu -{s['steady_cpu_speedup_pct']}%), "
+              f"fused grain {s['fused_grain_ratio']}x")
     print(f"wrote {out_path}")
     return doc
 

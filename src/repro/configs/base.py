@@ -268,6 +268,11 @@ class ParallelPlan:
     recompute: RecomputeConfig = field(default_factory=RecomputeConfig)
     offload: OffloadConfig = field(default_factory=OffloadConfig)
     grad_compression: str = "none"  # none | int8_ef
+    kernels: str = "xla"            # compute backend for the chunk body
+                                    # (repro.models.backend): "xla" |
+                                    # "fused" (Pallas rmsnorm / flash /
+                                    # ssd kernels + in-executor AdamW
+                                    # for split-backward schedules)
 
     def with_(self, **kw) -> "ParallelPlan":
         return dataclasses.replace(self, **kw)

@@ -69,9 +69,11 @@ from repro.core.tasktable import (B_OPS, BWD_FIRST, BWD_LAST, BWD_MID,
                                   SEND_HOPF, TaskTable, W_OPS, WGT_FIRST,
                                   WGT_LAST, WGT_MID, build_task_table,
                                   factor_phases, replay_phases)
+from repro.models import backend as compute_backend
 from repro.models import layers as L
+from repro.models.backend import get_backend
 from repro.models.sharding import shard
-from repro.models.transformer import _apply_layer, _init_layer
+from repro.models.transformer import _init_layer
 
 #: executor selection: "phase" (phase-compiled, the default) or "legacy"
 #: (the pre-phase per-tick interpreter, kept for A/B benchmarking —
@@ -333,12 +335,13 @@ class PipelineSpec:
     pp_axis: str = "pp"
     aux_weight: float = 0.01
     n_seq: int = 1              # sequence chunks (repro.seqpipe)
+    kernels: str = "xla"        # compute backend (repro.models.backend)
 
 
 def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
                        microbatch: int, seq_len: int, schedule: str,
                        pp_axis: str = "pp", n_seq: int = 1,
-                       **sched_kw) -> PipelineSpec:
+                       kernels: str = "xla", **sched_kw) -> PipelineSpec:
     seq_schedules = ("seq1f1b", "chronos_seq")
     if schedule in seq_schedules:
         sched_kw["n_seq"] = n_seq
@@ -375,15 +378,11 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
             f"seq_len-1 = {seq_len - 1} not divisible by n_seq={n_seq}"
         assert not table.has_w, \
             "split-backward seq schedules are IR/table-only for now"
+    get_backend(kernels)        # validate the flag early
     return PipelineSpec(cfg=cfg, layout=layout, table=table, mbB=microbatch,
                         S=seq_len - 1 + prefix, prefix=prefix,
-                        enc_len=enc_len, pp_axis=pp_axis, n_seq=n_seq)
-
-
-def _to_varying(a, axis: str):
-    """pcast to varying over ``axis`` if inside a manual shard_map and not
-    already varying; no-op otherwise (incl. JAX without vma tracking)."""
-    return jax_compat.to_varying(a, axis)
+                        enc_len=enc_len, pp_axis=pp_axis, n_seq=n_seq,
+                        kernels=kernels)
 
 
 def _zero_payload(spec: PipelineSpec, dtype):
@@ -396,38 +395,11 @@ def _zero_payload(spec: PipelineSpec, dtype):
 
 
 def _chunk_fwd(spec: PipelineSpec, block_params_c, flags_c, payload):
-    """Run this stage's chunk over the payload. block_params_c: leaves
+    """Run this stage's chunk over the payload (the shared ChunkBody
+    seam, parameterized by ``spec.kernels``).  block_params_c: leaves
     [M, ...]; flags_c: {window, gate} [M, period]."""
-    cfg = spec.cfg
-    x = payload["x"]
-    aux = payload["aux"]
-    Bz, S, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
-    enc = payload.get("enc")
-
-    def body(carry, xs):
-        x, aux = carry
-        ptrees, fl = xs
-        for j in range(spec.layout.period):
-            x, _, aux = _apply_layer(
-                ptrees[j], x, positions, cfg, j,
-                enc_out=enc, prefix_len=spec.prefix, aux_sum=aux,
-                window_override=fl["window"][j], gate=fl["gate"][j])
-        return (x, aux), None
-
-    # FlashAttention semantics under vjp: keep projection outputs, always
-    # recompute attention internals (the Pallas kernel makes this free on
-    # TPU; without it the B-task would resurrect [S,S] scores per layer).
-    body = jax.checkpoint(
-        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-        prevent_cse=False)
-    init = jax.tree.map(lambda a: _to_varying(a, spec.pp_axis),
-                        (x, aux[0]))
-    (x, aux2), _ = jax.lax.scan(body, init, (block_params_c, flags_c))
-    out = dict(payload)
-    out["x"] = x
-    out["aux"] = jnp.reshape(aux2, (1,))
-    return out
+    return compute_backend.chunk_fwd(spec, block_params_c, flags_c,
+                                     payload)
 
 
 def _embed_tokens(spec: PipelineSpec, params, tokens, patch=None,
@@ -448,13 +420,8 @@ def _embed_tokens(spec: PipelineSpec, params, tokens, patch=None,
 
 
 def _head_loss(spec: PipelineSpec, params, payload, labels, loss_mask):
-    cfg = spec.cfg
-    x = L.rmsnorm(params["final_norm"], payload["x"], cfg.norm_eps)
-    logits = L.unembed(params["embed"], x)
-    if spec.prefix:
-        logits = logits[:, spec.prefix:]
-    ce = L.softmax_xent(logits, labels, loss_mask)
-    return ce + spec.aux_weight * payload["aux"][0]
+    return compute_backend.head_loss(spec, params, payload, labels,
+                                     loss_mask)
 
 
 def make_train_grads_fn(spec: PipelineSpec, mesh,
@@ -497,6 +464,39 @@ def make_train_grads_fn(spec: PipelineSpec, mesh,
     if executor == "phase":
         return _make_train_grads_phase(spec, mesh)
     return _make_train_grads_legacy(spec, mesh)
+
+
+def make_train_update_fn(spec: PipelineSpec, mesh, ocfg, m: int,
+                         executor: Optional[str] = None):
+    """Phase executor with the optimizer fused into the pipeline
+    program: returns ``fn(params, opt_state, batch) -> (params,
+    opt_state, metrics)``.
+
+    The AdamW step (``kernels/fused_adamw``) runs inside the shard_map
+    region right after the tick scan, on the stage-local gradient
+    accumulators — eliminating the separate optimizer phase that
+    ``make_train_grads_fn`` callers otherwise run on the gathered
+    gradient tree.  This is the natural companion of the split-backward
+    families (``zb_h1``, ``chronos_zb``, ``v_*``), whose W ticks already
+    finish each stage's weight gradients inside the schedule; it is
+    mathematically the post-accumulation update (AdamW is nonlinear in
+    the summed gradient, so per-W-tick application would change the
+    math).  ``m`` is the gradient-mean divisor (number of microbatches);
+    ``opt_state`` is :func:`repro.optim.adamw.adamw_init` of the params.
+    The trajectory matches the phase-separate ``astype(f32)/m ->
+    adamw_update(use_kernel=True)`` path step-count-exact.
+
+    Only the ``"phase"`` executor supports fusion; sequence-chunked
+    specs (``n_seq > 1``) keep the phase-separate optimizer."""
+    if executor is None:
+        executor = os.environ.get(EXECUTOR_ENV, "phase")
+    if executor != "phase":
+        raise ValueError("in-executor optimizer fusion requires the "
+                         f"'phase' executor, got {executor!r}")
+    if spec.n_seq > 1:
+        raise ValueError("in-executor optimizer fusion is not "
+                         "implemented for sequence-chunked specs")
+    return _make_train_grads_phase(spec, mesh, ocfg=ocfg, opt_m=m)
 
 
 def _make_train_grads_legacy(spec: PipelineSpec, mesh):
@@ -1056,8 +1056,14 @@ def _traced_once(fn):
     return wrapped
 
 
-def _make_train_grads_phase(spec: PipelineSpec, mesh):
+def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
+                            opt_m=None):
     """The phase-compiled executor (see :func:`make_train_grads_fn`).
+
+    With ``ocfg``/``opt_m`` set (see :func:`make_train_update_fn`) the
+    AdamW update runs *inside* the shard_map region after the tick scan
+    — no separate optimizer phase — and ``call`` becomes
+    ``(params, opt_state, batch) -> (params, opt_state, metrics)``.
 
     Three structural changes versus the legacy per-tick interpreter:
 
@@ -1118,7 +1124,7 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh):
     Wb = _payload_words(spec)
     counts = {"embed": 0, "chunk": 0, "head": 0}
 
-    def spmd(stage_iota, params, batch):
+    def spmd(stage_iota, params, batch, opt_state=None):
         s_idx = stage_iota[0]
         blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
         flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
@@ -1498,29 +1504,70 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh):
             lambda cr, rw: (tick(cr, rw), None),
             vary(carry_init()), jnp.asarray(stream))
 
-        gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
         gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
         loss = jax.lax.psum(carry["loss"], pp)
         n = jax.lax.psum(carry["nloss"], pp)
         metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
-        return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+        if ocfg is None:
+            gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
+            return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+
+        # ---- in-executor fused optimizer (make_train_update_fn): the
+        # AdamW step runs here, inside the shard_map region, directly on
+        # the stage-local block accumulators — no separate optimizer
+        # phase outside the executor.  The math is identical to the
+        # phase-separate astype(f32)/m -> adamw_update path: the only
+        # cross-stage quantity is the clipping norm, reassembled exactly
+        # via psum of the local block square-sums (per-leaf summation
+        # order is unchanged, so the loss trajectory matches
+        # step-count-exact). ----
+        from repro.optim.adamw import adamw_update, cast_like
+
+        def local_tree(t):
+            return {"blocks": [jax.tree.map(lambda a: a[0], b)
+                               for b in t["blocks"]],
+                    **{k: t[k] for k in t if k != "blocks"}}
+
+        def stack_tree(t):
+            return {"blocks": [jax.tree.map(lambda a: a[None], b)
+                               for b in t["blocks"]],
+                    **{k: t[k] for k in t if k != "blocks"}}
+
+        g = jax.tree.map(lambda a: a.astype(jnp.float32) / opt_m,
+                         {"blocks": carry["gb"], **{k: gs[k] for k in gs}})
+        sq_b = sum(jnp.sum(jnp.square(a))
+                   for a in jax.tree.leaves(g["blocks"]))
+        sq_s = sum(jnp.sum(jnp.square(a)) for a in jax.tree.leaves(
+            {k: g[k] for k in g if k != "blocks"}))
+        gnorm = jnp.sqrt(jax.lax.psum(sq_b, pp) + sq_s + 1e-30)
+        opt_local = {"step": opt_state["step"],
+                     "mu": local_tree(opt_state["mu"]),
+                     "nu": local_tree(opt_state["nu"]),
+                     "master": local_tree(opt_state["master"])}
+        master, new_opt, omet = adamw_update(g, opt_local, ocfg,
+                                             use_kernel=True,
+                                             grad_norm=gnorm)
+        new_params = stack_tree(cast_like(
+            master, {"blocks": blocks, **shared}))
+        new_opt = {"step": new_opt["step"],
+                   "mu": stack_tree(new_opt["mu"]),
+                   "nu": stack_tree(new_opt["nu"]),
+                   "master": stack_tree(new_opt["master"])}
+        metrics = dict(metrics, grad_norm=omet["grad_norm"],
+                       lr=omet["lr"])
+        return new_params, new_opt, metrics
+
+    def param_specs(tree):
+        return {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
+                           tree["blocks"]],
+                **{k: jax.tree.map(lambda _: P(), tree[k])
+                   for k in tree if k != "blocks"}}
 
     def call(params, batch):
-        in_specs = (
-            P(pp),
-            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
-                        params["blocks"]],
-             **{k: jax.tree.map(lambda _: P(), params[k])
-                for k in params if k != "blocks"}},
-            jax.tree.map(lambda _: P(), batch),
-        )
-        out_specs = (
-            {"blocks": [jax.tree.map(lambda _: P(pp), t) for t in
-                        params["blocks"]],
-             **{k: jax.tree.map(lambda _: P(), params[k])
-                for k in params if k != "blocks"}},
-            {"loss": P(), "n_microbatches": P()},
-        )
+        in_specs = (P(pp), param_specs(params),
+                    jax.tree.map(lambda _: P(), batch))
+        out_specs = (param_specs(params),
+                     {"loss": P(), "n_microbatches": P()})
 
         def spmd_entry(stage_iota, params, batch):
             if jax_compat.HAS_VMA:
@@ -1536,9 +1583,33 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh):
                                     manual_axes={pp})(stage_iota, params,
                                                       batch)
 
-    call.trace_counts = counts
-    call.phase_plan = plan
-    return call
+    def call_update(params, opt_state, batch):
+        pspec = param_specs(params)
+        ospec = {"step": P(), "mu": pspec, "nu": pspec, "master": pspec}
+        in_specs = (P(pp), pspec, ospec,
+                    jax.tree.map(lambda _: P(), batch))
+        out_specs = (pspec, ospec,
+                     {"loss": P(), "n_microbatches": P(),
+                      "grad_norm": P(), "lr": P()})
+
+        def spmd_entry(stage_iota, params, opt_state, batch):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch, opt_state)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():
+                return spmd(stage_iota, params, batch, opt_state)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes={pp})(stage_iota, params,
+                                                      opt_state, batch)
+
+    fn = call if ocfg is None else call_update
+    fn.trace_counts = counts
+    fn.phase_plan = plan
+    return fn
 
 
 def _ppermute(x, axis, perm):

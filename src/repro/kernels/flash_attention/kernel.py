@@ -42,9 +42,9 @@ def _mask(qi, ki, *, causal, window, prefix, blk_q, blk_k, q_offset):
     return ok
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
-                *, scale, causal, window, prefix, blk_q, blk_k, kv_blocks,
-                q_offset, kv_len):
+def _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+              *, scale, causal, window, prefix, blk_q, blk_k, kv_blocks,
+              q_offset, kv_len):
     qi, ki = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -81,11 +81,29 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
         lse_ref[0] = m_scr[...] + jnp.log(l)
 
 
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+                **kw):
+    _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+              **kw)
+
+
+def _fwd_kernel_dyn(qoff_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr,
+                    l_scr, acc_scr, **kw):
+    # q_offset rides in SMEM: the block-mask arithmetic in _mask is pure
+    # jnp, so a traced scalar offset composes with the static grid.
+    _fwd_body(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+              q_offset=qoff_ref[0], **kw)
+
+
 def flash_attention_fwd(q, k, v, *, scale=None, causal=True, window=0,
                         prefix=0, q_offset=0, blk_q=128, blk_k=128,
                         interpret=False):
     """q [B, Sq, H, d]; k, v [B, Sk, G, d] (GQA: H % G == 0).
-    Returns (o [B, Sq, H, d], lse [B, H, Sq])."""
+    Returns (o [B, Sq, H, d], lse [B, H, Sq]).
+
+    ``q_offset`` may be a Python int (static) or a traced int scalar
+    (dynamic, e.g. the seqpipe chunk frontier) — the dynamic form is
+    threaded through SMEM."""
     B, Sq, H, d = q.shape
     Sk, G = k.shape[1], k.shape[2]
     rep = H // G
@@ -108,14 +126,22 @@ def flash_attention_fwd(q, k, v, *, scale=None, causal=True, window=0,
         kh = jnp.pad(kh, ((0, 0), (0, Sk_pad - Sk), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, Sk_pad - Sk), (0, 0)))
 
-    kernel = functools.partial(
-        _fwd_kernel, scale=scale, causal=causal, window=window,
-        prefix=prefix, blk_q=blk_q, blk_k=blk_k, kv_blocks=kv_blocks,
-        q_offset=q_offset, kv_len=Sk)
+    static_kw = dict(scale=scale, causal=causal, window=window,
+                     prefix=prefix, blk_q=blk_q, blk_k=blk_k,
+                     kv_blocks=kv_blocks, kv_len=Sk)
+    dynamic = not isinstance(q_offset, int)
+    if dynamic:
+        kernel = functools.partial(_fwd_kernel_dyn, **static_kw)
+        extra_in = [jnp.asarray(q_offset, jnp.int32).reshape(1)]
+        extra_spec = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    else:
+        kernel = functools.partial(_fwd_kernel, q_offset=q_offset,
+                                   **static_kw)
+        extra_in, extra_spec = [], []
     o, lse = pl.pallas_call(
         kernel,
         grid=(B * H, q_blocks, kv_blocks),
-        in_specs=[
+        in_specs=extra_spec + [
             pl.BlockSpec((1, blk_q, d), lambda h, qi, ki: (h, qi, 0)),
             pl.BlockSpec((1, blk_k, d), lambda h, qi, ki: (h, ki, 0)),
             pl.BlockSpec((1, blk_k, d), lambda h, qi, ki: (h, ki, 0)),
@@ -134,7 +160,7 @@ def flash_attention_fwd(q, k, v, *, scale=None, causal=True, window=0,
             pltpu.VMEM((blk_q, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh)
+    )(*extra_in, qh, kh, vh)
     o = o[:, :Sq].reshape(B, H, Sq, d).transpose(0, 2, 1, 3)
     lse = lse[:, :Sq].reshape(B, H, Sq)
     return o, lse

@@ -11,6 +11,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
@@ -43,3 +44,39 @@ def _bwd(causal, window, prefix, q_offset, res, do):
 
 
 flash_attention.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# dynamic q_offset (seqpipe dKV-carry path)
+# ---------------------------------------------------------------------------
+# The chunk frontier ``q_offset`` is a *traced* int scalar inside the
+# executor scan, so it cannot ride in nondiff_argnums (those must be
+# static).  It is a regular primal instead: the forward threads it to the
+# kernel through SMEM, the backward recomputes via the reference path
+# (cotangents flow to the full kv buffer — that is the dKV carry) and
+# returns a float0 zero for the integer offset.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention_dyn(q, k, v, q_offset, causal=True, window=0, prefix=0):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               prefix=prefix, q_offset=q_offset,
+                               interpret=_on_cpu())
+    return o
+
+
+def _dyn_fwd(q, k, v, q_offset, causal, window, prefix):
+    o = flash_attention_dyn(q, k, v, q_offset, causal, window, prefix)
+    return o, (q, k, v, q_offset)
+
+
+def _dyn_bwd(causal, window, prefix, res, do):
+    q, k, v, q_offset = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(
+            q_, k_, v_, causal=causal, window=window, prefix=prefix,
+            q_offset=q_offset)[0], q, k, v)
+    dq, dk, dv = vjp(do)
+    return dq, dk, dv, np.zeros(jnp.shape(q_offset), jax.dtypes.float0)
+
+
+flash_attention_dyn.defvjp(_dyn_fwd, _dyn_bwd)

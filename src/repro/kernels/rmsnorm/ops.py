@@ -1,12 +1,44 @@
+"""jit'd public wrapper with custom VJP.
+
+Forward runs the Pallas kernel (interpret=True on CPU backends).  The
+kernel computes the exact op sequence of ``models.layers.rmsnorm`` —
+fp32 statistics, per-row mean over the last axis — so the fused forward
+is bitwise-identical to the XLA path on CPU.  The backward differentiates
+the jnp reference (same math, so gradients match the XLA twin too).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 
 from repro.kernels.rmsnorm.kernel import rmsnorm_rows
+from repro.kernels.rmsnorm.ref import rmsnorm_rows_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_rows_vjp(x, scale, eps):
+    return rmsnorm_rows(x, scale, eps=eps, interpret=_on_cpu())
+
+
+def _rows_fwd(x, scale, eps):
+    return _rmsnorm_rows_vjp(x, scale, eps), (x, scale)
+
+
+def _rows_bwd(eps, res, dy):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: rmsnorm_rows_ref(x_, s_, eps), x, scale)
+    return vjp(dy)
+
+
+_rmsnorm_rows_vjp.defvjp(_rows_fwd, _rows_bwd)
 
 
 def rmsnorm_fused(x, scale, eps: float = 1e-6):
     shape = x.shape
-    y = rmsnorm_rows(x.reshape(-1, shape[-1]), scale, eps=eps,
-                     interpret=jax.default_backend() == "cpu")
+    y = _rmsnorm_rows_vjp(x.reshape(-1, shape[-1]), scale, eps)
     return y.reshape(shape)

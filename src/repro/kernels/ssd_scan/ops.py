@@ -1,11 +1,61 @@
-"""jit'd wrapper for the SSD chunk-scan kernel (interpret on CPU)."""
+"""jit'd wrapper for the SSD chunk-scan kernel (interpret on CPU).
+
+Forward runs the Pallas kernel; sequences that are not a chunk multiple
+are zero-padded (dt=0 rows are a state-preserving no-op, exactly as in
+``models.mamba._ssd_chunked``).  The backward differentiates the jnp
+chunked decomposition — the same math the kernel implements — via
+``jax.vjp``.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.kernel import ssd_scan
 
 
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to_chunk(x, Bc, Cc, dt, chunk):
+    S = x.shape[1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        spad = lambda a: jnp.pad(  # noqa: E731
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, Bc, Cc, dt = spad(x), spad(Bc), spad(Cc), spad(dt)
+    return x, Bc, Cc, dt, S
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_vjp(x, Bc, Cc, dt, A, chunk):
+    xp, Bp, Cp, dtp, S = _pad_to_chunk(x, Bc, Cc, dt, chunk)
+    y, h = ssd_scan(xp, Bp, Cp, dtp, A, chunk=chunk, interpret=_on_cpu())
+    return y[:, :S], h
+
+
+def _ssd_fwd(x, Bc, Cc, dt, A, chunk):
+    return _ssd_vjp(x, Bc, Cc, dt, A, chunk), (x, Bc, Cc, dt, A)
+
+
+def _ssd_bwd(chunk, res, cot):
+    from repro.models.mamba import _ssd_chunked
+    x, Bc, Cc, dt, A = res
+    _, vjp = jax.vjp(
+        lambda x_, b_, c_, dt_, a_: _ssd_chunked(x_, b_, c_, dt_, a_,
+                                                 chunk, None), x, Bc, Cc,
+        dt, A)
+    return vjp(cot)
+
+
+_ssd_vjp.defvjp(_ssd_fwd, _ssd_bwd)
+
+
 def ssd(x, Bc, Cc, dt, A, *, chunk: int = 64):
-    return ssd_scan(x, Bc, Cc, dt, A, chunk=chunk,
-                    interpret=jax.default_backend() == "cpu")
+    """x [B,S,H,P]; Bc,Cc [B,S,N]; dt [B,S,H]; A [H].
+    Returns (y [B,S,H,P] fp32, h_final [B,H,P,N] fp32)."""
+    return _ssd_vjp(x, Bc, Cc, dt, A, chunk)

@@ -332,9 +332,12 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     default, or "legacy" — see
     :func:`repro.core.pipeline_runtime.make_train_grads_fn`).
     """
-    from repro.core.pipeline_runtime import (init_pipeline_params,
+    import os
+    from repro.core.pipeline_runtime import (EXECUTOR_ENV,
+                                             init_pipeline_params,
                                              make_pipeline_spec,
-                                             make_train_grads_fn)
+                                             make_train_grads_fn,
+                                             make_train_update_fn)
     from repro.optim import merge_deep_shallow, split_deep_shallow
     pp_axis = rules["pp"]
     P_ = mesh.shape[pp_axis]
@@ -349,7 +352,8 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     spec = make_pipeline_spec(
         cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
         seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis,
-        n_seq=plan.seq_chunks, **plan_schedule_kwargs(plan))
+        n_seq=plan.seq_chunks, kernels=plan.kernels,
+        **plan_schedule_kwargs(plan))
     if extras is not None:
         extras["spec"] = spec
     offload = plan.offload.enabled and plan.offload.num_offload_chunks > 0
@@ -415,6 +419,30 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
         structs["frame_embeds"] = jax.ShapeDtypeStruct(s, jnp.float32)
         b_shard["frame_embeds"] = NamedSharding(
             mesh, sanitize_spec(P(None, _r(rules, "dp")), s, mesh))
+
+    # In-executor fused optimizer: split-backward schedules under the
+    # fused compute backend run the AdamW step inside the pipeline
+    # executor (kernels/fused_adamw after the tick scan) — no separate
+    # optimizer phase.  Offload and sequence-chunked specs keep the
+    # phase-separate update (their optimizer is structurally split).
+    exe = executor if executor is not None else \
+        os.environ.get(EXECUTOR_ENV, "phase")
+    fuse_opt = (plan.kernels == "fused" and spec.table is not None
+                and spec.table.has_w and not offload
+                and plan.seq_chunks == 1 and exe == "phase")
+    if fuse_opt:
+        update_fn = make_train_update_fn(spec, mesh, ocfg, m,
+                                         executor=exe)
+
+        def step(params, opt_state, batch):
+            with shard_env(mesh, rules):
+                return update_fn(params, opt_state, batch)
+
+        metric_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 {"loss": 0, "n_microbatches": 0,
+                                  "grad_norm": 0, "lr": 0})
+        return (step, (params_s, opt_s, structs),
+                (p_shard, o_shard, b_shard), (p_shard, o_shard, metric_sh))
 
     grads_fn = make_train_grads_fn(spec, mesh, executor=executor)
 

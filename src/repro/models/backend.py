@@ -1,0 +1,179 @@
+"""Unified compute-backend layer: the ``ChunkBody`` seam.
+
+Every consumer of the transformer chunk computation — ``models.LM``,
+both executors in :mod:`repro.core.pipeline_runtime`, and the
+sequence-chunked executor in :mod:`repro.seqpipe.runtime` — runs the
+same per-stage body through this module.  The body is parameterized by a
+:class:`ComputeBackend` selected with the ``kernels=`` flag:
+
+- ``kernels="xla"`` (default): today's pure-jnp ops, fully lowered by
+  XLA.
+- ``kernels="fused"``: the Pallas kernel library — ``rmsnorm_fused``
+  (bitwise-identical forward, same-math VJP), ``flash_attention``
+  (never materializes the [S, S] score matrix; its backward extends to
+  the seqpipe dKV-carry path via a traced ``q_offset`` primal), and
+  ``ssd_scan`` for the Mamba-2/Jamba block.
+
+Equivalence discipline (tests/helpers/split_fused_check.py): every
+fused path must match its XLA twin bitwise where the float summation
+order is preserved (rmsnorm, fused AdamW) and within a pinned tolerance
+where it is not (flash attention's online softmax, the SSD chunk
+scan).
+
+Fused-attention applicability: the flash kernel takes *static* mask
+parameters (causal/window/prefix), while pipeline stages receive the
+sliding window as traced per-layer data.  When ``cfg.sliding_window ==
+0`` every layer's true window is statically zero, so the traced flag is
+dropped and the kernel path engages; configs with a real sliding window
+fall back to the masked dense path (documented in ARCHITECTURE.md).
+Cross-attention and single-token decode always use the XLA path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class ComputeBackend:
+    """One implementation of the chunk-body compute ops.
+
+    Methods are signature-compatible with the jnp reference ops so call
+    sites select the backend, never the kernel."""
+    name: str = "xla"
+    fuse_rmsnorm: bool = False
+    fuse_attention: bool = False
+    fuse_ssd: bool = False
+
+    # -- rmsnorm ----------------------------------------------------------
+    def rmsnorm(self, params, x, eps: float = 1e-6):
+        if not self.fuse_rmsnorm:
+            return L.rmsnorm(params, x, eps)
+        from repro.kernels.rmsnorm.ops import rmsnorm_fused
+        return rmsnorm_fused(x, params["scale"], eps)
+
+    # -- attention (train / seqpipe chunk-prefill) ------------------------
+    def flash(self, q, k, v, *, causal: bool, window: int, prefix: int,
+              q_offset=0):
+        """q [B,S,H,d]; k,v [B,T,G,d].  ``q_offset`` static int or traced
+        scalar (the seqpipe chunk frontier)."""
+        from repro.kernels.flash_attention.ops import (flash_attention,
+                                                       flash_attention_dyn)
+        if isinstance(q_offset, int):
+            return flash_attention(q, k, v, causal, window, prefix,
+                                   q_offset)
+        return flash_attention_dyn(q, k, v, q_offset, causal, window,
+                                   prefix)
+
+    # -- SSD chunk scan (mamba2 / jamba) ----------------------------------
+    def ssd(self, x, Bc, Cc, dt, A, *, chunk: int, h0=None):
+        if self.fuse_ssd and h0 is None:
+            from repro.kernels.ssd_scan.ops import ssd as ssd_fused
+            return ssd_fused(x, Bc, Cc, dt, A, chunk=chunk)
+        from repro.models.mamba import _ssd_chunked
+        return _ssd_chunked(x, Bc, Cc, dt, A, chunk, h0)
+
+
+XLA = ComputeBackend("xla")
+FUSED = ComputeBackend("fused", fuse_rmsnorm=True, fuse_attention=True,
+                       fuse_ssd=True)
+
+_REGISTRY = {"xla": XLA, "fused": FUSED}
+
+
+def get_backend(kernels=None) -> ComputeBackend:
+    """Resolve a ``kernels=`` flag ("xla" | "fused" | ComputeBackend |
+    None => xla) to a backend instance."""
+    if kernels is None:
+        return XLA
+    if isinstance(kernels, ComputeBackend):
+        return kernels
+    try:
+        return _REGISTRY[kernels]
+    except KeyError:
+        raise ValueError(f"unknown kernels flag {kernels!r}: expected "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+# ---------------------------------------------------------------------------
+# the ChunkBody seam
+# ---------------------------------------------------------------------------
+
+def chunk_fwd(spec, block_params_c, flags_c, payload, *, kv=None,
+              pos0=None):
+    """Run one stage's layer chunk over a payload — the single chunk
+    body shared by both core executors and the seq-chunked executor.
+
+    ``block_params_c``: leaves [M, ...]; ``flags_c``: {window, gate}
+    [M, period].  Whole-sequence mode (``kv=None``) returns the updated
+    payload; sequence-chunked mode (``kv`` = {"k","v"} leaves
+    [M, period, B, S, G, hd], ``pos0`` = traced chunk offset) threads
+    the KV-carry cache through every layer and returns
+    ``(payload, kv_out)``."""
+    from repro.models.transformer import _apply_layer
+    bk = get_backend(getattr(spec, "kernels", None))
+    cfg = spec.cfg
+    x = payload["x"]
+    aux = payload["aux"]
+    Bz, Sc, _ = x.shape
+    base = 0 if kv is None else pos0
+    positions = jnp.broadcast_to(base + jnp.arange(Sc)[None], (Bz, Sc))
+    enc = payload.get("enc")
+
+    def body(carry, xs):
+        x, aux = carry
+        if kv is None:
+            ptrees, fl = xs
+            kvm = None
+        else:
+            ptrees, fl, kvm = xs
+        nk, nv = [], []
+        for j in range(spec.layout.period):
+            cache = None if kvm is None else {"k": kvm["k"][j],
+                                              "v": kvm["v"][j]}
+            x, nc, aux = _apply_layer(
+                ptrees[j], x, positions, cfg, j, cache=cache,
+                cache_pos=base, enc_out=enc, prefix_len=spec.prefix,
+                aux_sum=aux, window_override=fl["window"][j],
+                gate=fl["gate"][j], backend=bk)
+            if kvm is not None:
+                nk.append(nc["k"])
+                nv.append(nc["v"])
+        if kvm is None:
+            return (x, aux), None
+        return (x, aux), {"k": jnp.stack(nk), "v": jnp.stack(nv)}
+
+    # FlashAttention semantics under vjp: keep projection outputs, always
+    # recompute attention internals (the Pallas kernel makes this free on
+    # TPU; without it the B-task would resurrect [S,S] scores per layer).
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        prevent_cse=False)
+    from repro import jax_compat
+    init = jax.tree.map(lambda a: jax_compat.to_varying(a, spec.pp_axis),
+                        (x, aux[0]))
+    xs = (block_params_c, flags_c) if kv is None \
+        else (block_params_c, flags_c, kv)
+    (x, aux2), kv_out = jax.lax.scan(body, init, xs)
+    out = dict(payload)
+    out["x"] = x
+    out["aux"] = jnp.reshape(aux2, (1,))
+    return out if kv is None else (out, kv_out)
+
+
+def head_loss(spec, params, payload, labels, loss_mask, denom=None):
+    """Final-norm + unembed + CE tail — the one copy shared by the core
+    executors (prefix slice, local mean) and the seq executor (partial
+    loss over a fixed whole-sequence ``denom``)."""
+    bk = get_backend(getattr(spec, "kernels", None))
+    cfg = spec.cfg
+    x = bk.rmsnorm(params["final_norm"], payload["x"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    if spec.prefix:
+        logits = logits[:, spec.prefix:]
+    ce = L.softmax_xent(logits, labels, loss_mask, denom=denom)
+    return ce + spec.aux_weight * payload["aux"][0]

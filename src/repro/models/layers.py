@@ -267,10 +267,17 @@ def attention(params, x, positions, *, num_heads: int, num_kv: int, hd: int,
               prefix_len: int = 0, cache: Optional[dict] = None,
               cache_pos=None, kv_x=None, kv_direct=None,
               use_rope: bool = True, return_kv: bool = False,
-              dense_threshold: int = 8192) -> Tuple[jnp.ndarray, Optional[dict]]:
+              dense_threshold: int = 8192,
+              backend=None) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Unified attention: train / prefill (cache write) / decode (cache
     read+write) / cross-attention (kv_x = encoder output, or kv_direct =
-    precomputed (k, v) heads)."""
+    precomputed (k, v) heads).
+
+    ``backend``: optional :class:`repro.models.backend.ComputeBackend`.
+    A fused backend routes the self-attention score path (train, and
+    cache-prefill with a traced offset) through the flash kernel when the
+    mask parameters are static ints; decode and cross-attention stay on
+    the XLA path."""
     B, S, _ = x.shape
     scale = 1.0 / math.sqrt(hd)
     q = x @ params["wq"]
@@ -320,7 +327,17 @@ def attention(params, x, positions, *, num_heads: int, num_kv: int, hd: int,
         kv_len = Skv
 
     cross = kv_x is not None or kv_direct is not None
-    if S == 1 and cache is not None:
+    fuse = (backend is not None and backend.fuse_attention and not cross
+            and isinstance(window, int) and S > 1
+            and (cache is None or causal))
+    if fuse:
+        # self-attention over the full kv (train: kv_len == S; seqpipe
+        # chunk-prefill: the cache buffer at traced offset cache_pos —
+        # causal masking zeroes everything past the frontier)
+        out = backend.flash(q, k, v, causal=causal, window=window,
+                            prefix=prefix_len,
+                            q_offset=0 if cache is None else cache_pos)
+    elif S == 1 and cache is not None:
         # decode: one query over the whole cache (flash-decode shape).
         kv_pos = jnp.arange(kv_len)
         q_pos = positions[:, -1:]                     # [B, 1]

@@ -123,8 +123,14 @@ def _ssd_chunked(xh, Bc, Cc, dt, A, chunk: int, h0=None):
 
 
 def mamba_block(params, x, cfg: SSMConfig, *, cache: Optional[dict] = None,
-                norm_eps: float = 1e-6) -> Tuple[jnp.ndarray, Optional[dict]]:
-    """x [B,S,d] -> (y [B,S,d], new_cache)."""
+                norm_eps: float = 1e-6,
+                backend=None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x [B,S,d] -> (y [B,S,d], new_cache).
+
+    ``backend``: compute backend (repro.models.backend); a fused backend
+    routes the chunk scan through the Pallas ``ssd_scan`` kernel (train
+    path, no carried state) and the gated norm through the fused
+    rmsnorm."""
     B, S, d = x.shape
     d_in = cfg.expand * d
     H = d_in // cfg.head_dim
@@ -184,11 +190,17 @@ def mamba_block(params, x, cfg: SSMConfig, *, cache: Optional[dict] = None,
         h_final = h_new
     else:
         h0 = cache["h"] if cache is not None else None
-        y, h_final = _ssd_chunked(xh, Bc_c, Cc_c, dt, A, cfg.chunk_len, h0)
+        if backend is not None:
+            y, h_final = backend.ssd(xh, Bc_c, Cc_c, dt, A,
+                                     chunk=cfg.chunk_len, h0=h0)
+        else:
+            y, h_final = _ssd_chunked(xh, Bc_c, Cc_c, dt, A, cfg.chunk_len,
+                                      h0)
 
     y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(B, S, d_in).astype(x.dtype)
-    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), norm_eps)
+    nrm = rmsnorm if backend is None else backend.rmsnorm
+    y = nrm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), norm_eps)
     out = y @ params["wo"]
 
     new_cache = None

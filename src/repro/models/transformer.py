@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RecomputeConfig
+from repro.models import backend as B
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MOE
@@ -84,18 +85,26 @@ def _init_cache_layer(cfg: ModelConfig, idx: int, batch: int, seq: int,
 
 def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
                  cache=None, cache_pos=0, enc_out=None, prefix_len=0,
-                 aux_sum=0.0, window_override=None, gate=None):
+                 aux_sum=0.0, window_override=None, gate=None,
+                 backend=None):
     """One decoder layer. Returns (x, new_cache, aux_sum).
 
     ``window_override``: traced per-layer sliding window (pipeline blocks
     pass local/global pattern as data).  ``gate``: traced 0/1 multiplier on
-    the residual branches (0 = null/padding layer: passthrough)."""
+    the residual branches (0 = null/padding layer: passthrough).
+    ``backend``: compute backend (repro.models.backend); None = XLA."""
+    bk = backend if backend is not None else B.XLA
     kind = cfg.layer_kind(idx)
     if window_override is not None:
         window = window_override
+        if bk.fuse_attention and cfg.sliding_window == 0:
+            # every layer's true window is statically 0, so the traced
+            # per-layer flag carries no information — drop it to keep the
+            # flash kernel's mask static
+            window = 0
     else:
         window = 0 if cfg.layer_is_global(idx) else cfg.sliding_window
-    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    h = bk.rmsnorm(p["norm1"], x, cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
     if kind == "attn":
         attn_cache = None
@@ -105,7 +114,8 @@ def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
             p["attn"], h, positions, num_heads=cfg.num_heads,
             num_kv=cfg.num_kv_heads, hd=cfg.resolved_head_dim,
             rope_theta=cfg.rope_theta, causal=True, window=window,
-            prefix_len=prefix_len, cache=attn_cache, cache_pos=cache_pos)
+            prefix_len=prefix_len, cache=attn_cache, cache_pos=cache_pos,
+            backend=bk)
         if nc is not None:
             new_cache.update(nc)
     else:
@@ -114,7 +124,7 @@ def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
             mcache = {k: cache[k] for k in
                       ("conv_x", "conv_B", "conv_C", "h")}
         y, nc = M.mamba_block(p["mamba"], h, cfg.ssm, cache=mcache,
-                              norm_eps=cfg.norm_eps)
+                              norm_eps=cfg.norm_eps, backend=bk)
         if nc is not None:
             new_cache.update(nc)
     if gate is not None:
@@ -122,7 +132,7 @@ def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
     x = x + y
 
     if "cross" in p:
-        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        h = bk.rmsnorm(p["norm_x"], x, cfg.norm_eps)
         if enc_out is not None:
             # train / prefill: compute cross kv from the encoder output
             y, xkv = L.attention(
@@ -144,7 +154,7 @@ def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
             x = x + (y * gate.astype(y.dtype) if gate is not None else y)
 
     if "moe" in p:
-        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = bk.rmsnorm(p["norm2"], x, cfg.norm_eps)
         y, aux = MOE.moe_ffn(p["moe"], h, cfg.moe, cfg.act)
         if gate is not None:
             y = y * gate.astype(y.dtype)
@@ -154,7 +164,7 @@ def _apply_layer(p, x, positions, cfg: ModelConfig, idx: int, *,
             aux_sum = aux_sum + aux["lb_loss"]
         x = x + y
     elif "mlp" in p:
-        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = bk.rmsnorm(p["norm2"], x, cfg.norm_eps)
         y = L.mlp(p["mlp"], h, cfg.act)
         if gate is not None:
             y = y * gate.astype(y.dtype)

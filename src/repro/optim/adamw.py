@@ -7,8 +7,8 @@ State pytree:
 
 The device-side elementwise update is pluggable: the Pallas
 ``fused_adamw`` kernel (kernels/fused_adamw) implements the same math for
-TPU; ``repro.kernels.fused_adamw.ops.adamw_update_flat`` is selected with
-``use_kernel=True``.
+TPU; ``repro.kernels.fused_adamw.ops.adamw_update_leaf`` is selected with
+``use_kernel=True`` (or any compatible callable via ``update_fn=``).
 """
 from __future__ import annotations
 
@@ -44,12 +44,25 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def adamw_update(grads, state, cfg: OptimizerConfig, *,
-                 update_fn: Optional[Callable] = None):
+                 update_fn: Optional[Callable] = None,
+                 use_kernel: bool = False,
+                 grad_norm=None):
     """Returns (new_params_in_model_dtype_tree_of(master), new_state,
-    metrics).  ``grads`` may be any float dtype; math is fp32."""
+    metrics).  ``grads`` may be any float dtype; math is fp32.
+
+    ``use_kernel=True`` selects the fused Pallas elementwise update
+    (``repro.kernels.fused_adamw.ops.adamw_update_leaf``); ``update_fn``
+    overrides it with any callable of the same signature.  ``grad_norm``
+    supplies a precomputed global norm — callers running inside a
+    ``shard_map`` region (the in-executor fused optimizer) pass the
+    psum-reduced norm because ``global_norm`` over the local tree would
+    miss the other pipeline stages' block gradients."""
+    if update_fn is None and use_kernel:
+        from repro.kernels.fused_adamw.ops import adamw_update_leaf
+        update_fn = adamw_update_leaf
     step = state["step"] + 1
     lr = lr_at(cfg, step)
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads) if grad_norm is None else grad_norm
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
         if cfg.grad_clip > 0 else jnp.asarray(1.0)
     b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps

@@ -51,9 +51,10 @@ from repro import jax_compat
 from repro.core.pipeline_runtime import PipelineSpec, _embed_tokens
 from repro.core.tasktable import (SEND_BWD, SEND_FWD, SEND_HOPB,
                                   SEND_HOPF)
+from repro.models import backend as compute_backend
 from repro.models import layers as L
+from repro.models.backend import head_loss
 from repro.models.sharding import shard
-from repro.models.transformer import _apply_layer
 
 
 def _chunk_fwd_seq(spec: PipelineSpec, block_params_c, flags_c, payload,
@@ -65,40 +66,8 @@ def _chunk_fwd_seq(spec: PipelineSpec, block_params_c, flags_c, payload,
     ``pos0``: traced absolute offset of the chunk's first position.
     Returns (payload_out, kv_out) with the chunk's K/V written at
     [pos0, pos0 + Sc)."""
-    cfg = spec.cfg
-    x = payload["x"]
-    aux = payload["aux"]
-    Bz, Sc, _ = x.shape
-    positions = jnp.broadcast_to(pos0 + jnp.arange(Sc)[None], (Bz, Sc))
-
-    def body(carry, xs):
-        x, aux = carry
-        ptrees, fl, kvm = xs
-        nk, nv = [], []
-        for j in range(spec.layout.period):
-            cache = {"k": kvm["k"][j], "v": kvm["v"][j]}
-            x, nc, aux = _apply_layer(
-                ptrees[j], x, positions, cfg, j, cache=cache,
-                cache_pos=pos0, aux_sum=aux,
-                window_override=fl["window"][j], gate=fl["gate"][j])
-            nk.append(nc["k"])
-            nv.append(nc["v"])
-        return (x, aux), {"k": jnp.stack(nk), "v": jnp.stack(nv)}
-
-    # same FlashAttention-aware policy as the unchunked executor: keep
-    # projection outputs, recompute attention internals in the vjp
-    body = jax.checkpoint(
-        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-        prevent_cse=False)
-    vary = lambda t: jax.tree.map(  # noqa: E731
-        lambda a: jax_compat.to_varying(a, spec.pp_axis), t)
-    init = vary((x, aux[0]))
-    (x, aux2), kv_out = jax.lax.scan(body, init,
-                                     (block_params_c, flags_c, kv))
-    out = dict(payload)
-    out["x"] = x
-    out["aux"] = jnp.reshape(aux2, (1,))
-    return out, kv_out
+    return compute_backend.chunk_fwd(spec, block_params_c, flags_c,
+                                     payload, kv=kv, pos0=pos0)
 
 
 def make_seq_train_grads_fn(spec: PipelineSpec, mesh,
@@ -294,11 +263,7 @@ def _make_seq_train_grads_legacy(spec: PipelineSpec, mesh):
             def last_fn(bp, sp, pay, kvp):
                 out, kv_out = _chunk_fwd_seq(spec, bp, flags_c, pay, kvp,
                                              pos0)
-                x = L.rmsnorm(sp["final_norm"], out["x"], cfg.norm_eps)
-                logits = L.unembed(sp["embed"], x)
-                ce = L.softmax_xent(logits, labels, mask,
-                                    denom=denom)
-                ce = ce + spec.aux_weight * out["aux"][0]
+                ce = head_loss(spec, sp, out, labels, mask, denom=denom)
                 return to_varying(ce), vary(kv_out)
 
             def wr(buf, val, slot):
@@ -351,11 +316,8 @@ def _make_seq_train_grads_legacy(spec: PipelineSpec, mesh):
             def br_fwd_last(carry):
                 out, kv_out = fwd_fn(blocks_c, shared, vary(dict(x_in)),
                                      vary(dict(kv_in)))
-                x = L.rmsnorm(shared["final_norm"], out["x"], cfg.norm_eps)
-                logits = L.unembed(shared["embed"], x)
-                ce = L.softmax_xent(logits, labels, mask,
-                                    denom=denom)
-                ce = ce + spec.aux_weight * out["aux"][0]
+                ce = head_loss(spec, shared, out, labels, mask,
+                               denom=denom)
                 carry = wr_kv(wr_act(carry, x_in), kv_out)
                 return dict(carry, loss=carry["loss"] + ce,
                             nloss=carry["nloss"] + 1.0 / ns), zero_pay
@@ -575,11 +537,9 @@ def _make_seq_train_grads_phase(spec: PipelineSpec, mesh):
 
         def head_core(pay_out, shared_p, labels, mask, denom):
             counts["head"] += 1
-            x = L.rmsnorm(shared_p["final_norm"], pay_out["x"],
-                          cfg.norm_eps)
-            logits = L.unembed(shared_p["embed"], x)
-            ce = L.softmax_xent(logits, labels, mask, denom=denom)
-            return to_varying(ce + spec.aux_weight * pay_out["aux"][0])
+            ce = head_loss(spec, shared_p, pay_out, labels, mask,
+                           denom=denom)
+            return to_varying(ce)
 
         jchunk = _traced_once(chunk_core)
         jembed = _traced_once(embed_core)

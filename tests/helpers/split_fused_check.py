@@ -1,7 +1,7 @@
 """Subprocess helper: pairwise gradient-equivalence checks between two
 pipeline schedules on the same parameters and batch.
 
-Pairs:
+Cross-schedule pairs (same ``kernels="xla"`` backend both sides):
     zb      1f1b (fused backward) vs zb_h1 (B = input-grad + residual
             stash, W = deferred weight-grad); tolerance 1e-5.
     recomp  chronos (no recompute) vs chronos_recomp rho=1 (explicit R
@@ -24,7 +24,33 @@ Pairs:
             network; gradients are remapped back before comparing.
             Same-math-different-split tolerance as the zb pair (1e-5).
 
-Usage: python split_fused_check.py [--pair zb|recomp|seq|vshape] [P] [m]
+Cross-backend pairs (same schedule, ``kernels="xla"`` vs ``"fused"`` —
+the repro.models.backend seam dispatching the Pallas kernel library,
+interpret=True on CPU).  The fused rmsnorm forward is bitwise; flash
+attention and the SSD kernel change only the softmax / chunk-dot
+reduction order, so forwards agree to a few ulps and gradients to the
+same same-math-different-summation tolerances as above:
+    fused_chronos  chronos v=2        tolerance 1e-4
+    fused_zb       zb_h1   v=1        tolerance 1e-4
+    fused_vmin     v_min   v=2        tolerance 1e-4
+    fused_seq      chronos_seq n_seq=2 (+ loss mask; exercises the
+                   dynamic-q_offset flash path)      tolerance 1e-4
+    fused_mamba    chronos v=2 on the mamba2-2.7b reduced config
+                   (SSD chunk-scan kernel, S=17 not a chunk multiple
+                   so the dt=0 zero-padding path runs)  tolerance 1e-4
+
+Optimizer-fusion pair:
+    opt     zb_h1 with kernels="fused": N steps of the in-executor
+            fused AdamW (make_train_update_fn — update inside the
+            shard_map region after the tick scan) vs the phase-separate
+            reference (make_train_grads_fn -> astype(f32)/m ->
+            adamw_update(use_kernel=True)).  Same step count, losses
+            and final parameters compared per step; the only
+            reassembled quantity is the clipping norm (psum of local
+            square-sums), so the trajectory matches to float-summation
+            tolerance 1e-5.
+
+Usage: python split_fused_check.py [--pair NAME] [P] [m]
 Exits 0 when max |g_a - g_b| <= tol; prints MAXERR=... for the parent
 test to parse.
 """
@@ -50,9 +76,60 @@ from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
 from repro.jax_compat import make_mesh  # noqa: E402
 from repro.models import shard_env  # noqa: E402
 
-cfg = get_reduced("tinyllama-1.1b")
 mbB, S = 2, 17
 mesh = make_mesh((P_,), ("pp",))
+
+FUSED_PAIRS = {
+    "fused_chronos": dict(schedule="chronos", v=2),
+    "fused_zb": dict(schedule="zb_h1", v=1),
+    "fused_vmin": dict(schedule="v_min", v=2),
+    "fused_seq": dict(schedule="chronos_seq", v=2, n_seq=2, mask=True),
+    "fused_mamba": dict(schedule="chronos", v=2, arch="mamba2-2.7b"),
+}
+
+cfg = get_reduced(FUSED_PAIRS.get(pair, {}).get("arch", "tinyllama-1.1b"))
+
+if pair == "opt":
+    # ---- in-executor fused AdamW vs phase-separate optimizer ----
+    from repro.configs.base import OptimizerConfig  # noqa: E402
+    from repro.core.pipeline_runtime import make_train_update_fn  # noqa
+    from repro.optim import (adamw_init, adamw_update,  # noqa: E402
+                             cast_like)
+
+    nsteps = 3
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    spec = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
+                              seq_len=S, schedule="zb_h1",
+                              kernels="fused")
+    assert spec.table.has_w
+    params, _ = init_pipeline_params(jax.random.key(0), cfg, spec.layout)
+    grads_fn = jax.jit(make_train_grads_fn(spec, mesh))
+    update_fn = jax.jit(make_train_update_fn(spec, mesh, ocfg, m))
+    pa, sa = params, adamw_init(params)
+    pb, sb = params, adamw_init(params)
+    errs, la, lb = [], 0.0, 0.0
+    with shard_env(mesh, {}):
+        for t in range(nsteps):
+            tokens = jax.random.randint(
+                jax.random.fold_in(jax.random.key(1), t), (m, mbB, S), 0,
+                cfg.vocab_size)
+            batch = {"tokens": tokens}
+            g, met_a = grads_fn(pa, batch)
+            g = jax.tree.map(lambda a: a.astype(jnp.float32) / m, g)
+            master, sa, _ = adamw_update(g, sa, ocfg, use_kernel=True)
+            pa = cast_like(master, pa)
+            pb, sb, met_b = update_fn(pb, sb, batch)
+            la, lb = float(met_a["loss"]), float(met_b["loss"])
+            errs.append(abs(la - lb))
+    assert int(sa["step"]) == nsteps and int(sb["step"]) == nsteps, \
+        "step-count mismatch between fused and phase-separate optimizer"
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        errs.append(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))))
+    maxerr = max(errs)
+    print(f"MAXERR={maxerr:.3e} pair={pair} loss_a={la:.6f} "
+          f"loss_b={lb:.6f}")
+    sys.exit(0 if maxerr <= 1e-5 else 1)
 
 if pair == "zb":
     spec_a = make_pipeline_spec(cfg, P=P_, v=1, m=m, microbatch=mbB,
@@ -84,6 +161,17 @@ elif pair == "vshape":
                                 seq_len=S, schedule="v_min")
     assert spec_b.table.placement_name == "vshape" and spec_b.table.has_w
     tol = 1e-5
+elif pair in FUSED_PAIRS:
+    kw = FUSED_PAIRS[pair]
+    extra = {"n_seq": kw["n_seq"]} if "n_seq" in kw else {}
+    spec_a = make_pipeline_spec(cfg, P=P_, v=kw["v"], m=m, microbatch=mbB,
+                                seq_len=S, schedule=kw["schedule"],
+                                kernels="xla", **extra)
+    spec_b = make_pipeline_spec(cfg, P=P_, v=kw["v"], m=m, microbatch=mbB,
+                                seq_len=S, schedule=kw["schedule"],
+                                kernels="fused", **extra)
+    assert spec_a.kernels == "xla" and spec_b.kernels == "fused"
+    tol = 1e-4
 else:
     raise SystemExit(f"unknown pair {pair!r}")
 
@@ -98,7 +186,7 @@ if pair == "vshape":
 tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                             cfg.vocab_size)
 batch = {"tokens": tokens}
-if pair == "seq":
+if pair == "seq" or FUSED_PAIRS.get(pair, {}).get("mask"):
     # also exercise the masked-loss path: the chunked executor must
     # normalize by the whole-sequence mask count, not the chunk's
     batch["loss_mask"] = (jax.random.uniform(
