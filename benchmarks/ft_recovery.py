@@ -1,0 +1,121 @@
+"""Elastic-recovery benchmark: phase timings for the fault drill.
+
+Runs the deterministic recovery drill (``repro.ft.elastic_pipeline``
+driven by ``repro.ft.inject``) on forced-host devices: an async
+checkpoint-writer crash, a device loss at mid-run (detect -> re-plan at
+P-1 -> restore the topology-independent checkpoint -> live block
+migration -> resume) and a device rejoin (preempt-yield -> warm
+scale-up back to P).  Records, per recovery, the five phases the paper's
+elastic story prices:
+
+- **detect_s** — fault raise -> driver caught it,
+- **replan_s** — mesh re-solve + new StageLayout/schedule build,
+- **restore_s** — checkpoint read under the old layout,
+- **remap_s** — ``remap_blocks_elastic`` + durable re-save,
+- **resume_s** — restart -> first completed step (jit dominates on CPU).
+
+The full run (``P=4``, 12 steps) also replays an uninterrupted baseline
+and reports the max per-step loss deviation (measured 0.0: the
+migration is bitwise-exact on CPU); it writes ``BENCH_ft_recovery.json``
+at the repo root.  ``--check`` is the CI smoke (``P=2``, 6 steps, no
+baseline) and writes ``BENCH_ft_recovery_check.json`` so the committed
+full record is never clobbered — ``scripts/ci.sh`` runs it every PR.
+
+Must run standalone: the virtual devices require
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax import.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import tempfile
+import time
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--check", action="store_true",
+                help="CI smoke: P=2, 6 steps, no baseline replay")
+ap.add_argument("--devices", type=int, default=0)
+ap.add_argument("--steps", type=int, default=0)
+args = ap.parse_args()
+P = args.devices or (2 if args.check else 4)
+NSTEPS = args.steps or (6 if args.check else 12)
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={P}"
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from benchmarks.run import write_json  # noqa: E402
+from repro.configs import (OptimizerConfig, ParallelPlan,  # noqa: E402
+                           ShapeConfig, TrainConfig, get_reduced)
+from repro.ft.elastic_pipeline import train_elastic  # noqa: E402
+from repro.ft.inject import (CheckpointCrash, DeviceJoin,  # noqa: E402
+                             DeviceLoss)
+
+FAIL_STEP = max(NSTEPS // 2 + 1, 2)
+JOIN_STEP = min(FAIL_STEP + 2, NSTEPS - 1)
+CKPT_EVERY = 3
+
+
+def build_tc(ckpt_dir):
+    cfg = dataclasses.replace(get_reduced("tinyllama-1.1b"),
+                              num_layers=2)
+    return TrainConfig(
+        model=cfg,
+        shape=ShapeConfig("smoke", seq_len=18, global_batch=8,
+                          kind="train"),
+        plan=ParallelPlan(pp_axis="pp", schedule="chronos", num_chunks=2,
+                          microbatch_size=2),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                  total_steps=NSTEPS,
+                                  schedule="constant"),
+        log_every=1000, checkpoint_every=CKPT_EVERY,
+        checkpoint_dir=ckpt_dir, keep_checkpoints=2)
+
+
+def main():
+    quiet = lambda *_: None  # noqa: E731
+    faults = [CheckpointCrash(step=CKPT_EVERY, at="rename"),
+              DeviceLoss(step=FAIL_STEP, device=1),
+              DeviceJoin(step=JOIN_STEP, device=1)]
+    maxerr = None
+    with tempfile.TemporaryDirectory() as d_ft:
+        t0 = time.perf_counter()
+        ft = train_elastic(build_tc(d_ft), n_devices=P, faults=faults,
+                           steps=NSTEPS, log=quiet)
+        wall = time.perf_counter() - t0
+    assert set(ft["loss_by_step"]) == set(range(NSTEPS)), \
+        f"not step-count-exact: {sorted(ft['loss_by_step'])}"
+    assert [r.kind for r in ft["recoveries"]] == \
+        ["device_loss", "scale_up"], ft["recoveries"]
+    if not args.check:
+        with tempfile.TemporaryDirectory() as d_base:
+            base = train_elastic(build_tc(d_base), n_devices=P,
+                                 faults=(), steps=NSTEPS, log=quiet)
+        maxerr = max(abs(base["loss_by_step"][s] - ft["loss_by_step"][s])
+                     for s in range(NSTEPS))
+        assert maxerr <= 1e-5, f"diverged from baseline: {maxerr:.3e}"
+
+    rows = []
+    for r in ft["recoveries"]:
+        tag = f"{r.kind}.P{r.p_from}->P{r.p_to}"
+        for phase in ("detect", "replan", "restore", "remap", "resume"):
+            rows.append((f"{tag}.{phase}",
+                         getattr(r, f"{phase}_s") * 1e6,
+                         {"step": r.step}))
+    rows.append(("run.total", wall * 1e6,
+                 {"P": P, "steps": NSTEPS, "faults": len(faults),
+                  "incarnations": len(ft["incarnations"]),
+                  "maxerr_vs_baseline": maxerr}))
+    name = "ft_recovery_check" if args.check else "ft_recovery"
+    path = write_json(name, rows)
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,59 +1,106 @@
-"""Fault-tolerance demo: train, kill, lose devices, re-plan, resume.
+"""Elastic fault-tolerant pipeline training demo: kill, re-plan, resume.
 
-    PYTHONPATH=src python examples/elastic_restart.py
+    PYTHONPATH=src python examples/elastic_restart.py          # 16 devices
+    PYTHONPATH=src python examples/elastic_restart.py --dry    # 2 devices
 
-1. trains for 40 steps with checkpoints,
-2. simulates a crash (process state discarded),
-3. simulates the loss of 2 of 16 devices, re-plans the mesh,
-4. restores the (topology-independent) checkpoint and finishes training —
-   verifying the loss continues to decrease across the restart.
+The full run drives ``repro.ft.elastic_pipeline.train_elastic`` over 16
+forced-host devices with a deterministic fault schedule
+(``repro.ft.inject``):
+
+1. trains a chronos pipeline at P=16 with periodic checkpoints,
+2. a stage dies mid-run -> the health check surfaces a DeviceLossError,
+   the mesh re-plans at P=15, the topology-independent checkpoint
+   restores and the stacked parameter blocks + optimizer moments
+   live-migrate onto the new ``StageLayout`` (remap_blocks_elastic),
+3. a hung collective trips the (fake-clock) watchdog -> P=14,
+4. the lost devices rejoin -> preemptible warm restart scales back to 16,
+5. the run finishes step-count-exact: every step 0..N-1 has exactly one
+   loss, and the trajectory keeps decreasing across all four topologies.
+
+``--dry`` shrinks everything (2 devices, P=2 -> 1 -> 2, a handful of
+steps) so the fast test tier can execute the demo end-to-end.
 """
 import dataclasses
+import os
 import shutil
+import sys
+import tempfile
 
-from repro.configs import (OptimizerConfig, ParallelPlan, RecomputeConfig,
+DRY = "--dry" in sys.argv
+N_DEV = 2 if DRY else 16
+os.environ.setdefault("XLA_FLAGS",
+                      f"--xla_force_host_platform_device_count={N_DEV}")
+
+from repro.configs import (OptimizerConfig, ParallelPlan,  # noqa: E402
                            ShapeConfig, TrainConfig, get_reduced)
-from repro.ft import MeshRequirements, simulate_failures
-from repro.launch.train import train
+from repro.ft.inject import (DeviceJoin, DeviceLoss,  # noqa: E402
+                             HungCollective)
 
-CKPT = "/tmp/repro_elastic_demo"
+# unique per invocation: concurrent runs (e.g. the fast-tier --dry test
+# next to a full run) must not share checkpoint state
+CKPT = tempfile.mkdtemp(prefix="repro_elastic_demo_")
 
 
 def build_tc(steps):
     model = dataclasses.replace(
-        get_reduced("tinyllama-1.1b"), name="llama-elastic", num_layers=2,
+        get_reduced("tinyllama-1.1b"), name="llama-elastic",
+        num_layers=2 if DRY else 16,
         d_model=128, num_heads=4, num_kv_heads=2, d_ff=352,
         vocab_size=1024)
     return TrainConfig(
-        model=model, shape=ShapeConfig("train_64", 64, 8, "train"),
-        plan=ParallelPlan(microbatch_size=8, num_chunks=2,
-                          recompute=RecomputeConfig(mode="chronos")),
+        model=model,
+        shape=ShapeConfig("train_64", 64, 16, "train"),
+        plan=ParallelPlan(pp_axis="pp", schedule="chronos", num_chunks=2,
+                          microbatch_size=2),
         optimizer=OptimizerConfig(lr=1e-3, warmup_steps=5,
                                   total_steps=steps, schedule="constant"),
-        log_every=10, checkpoint_every=20, checkpoint_dir=CKPT)
+        log_every=5 if DRY else 10, checkpoint_every=3 if DRY else 10,
+        checkpoint_dir=CKPT, keep_checkpoints=3)
 
 
 def main():
-    shutil.rmtree(CKPT, ignore_errors=True)
+    from repro.ft.elastic_pipeline import train_elastic
+    steps = 6 if DRY else 40
+    if DRY:
+        faults = [DeviceLoss(step=3, device=1),
+                  DeviceJoin(step=5, device=1)]
+        expect_ps = [2, 1, 2]
+    else:
+        faults = [DeviceLoss(step=15, device=5),
+                  HungCollective(step=24, device=2, hang_s=900.0),
+                  DeviceJoin(step=32, device=5),
+                  DeviceJoin(step=32, device=2)]
+        expect_ps = [16, 15, 14, 15, 16]
 
-    print("=== phase 1: train 40 steps, then 'crash' ===")
-    out1 = train(build_tc(80), steps=40)
-    loss_at_crash = out1["final_loss"]
+    print(f"=== elastic pipeline run: {N_DEV} devices, {steps} steps, "
+          f"{len(faults)} injected faults ===")
+    out = train_elastic(build_tc(steps), n_devices=N_DEV, faults=faults,
+                        steps=steps, watchdog_timeout=600.0)
 
-    print("=== phase 2: 2 of 16 devices fail -> re-plan ===")
-    req = MeshRequirements(tp_divides=4, global_batch=64)
-    decision = simulate_failures(16, failed=[3, 11], req=req)
-    print(f"elastic decision: dp={decision.dp} tp={decision.tp} "
-          f"using {decision.devices_used}/14 devices, "
-          f"per-replica batch {decision.per_replica_batch}")
-
-    print("=== phase 3: restore + resume on the new plan ===")
-    out2 = train(build_tc(80), steps=80)   # restores from CKPT
-    print(f"loss at crash: {loss_at_crash:.4f}; "
-          f"after resume: {out2['final_loss']:.4f}")
-    assert out2["final_loss"] < loss_at_crash + 0.05
-    print("elastic restart OK: training continued from the checkpoint")
+    ps = [inc["P"] for inc in out["incarnations"]]
+    print(f"incarnations (P): {ps}")
+    for r in out["recoveries"]:
+        print(f"  {r.kind}: P={r.p_from}->{r.p_to} at step {r.step} | "
+              f"detect {r.detect_s * 1e3:.0f}ms "
+              f"replan {r.replan_s * 1e3:.0f}ms "
+              f"restore {r.restore_s * 1e3:.0f}ms "
+              f"remap {r.remap_s * 1e3:.0f}ms "
+              f"resume {r.resume_s * 1e3:.0f}ms")
+    assert ps == expect_ps, f"expected {expect_ps}, got {ps}"
+    assert sorted(out["loss_by_step"]) == list(range(steps)), \
+        "run is not step-count-exact"
+    losses = out["losses"]
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} across "
+          f"{len(out['incarnations'])} incarnations")
+    assert losses[-1] < losses[0], "loss did not decrease across restarts"
+    assert len(out["recoveries"]) == len(faults), \
+        "every injected fault should produce one recovery record"
+    print("elastic pipeline recovery OK: kill -> re-plan -> migrate -> "
+          "resume -> scale-up, step-count-exact")
 
 
 if __name__ == "__main__":
-    main()
+    try:
+        main()
+    finally:
+        shutil.rmtree(CKPT, ignore_errors=True)

@@ -19,8 +19,17 @@
 #    BENCH_pipeline_exec_check.json (the committed full-matrix record
 #    BENCH_pipeline_exec.json is refreshed by running the script
 #    without --check).
+# 3c. Elastic-recovery perf record: benchmarks/ft_recovery.py --check
+#    replays the deterministic fault drill (checkpoint-writer crash,
+#    device loss -> re-plan at P-1 -> restore/remap -> resume, rejoin
+#    -> scale-up) on 2 forced-host devices and writes
+#    BENCH_ft_recovery_check.json (the committed full record
+#    BENCH_ft_recovery.json is refreshed by running without --check).
 # 4. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).  The
+#    fault-injection suite (tests/test_ft_and_data.py crash-consistency
+#    + injector cases, tests/test_elastic_pipeline.py remap/recovery
+#    drills) rides in tier-1; only the 16-device example run is @slow.  The
 #    repro.seqpipe tests ride in tier-1 with the same slow split: IR /
 #    table / planner / prefix-KV-attention unit tests plus the
 #    `split_fused_check.py --pair seq` SPMD gradient equivalence and
@@ -50,5 +59,8 @@ echo "ci.sh: docs gallery in sync; doctests passed"
 
 python benchmarks/pipeline_exec.py --check
 echo "ci.sh: executor perf record regenerated (BENCH_pipeline_exec_check.json)"
+
+python benchmarks/ft_recovery.py --check
+echo "ci.sh: elastic-recovery perf record regenerated (BENCH_ft_recovery_check.json)"
 
 exec python benchmarks/run.py --check "$@"

@@ -281,6 +281,62 @@ def remap_blocks(blocks, layout_src: StageLayout, layout_dst: StageLayout):
     return [jax.tree.map(one, t) for t in blocks]
 
 
+def remap_blocks_elastic(blocks, layout_src: StageLayout,
+                         layout_dst: StageLayout, init_blocks=None):
+    """Re-index stacked block leaves across *different* layouts — the
+    elastic live-migration path.  Unlike :func:`remap_blocks` (same
+    (P, v, K), placement conversion only), source and destination may
+    differ in P, v, and placement: every destination position
+    ``(d, c, mi)`` of period-phase ``j`` holds global layer
+    ``dst.pl.block(d, c) * dst.K + mi * period + j`` and is gathered
+    from wherever the source layout stored that layer.  K is always a
+    multiple of the structural period on both sides, so a layer keeps
+    its period-phase and each phase's tree remaps with one shared index
+    triple.
+
+    Destination positions whose global layer lies beyond the source's
+    padded span (L_pad can shrink when P does) are padding layers
+    (gate 0, no forward effect, zero grads); they are filled from
+    ``init_blocks`` — a freshly-initialized parameter/zeroed-moment
+    tree under ``layout_dst`` — which is required exactly then."""
+    per = layout_src.period
+    assert per == layout_dst.period and layout_src.L == layout_dst.L, \
+        "elastic remap requires the same model (period, num_layers)"
+    Ps, vs = layout_src.P, layout_src.v
+    Pd, vd, Md = layout_dst.P, layout_dst.v, layout_dst.M
+    Ks = layout_src.K
+    src_of = {layout_src.pl.block(d, c): (d, c)
+              for d in range(Ps) for c in range(vs)}
+    idx_d = np.zeros((Pd, vd, Md), np.int64)
+    idx_c = np.zeros((Pd, vd, Md), np.int64)
+    idx_m = np.zeros((Pd, vd, Md), np.int64)
+    have = np.zeros((Pd, vd, Md), bool)
+    for d in range(Pd):
+        for c in range(vd):
+            for mi in range(Md):
+                g = layout_dst.pl.block(d, c) * layout_dst.K + mi * per
+                if g < layout_src.L_pad:
+                    blk, within = divmod(g, Ks)
+                    idx_d[d, c, mi], idx_c[d, c, mi] = src_of[blk]
+                    idx_m[d, c, mi] = within // per
+                    have[d, c, mi] = True
+    if bool(have.all()):
+        def one(a):
+            return a[idx_d, idx_c, idx_m]
+        return [jax.tree.map(one, t) for t in blocks]
+    assert init_blocks is not None, \
+        "destination has padding positions absent from the source; " \
+        "pass init_blocks (freshly-initialized under layout_dst)"
+
+    def one2(a, a0):
+        g = a[idx_d, idx_c, idx_m]
+        mask = have.reshape(have.shape + (1,) * (g.ndim - 3))
+        return jnp.where(mask, g, a0)
+
+    return [jax.tree.map(one2, t, t0)
+            for t, t0 in zip(blocks, init_blocks)]
+
+
 def init_pipeline_params(key, cfg: ModelConfig, layout: StageLayout):
     """Returns (params, logical_specs).  Block leaves are
     [P, v, M, ...] indexed by (device, chunk) under ``layout``'s

@@ -2,3 +2,12 @@ from repro.ft.checkpoint import Checkpointer  # noqa: F401
 from repro.ft.elastic import (ElasticDecision, MeshRequirements,  # noqa: F401
                               plan_mesh, reshard, simulate_failures)
 from repro.ft.health import Action, HealthMonitor, Watchdog  # noqa: F401
+from repro.ft.inject import (CheckpointCrash, DeviceJoin,  # noqa: F401
+                             DeviceLoss, DeviceLossError, FaultInjector,
+                             HungCollective, InjectedCheckpointCrash,
+                             Straggler)
+
+# repro.ft.elastic_pipeline (train_elastic / migrate_checkpoint /
+# RecoveryRecord) is imported lazily by callers: it pulls in the jax
+# runtime stack, which this package init must not force on analytical
+# users.

@@ -43,6 +43,22 @@ def _dtype_of(name: str):
     return np.dtype(name)
 
 
+# -- fault-injection seams (repro.ft.inject) --------------------------------
+# All leaf-file writes and all renames go through these module-level
+# indirections so crash-consistency tests can kill the writer at an
+# exact byte offset or between the tmp write and the atomic publish
+# (monkeypatch ``_write_file`` / ``_rename``) without patching the
+# global ``os`` module.
+
+def _write_file(path: str, data: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(data)
+
+
+def _rename(src: str, dst: str) -> None:
+    os.rename(src, dst)
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     paths = [jax.tree_util.keystr(p) for p, _ in
@@ -106,8 +122,7 @@ class Checkpointer:
         for i, leaf in enumerate(leaves):
             fn = f"leaf_{i}.bin"
             arr = np.asarray(leaf)
-            with open(os.path.join(tmp, fn), "wb") as f:
-                f.write(arr.tobytes())
+            _write_file(os.path.join(tmp, fn), arr.tobytes())
             manifest["leaves"].append({
                 "path": paths[i], "file": fn, "shape": list(arr.shape),
                 "dtype": str(arr.dtype), "spec": spec_leaves[i]})
@@ -118,7 +133,7 @@ class Checkpointer:
         final = os.path.join(self.dir, f"step_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        _rename(tmp, final)
         self._update_latest(step)
         self._gc()
         return final
@@ -129,13 +144,20 @@ class Checkpointer:
             f.write(str(step))
             f.flush()
             os.fsync(f.fileno())
-        os.rename(tmp, os.path.join(self.dir, "LATEST"))
+        _rename(tmp, os.path.join(self.dir, "LATEST"))
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+        # a writer that died mid-write (or before its rename) leaves an
+        # unpublished tmp dir / LATEST temp behind; they are garbage
+        for d in os.listdir(self.dir):
+            if d.startswith("tmp.") or d.startswith(".latest."):
+                p = os.path.join(self.dir, d)
+                (shutil.rmtree if os.path.isdir(p)
+                 else os.remove)(p)
 
     # -- restore -----------------------------------------------------------
     def all_steps(self):
@@ -157,6 +179,16 @@ class Checkpointer:
             s = int(f.read().strip())
         return s if s in self.all_steps() else (
             self.all_steps()[-1] if self.all_steps() else None)
+
+    def read_extra(self, step: Optional[int] = None) -> Dict:
+        """The ``extra`` dict of a checkpoint *without* reading leaves —
+        the elastic driver peeks at the stored layout metadata here to
+        decide whether a cross-topology migration is needed."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["extra"]
 
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None):

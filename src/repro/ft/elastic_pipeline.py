@@ -1,0 +1,279 @@
+"""End-to-end elastic recovery for the ChronosPipe pipeline driver.
+
+The recovery loop the paper's long-pretraining setting needs but never
+spells out: a pipeline stage dies at step k, the health check fires,
+the mesh re-plans at P-1 over the survivors, the topology-independent
+checkpoint restores, and — because the checkpoint's stacked block
+leaves were laid out for the *old* ``StageLayout`` — the parameters and
+optimizer moments live-migrate onto the new placement via
+:func:`repro.core.pipeline_runtime.remap_blocks_elastic` before
+training resumes.  When the device returns (preemptible capacity), the
+same machinery scales back up to P.
+
+Step-count exactness: the microbatch decomposition is pinned
+(``plan.num_microbatches``) so every incarnation computes the same
+global batch per step, the data cursor checkpoints exactly (the
+prefetcher snapshots the source state per consumed batch), and the
+executor's gradient math is placement-independent — so the resumed
+run's per-step losses match an uninterrupted baseline step-for-step to
+float-summation tolerance.  ``tests/helpers/elastic_train_check.py``
+pins that property.
+
+Driven entirely by :mod:`repro.ft.inject`'s deterministic triggers in
+tests; on a real cluster the same loop runs with ``faults=()`` and real
+collective failures raising through the watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.ft.checkpoint import Checkpointer
+from repro.ft.elastic import MeshRequirements, plan_mesh
+from repro.ft.health import Watchdog
+from repro.ft.inject import DeviceLossError, FaultInjector
+
+
+@dataclass
+class RecoveryRecord:
+    """Per-recovery phase timings (seconds) — the numbers
+    ``benchmarks/ft_recovery.py`` publishes."""
+    step: int                   # first step of the new incarnation
+    kind: str                   # device_loss | hung_collective |
+    #                             straggler_restart | scale_up
+    p_from: int
+    p_to: int
+    detect_s: float = 0.0       # fault raise -> driver caught it
+    replan_s: float = 0.0       # plan_mesh + new layout/schedule solve
+    restore_s: float = 0.0      # checkpoint read (migration path)
+    remap_s: float = 0.0        # remap_blocks_elastic + durable re-save
+    resume_s: float = 0.0       # restart -> first completed step
+
+
+def _build_layout(tc: TrainConfig, P: int):
+    """The ``StageLayout`` train_pipeline will run under at depth P
+    (validated spec construction, so migration and execution agree)."""
+    from repro.core.pipeline_runtime import make_pipeline_spec
+    from repro.launch.steps import plan_schedule_kwargs
+    plan, shape = tc.plan, tc.shape
+    mbg = plan.microbatch_size
+    m = plan.num_microbatches or max(2, shape.global_batch // mbg)
+    spec = make_pipeline_spec(
+        tc.model, P=P, v=plan.num_chunks, m=m, microbatch=mbg,
+        seq_len=shape.seq_len, schedule=plan.schedule,
+        n_seq=plan.seq_chunks, kernels=plan.kernels,
+        **plan_schedule_kwargs(plan))
+    return spec.layout
+
+
+def migrate_checkpoint(ck: Checkpointer, tc: TrainConfig, layout_new,
+                       *, log: Callable[[str], None] = print):
+    """Live-migrate the latest checkpoint onto ``layout_new``.
+
+    Restores under the layout recorded in the checkpoint's ``extra``
+    (topology-independent: leaves come back with their stored shapes),
+    remaps the stacked parameter blocks and the optimizer's mu/nu/master
+    blocks position-for-position onto the new (P, v, placement), and
+    durably re-saves at the same step with updated layout metadata.
+    Padding positions the old span never held are filled from a fresh
+    init (parameters; gate 0 keeps them inert) / zeros (moments).
+
+    Returns ``(restore_s, remap_s)``; no-op ``(0, 0)`` when no
+    checkpoint exists or the layout already matches."""
+    from repro.core.pipeline_runtime import (StageLayout,
+                                             init_pipeline_params,
+                                             remap_blocks_elastic)
+    from repro.core.placement import get_placement
+    from repro.optim import adamw_init
+    latest = ck.latest_step()
+    if latest is None:
+        return 0.0, 0.0
+    extra = ck.read_extra(latest)
+    meta = extra.get("layout")
+    if meta is None:
+        raise RuntimeError(
+            f"checkpoint step {latest} carries no layout metadata; "
+            "cannot migrate (was it written by train_pipeline?)")
+    same = (meta["P"], meta["v"], meta["placement"]) == (
+        layout_new.P, layout_new.v,
+        layout_new.pl.name if hasattr(layout_new.pl, "name")
+        else "interleaved")
+    if same:
+        return 0.0, 0.0
+    assert not tc.plan.offload.enabled, \
+        "elastic migration of host-offloaded optimizer state is not " \
+        "implemented (device checkpoints carry no host momenta)"
+    t0 = time.time()
+    pl_old = None
+    if meta["placement"] != "interleaved":
+        pl_old = get_placement(meta["placement"], meta["P"], meta["v"])
+    layout_old = StageLayout.build(tc.model, meta["P"], meta["v"],
+                                   placement=pl_old)
+    params_old, _ = init_pipeline_params(jax.random.key(tc.seed),
+                                         tc.model, layout_old)
+    restored, extra = ck.restore({"params": params_old,
+                                  "opt": adamw_init(params_old)})
+    restore_s = time.time() - t0
+
+    t0 = time.time()
+    params_new, _ = init_pipeline_params(jax.random.key(tc.seed),
+                                         tc.model, layout_new)
+    opt_new0 = adamw_init(params_new)
+    p_r, o_r = restored["params"], restored["opt"]
+    params_mig = {**p_r, "blocks": remap_blocks_elastic(
+        p_r["blocks"], layout_old, layout_new,
+        init_blocks=params_new["blocks"])}
+    opt_mig = dict(o_r)
+    for k in ("mu", "nu", "master"):
+        opt_mig[k] = {**o_r[k], "blocks": remap_blocks_elastic(
+            o_r[k]["blocks"], layout_old, layout_new,
+            init_blocks=opt_new0[k]["blocks"])}
+    extra = dict(extra, layout={
+        "P": layout_new.P, "v": layout_new.v,
+        "schedule": tc.plan.schedule,
+        "placement": layout_new.pl.name})
+    ck.save(latest, {"params": params_mig, "opt": opt_mig}, extra=extra)
+    remap_s = time.time() - t0
+    log(f"[elastic] migrated checkpoint step {latest}: "
+        f"P={meta['P']} v={meta['v']} ({meta['placement']}) -> "
+        f"P={layout_new.P} v={layout_new.v} ({layout_new.pl.name}) "
+        f"restore {restore_s * 1e3:.0f}ms remap {remap_s * 1e3:.0f}ms")
+    return restore_s, remap_s
+
+
+def train_elastic(tc: TrainConfig, *, n_devices: Optional[int] = None,
+                  faults=(), steps: Optional[int] = None,
+                  data_source=None, watchdog_timeout: float = 600.0,
+                  max_incarnations: int = 8,
+                  log: Callable[[str], None] = print) -> Dict:
+    """Elastic pipeline training: run to ``steps`` across device loss
+    and return, re-planning the pipeline depth each incarnation.
+
+    The mesh is pipeline-only (pp over ``n_devices``); on a
+    :class:`DeviceLossError` the failed device leaves the pool,
+    ``plan_mesh`` (with ``min_pp=1``) re-solves the depth over the
+    survivors, the checkpoint migrates onto the new ``StageLayout``,
+    and training resumes from the last durable step.  A
+    :class:`~repro.ft.inject.DeviceJoin` (or any preempted yield)
+    returns lost devices and scales back up the same way.  Returns the
+    merged per-step losses, the per-recovery phase timings
+    (``recoveries``), and the incarnation log."""
+    from repro.launch.train import train_pipeline
+    from repro.jax_compat import make_mesh
+    steps = steps or tc.optimizer.total_steps
+    all_devices = list(jax.devices())
+    n0 = n_devices or len(all_devices)
+    assert n0 <= len(all_devices), \
+        f"need {n0} devices, have {len(all_devices)}"
+    plan = tc.plan.with_(pp_axis=tc.plan.pp_axis or "pp")
+    if not plan.num_microbatches:
+        # pin m now: every incarnation must keep the same microbatch
+        # decomposition for step-count-exact trajectories
+        plan = plan.with_(num_microbatches=max(
+            2, tc.shape.global_batch // plan.microbatch_size))
+    tc = dataclasses.replace(tc, plan=plan)
+    req = MeshRequirements(tp_divides=1,
+                           global_batch=tc.shape.global_batch,
+                           pp=n0, min_pp=1)
+    injector = faults if isinstance(faults, FaultInjector) \
+        else FaultInjector(faults)
+    ck = Checkpointer(tc.checkpoint_dir, keep=tc.keep_checkpoints)
+
+    healthy = list(range(n0))
+    loss_by_step: Dict[int, float] = {}
+    recoveries: List[RecoveryRecord] = []
+    incarnations: List[Dict] = []
+    pending: Optional[RecoveryRecord] = None
+    out = None
+    while len(incarnations) < max_incarnations:
+        t0 = time.time()
+        decision = plan_mesh(len(healthy), req)
+        assert decision is not None and decision.pp >= 1, \
+            f"no feasible mesh over {len(healthy)} devices"
+        P = decision.pp
+        layout = _build_layout(tc, P)
+        replan_s = time.time() - t0
+        restore_s, remap_s = migrate_checkpoint(ck, tc, layout, log=log)
+        mesh = make_mesh((P,), (plan.pp_axis,),
+                         devices=[all_devices[i] for i in healthy[:P]])
+        watchdog = Watchdog(watchdog_timeout, clock=injector.clock)
+        log(f"[elastic] incarnation {len(incarnations)}: P={P} over "
+            f"devices {healthy[:P]}")
+        t_run = time.time()
+        try:
+            out = train_pipeline(tc, mesh=mesh, steps=steps,
+                                 data_source=data_source,
+                                 injector=injector, watchdog=watchdog,
+                                 log=log)
+        except DeviceLossError as e:
+            detect_s = time.time() - e.raised_at
+            made_steps = getattr(e, "loss_by_step", {})
+            loss_by_step.update(made_steps)
+            if pending is not None and made_steps:
+                # the previous recovery *did* resume (this incarnation
+                # completed steps before dying of a later fault) —
+                # close its record before opening the new one
+                pending.p_to = P
+                pending.replan_s = replan_s
+                pending.restore_s = restore_s
+                pending.remap_s = remap_s
+                pending.resume_s = getattr(e, "first_step_s", None) \
+                    or (time.time() - t_run)
+                recoveries.append(pending)
+            # fault devices are global ids (matching DeviceJoin);
+            # -1 = "unknown peer" from a watchdog trip
+            lost = e.device if e.device in healthy else healthy[-1]
+            healthy = [d for d in healthy if d != lost]
+            log(f"[elastic] {e.kind} at step {e.step}: lost device "
+                f"{lost}, {len(healthy)} survivors -> re-plan")
+            incarnations.append({"P": P, "status": e.kind,
+                                 "devices": healthy + [lost]})
+            pending = RecoveryRecord(
+                step=e.step if e.step is not None else -1, kind=e.kind,
+                p_from=P, p_to=-1, detect_s=detect_s)
+            continue
+        loss_by_step.update(out["loss_by_step"])
+        incarnations.append({"P": P, "status": out["status"],
+                             "steps": out["steps"],
+                             "devices": list(healthy[:P])})
+        if pending is not None:
+            # the incarnation that *recovered* closes the record
+            pending.p_to = P
+            pending.replan_s = replan_s
+            pending.restore_s = restore_s
+            pending.remap_s = remap_s
+            pending.resume_s = out["first_step_s"] or \
+                (time.time() - t_run)
+            recoveries.append(pending)
+            pending = None
+        if out["status"] == "complete":
+            break
+        if out["status"] == "preempted":
+            rejoined = [d for d in injector.take_rejoined()
+                        if d not in healthy]
+            healthy = sorted(healthy + rejoined)
+            log(f"[elastic] devices {rejoined} rejoined -> warm "
+                f"scale-up over {len(healthy)} devices")
+            pending = RecoveryRecord(step=out["next_step"],
+                                     kind="scale_up", p_from=P,
+                                     p_to=-1)
+        elif out["status"] == "restart":
+            log("[elastic] straggler restart (same pool)")
+            pending = RecoveryRecord(step=out["next_step"],
+                                     kind="straggler_restart",
+                                     p_from=P, p_to=-1)
+    else:
+        raise RuntimeError(
+            f"elastic run did not complete within {max_incarnations} "
+            "incarnations")
+    return {"loss_by_step": loss_by_step,
+            "losses": [loss_by_step[s] for s in sorted(loss_by_step)],
+            "final_loss": out["final_loss"],
+            "steps": steps, "recoveries": recoveries,
+            "incarnations": incarnations,
+            "events": injector.events}

@@ -55,16 +55,21 @@ class HealthMonitor:
 
 
 class Watchdog:
-    """Raises in the main thread's next check if a step hangs."""
+    """Raises in the main thread's next check if a step hangs.
 
-    def __init__(self, timeout_s: float):
+    ``clock`` defaults to wall time; the fault-injection harness
+    (:mod:`repro.ft.inject`) passes its fake monotonic clock so a hung
+    collective is detected deterministically without sleeping."""
+
+    def __init__(self, timeout_s: float, clock=time.monotonic):
         self.timeout = timeout_s
+        self.clock = clock
         self._armed_at: Optional[float] = None
         self._lock = threading.Lock()
 
     def arm(self) -> None:
         with self._lock:
-            self._armed_at = time.monotonic()
+            self._armed_at = self.clock()
 
     def disarm(self) -> None:
         with self._lock:
@@ -76,4 +81,4 @@ class Watchdog:
         with self._lock:
             if self._armed_at is None:
                 return False
-            return time.monotonic() - self._armed_at > self.timeout
+            return self.clock() - self._armed_at > self.timeout

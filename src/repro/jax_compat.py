@@ -25,9 +25,15 @@ import jax
 HAS_VMA = hasattr(jax.lax, "pcast") and hasattr(jax, "typeof")
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """``jax.make_mesh`` across JAX versions (Auto axis types when the
-    installed version has typed meshes)."""
+    installed version has typed meshes).  ``devices`` pins an explicit
+    device list (elastic restarts build the mesh over the survivors
+    rather than ``jax.devices()[:n]``)."""
+    if devices is not None:
+        import numpy as np
+        arr = np.array(devices, dtype=object).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(shape, axes,

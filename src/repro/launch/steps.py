@@ -343,7 +343,10 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
     P_ = mesh.shape[pp_axis]
     dp = _axes_size(mesh, rules.get("dp"))
     mbg = plan.microbatch_size * dp
-    m = max(2, shape.global_batch // mbg)
+    # plan.num_microbatches pins m explicitly — elastic restarts re-plan
+    # at a different P but must keep the microbatch decomposition (and
+    # hence the per-step global batch / loss trajectory) identical
+    m = plan.num_microbatches or max(2, shape.global_batch // mbg)
 
     if plan.schedule in VSHAPE_SCHEDULES:
         assert plan.num_chunks == 2, \

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs.base import TrainConfig
 from repro.data import DataPipeline, SyntheticLM
 from repro.ft import Action, Checkpointer, HealthMonitor
+from repro.ft.inject import DeviceLossError
 from repro.launch.steps import (make_pipeline_train_step, make_train_step,
                                 resolve_shardings, _specs_only)
 from repro.models import LM
@@ -105,6 +106,7 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
     jit_step = jax.jit(step_fn)
 
     losses = []
+    next_step = start_step
     t_start = time.time()
     for step in range(start_step, steps):
         t0 = time.time()
@@ -113,6 +115,7 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
         params, opt_state, metrics = jit_step(params, opt_state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
+        next_step = step + 1
         dt = time.time() - t0
         action = monitor.record_step(dt)
         if step % tc.log_every == 0:
@@ -128,8 +131,10 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
             log("[train] persistent straggler detected -> checkpoint + "
                 "abort for elastic restart")
             break
-    ck.save(steps, {"params": params, "opt": opt_state},
-            extra={"step": steps, "data": pipe.state()})
+    # final save at the step actually reached (an early RESTART abort
+    # must not mislabel the checkpoint as having finished the run)
+    ck.save(next_step, {"params": params, "opt": opt_state},
+            extra={"step": next_step, "data": pipe.state()})
     pipe.stop()
     mesh_ctx.__exit__(None, None, None)
     return {"losses": losses, "final_loss": losses[-1] if losses else None,
@@ -141,9 +146,23 @@ def train(tc: TrainConfig, *, mesh=None, rules: Optional[Dict] = None,
 def train_pipeline(tc: TrainConfig, *, mesh,
                    rules: Optional[Dict] = None,
                    steps: Optional[int] = None, data_source=None,
+                   injector=None, watchdog=None,
                    log: Callable[[str], None] = print):
     """ChronosPipe training driver: the SPMD pipeline executor with
     optional Chronos-Offload (§5.1) for the deepest chunks.
+
+    Fault-tolerance seams (``repro.ft``): every checkpoint records the
+    pipeline layout (P, v, schedule, placement) so an elastic restart
+    at a different device count can live-migrate the state
+    (``remap_blocks_elastic``); ``injector`` (a
+    :class:`repro.ft.inject.FaultInjector`) drives deterministic
+    device-loss / hang / checkpoint-crash / straggler events through
+    the loop, and ``watchdog`` (a :class:`repro.ft.health.Watchdog`)
+    is armed around each step — a trip converts a hung collective into
+    a :class:`~repro.ft.inject.DeviceLossError` the elastic driver
+    recovers from.  The returned dict carries ``status`` ("complete" |
+    "restart" | "preempted"), per-step losses (``loss_by_step``), and
+    the first-step latency (``first_step_s``, the resume cost).
 
     Offload flow (double-buffered across step boundaries): the jitted
     step updates shallow chunks + shared params on device and returns
@@ -205,6 +224,14 @@ def train_pipeline(tc: TrainConfig, *, mesh,
     start_step = 0
     latest = ck.latest_step()
     if latest is not None:
+        meta = ck.read_extra(latest).get("layout")
+        if meta is not None and (meta["P"], meta["v"]) != (spec.table.P,
+                                                          plan.num_chunks):
+            raise RuntimeError(
+                f"checkpoint step {latest} was written under layout "
+                f"P={meta['P']} v={meta['v']} but this run uses "
+                f"P={spec.table.P} v={plan.num_chunks}; migrate it "
+                "first (repro.ft.elastic_pipeline.migrate_checkpoint)")
         restored, extra = ck.restore({"params": params, "opt": opt_state})
         params, opt_state = restored["params"], restored["opt"]
         if "data" in extra:
@@ -217,65 +244,137 @@ def train_pipeline(tc: TrainConfig, *, mesh,
 
     jit_step = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
 
+    layout_meta = {"P": spec.table.P, "v": v, "schedule": plan.schedule,
+                   "placement": getattr(spec.table, "placement_name",
+                                        "interleaved")}
+
+    def save_ckpt(save_step, next_step_, params_, opt_, *, sync=False):
+        """Checkpoint with the layout stamped into ``extra`` and a
+        synchronous durable retry when the (possibly fault-injected)
+        writer dies — LATEST keeps resolving to a complete step."""
+        if injector is not None:
+            injector.arm_checkpoint_crash(save_step)
+        tree = {"params": params_, "opt": opt_}
+        extra = {"step": next_step_, "data": pipe.state(),
+                 "layout": layout_meta}
+        try:
+            (ck.save if sync else ck.save_async)(save_step, tree,
+                                                 extra=extra)
+        except Exception as e:               # noqa: BLE001
+            log(f"[train-pp] checkpoint write died ({e!r}) -> "
+                "synchronous retry")
+            ck.save(save_step, tree, extra=extra)
+
+    def fold_pending(params_):
+        new_deep = runner.collect()           # bf16 upload (warm-up win)
+        shallow, _ = split_deep_shallow(params_["blocks"], v, n_off)
+        return {**params_,
+                "blocks": merge_deep_shallow(shallow, new_deep)}
+
+    if latest is None:
+        # durable step-0 snapshot: a failure before the first periodic
+        # checkpoint then restores + migrates like any other (a cross-P
+        # re-init would be a *different* network — per-position RNG
+        # folding — and break step-count-exact recovery)
+        save_ckpt(0, 0, params, opt_state, sync=True)
+
     losses = []
+    loss_by_step = {}
+    status = "complete"
+    next_step = start_step
+    first_step_s = None
     pending = False
     collect_wait_s = 0.0
     t_start = time.time()
-    for step in range(start_step, steps):
-        t0 = time.time()
-        batch = {k: jnp.asarray(b) for k, b in pipe.next().items()}
-        if pending:
-            t_c = time.time()
-            new_deep = runner.collect()       # bf16 upload (warm-up win)
-            collect_wait_s += time.time() - t_c
-            shallow, _ = split_deep_shallow(params["blocks"], v, n_off)
-            params = {**params,
-                      "blocks": merge_deep_shallow(shallow, new_deep)}
-            pending = False
-        out = jit_step(params, opt_state, batch)
-        if offload:
-            params, opt_state, metrics, deep_grads = out
-            runner.submit(deep_grads)         # grads down + host AdamW
-            pending = True
-        else:
-            params, opt_state, metrics = out
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        dt = time.time() - t0
-        action = monitor.record_step(dt)
-        if step % tc.log_every == 0:
-            log(f"[train-pp] step {step} loss {loss:.4f} "
-                f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.2f}s)")
-        if action == Action.CHECKPOINT_NOW or (
-                step and step % tc.checkpoint_every == 0):
+    try:
+        for step in range(start_step, steps):
+            if injector is not None and injector.should_yield(step):
+                # a lost device rejoined: publish a clean checkpoint and
+                # hand control back for the warm scale-up restart
+                if pending:
+                    params, pending = fold_pending(params), False
+                save_ckpt(step, step, params, opt_state, sync=True)
+                status = "preempted"
+                break
+            if injector is not None:
+                injector.on_step_start(step)
+            t0 = time.time()
+            batch = {k: jnp.asarray(b) for k, b in pipe.next().items()}
             if pending:
-                # fold the in-flight host update in first — otherwise
-                # the checkpoint's deep chunks would be one step stale
-                new_deep = runner.collect()
-                shallow, _ = split_deep_shallow(params["blocks"], v,
-                                                n_off)
-                params = {**params,
-                          "blocks": merge_deep_shallow(shallow, new_deep)}
-                pending = False
-            ck.save_async(step, {"params": params, "opt": opt_state},
-                          extra={"step": step + 1, "data": pipe.state()})
-        if action == Action.RESTART:
-            log("[train-pp] persistent straggler -> checkpoint + abort")
-            break
+                t_c = time.time()
+                params, pending = fold_pending(params), False
+                collect_wait_s += time.time() - t_c
+            if watchdog is not None:
+                watchdog.arm()
+            out = jit_step(params, opt_state, batch)
+            if offload:
+                params, opt_state, metrics, deep_grads = out
+                runner.submit(deep_grads)     # grads down + host AdamW
+                pending = True
+            else:
+                params, opt_state, metrics = out
+            loss = float(metrics["loss"])     # blocks until step done
+            if injector is not None:
+                injector.on_step_end(step, watchdog)
+            if watchdog is not None:
+                if watchdog.check():
+                    raise DeviceLossError(-1, "hung_collective", step)
+                watchdog.disarm()
+            losses.append(loss)
+            loss_by_step[step] = loss
+            next_step = step + 1
+            if first_step_s is None:
+                first_step_s = time.time() - t_start
+            dt = time.time() - t0
+            if injector is not None:
+                dt = injector.step_time(step, dt)
+            action = monitor.record_step(dt)
+            if step % tc.log_every == 0:
+                log(f"[train-pp] step {step} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({dt:.2f}s)")
+            if action == Action.CHECKPOINT_NOW or (
+                    step and step % tc.checkpoint_every == 0):
+                if pending:
+                    # fold the in-flight host update in first —
+                    # otherwise the checkpoint's deep chunks would be
+                    # one step stale
+                    params, pending = fold_pending(params), False
+                save_ckpt(step, step + 1, params, opt_state)
+            if action == Action.RESTART:
+                log("[train-pp] persistent straggler -> checkpoint + "
+                    "abort")
+                status = "restart"
+                break
+    except BaseException as e:
+        # device loss (real or injected) aborts the incarnation: stop
+        # the prefetcher so it can't advance a shared source while the
+        # elastic driver re-plans, then let the failure propagate —
+        # carrying the completed steps' losses so the elastic driver
+        # keeps the full trajectory
+        if isinstance(e, DeviceLossError):
+            e.loss_by_step = loss_by_step
+            e.next_step = next_step
+            e.first_step_s = first_step_s
+        pipe.stop()
+        mesh_ctx.__exit__(None, None, None)
+        raise
     if pending:
-        new_deep = runner.collect()
-        shallow, _ = split_deep_shallow(params["blocks"], v, n_off)
-        params = {**params, "blocks": merge_deep_shallow(shallow,
-                                                         new_deep)}
-    ck.save(steps, {"params": params, "opt": opt_state},
-            extra={"step": steps, "data": pipe.state()})
+        params = fold_pending(params)
+    if status != "preempted":
+        # final save at the step actually reached (a RESTART abort must
+        # not mislabel the checkpoint as having finished the run)
+        save_ckpt(next_step, next_step, params, opt_state, sync=True)
     pipe.stop()
     mesh_ctx.__exit__(None, None, None)
 
     tp = mesh.shape[rules["tp"]] if rules.get("tp") is not None else 1
-    out = {"losses": losses,
+    out = {"losses": losses, "loss_by_step": loss_by_step,
            "final_loss": losses[-1] if losses else None,
-           "steps": len(losses), "wall_s": time.time() - t_start,
+           "steps": len(losses), "start_step": start_step,
+           "next_step": next_step, "status": status,
+           "first_step_s": first_step_s,
+           "wall_s": time.time() - t_start,
            "median_step_s": monitor.median_step,
            "schedule": spec.table.name}
     if offload:

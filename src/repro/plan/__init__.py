@@ -12,7 +12,10 @@ Public API:
 - :class:`ExecutablePlan` — winning point bound to its query; builds
   the validated ``Schedule``, compiled ``TaskTable``, and a
   ``ParallelPlan`` consumable by ``repro.launch``.
+- :func:`replan_for_pp` — elastic re-solve: the same query at a new
+  pipeline depth (device loss -> P-1, rejoin -> back to P), used by
+  ``repro.ft.elastic_pipeline``.
 """
 from repro.plan.planner import (DesignPoint, ExecutablePlan,  # noqa: F401
                                 PlannerQuery, enumerate_points,
-                                plan_under_budget)
+                                plan_under_budget, replan_for_pp)

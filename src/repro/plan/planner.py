@@ -345,3 +345,32 @@ def plan_under_budget(cfg: ModelConfig, *, pp: int, tp: int,
             f"{cfg.name} (pp={pp}, tp={tp}); closest is "
             f"{closest.describe()} at {closest.total_bytes / GB:.1f} GB")
     return ExecutablePlan(q, feasible[0])
+
+
+def replan_for_pp(plan: ExecutablePlan, new_pp: int,
+                  m: Optional[int] = None) -> ExecutablePlan:
+    """Re-solve an :class:`ExecutablePlan`'s query at a different
+    pipeline depth — the elastic path: device loss shrinks the pp axis
+    to P-1 (device return grows it back), every other query constraint
+    (budget, tp, microbatch shape, placement space) is unchanged.  The
+    microbatch count defaults to the original plan's ``m`` so the
+    resumed run keeps the same global batch per step."""
+    assert new_pp >= 1, f"pp must be >= 1, got {new_pp}"
+    q = dataclasses.replace(plan.query, pp=new_pp)
+    try:
+        points = enumerate_points(q)
+    except Exception as e:
+        # pp=1 (and other degenerate depths) have no schedulable points;
+        # surface the same error type as "nothing fits" so elastic
+        # callers handle one exception
+        raise ValueError(
+            f"no schedule enumerable at pp={new_pp} for "
+            f"{q.cfg.name}: {e}") from e
+    feasible = [p for p in points if p.fits]
+    if not feasible:
+        closest = min(points, key=lambda p: p.total_bytes)
+        raise ValueError(
+            f"no schedule fits at pp={new_pp} for {q.cfg.name}; "
+            f"closest is {closest.describe()} at "
+            f"{closest.total_bytes / GB:.1f} GB")
+    return ExecutablePlan(q, feasible[0], m=m or plan.m)

@@ -1,0 +1,104 @@
+"""Subprocess helper: step-count-exact elastic recovery check.
+
+Two runs of the same tiny pipeline config over ``P`` forced-host
+devices:
+
+- **baseline**: uninterrupted ``train_elastic`` (no faults) for N
+  steps at depth P;
+- **faulted**: the same run with a deterministic fault schedule —
+  an async checkpoint writer crash (surfaced + retried durably), a
+  device loss at step k (detect -> re-plan at P-1 -> restore the
+  topology-independent checkpoint -> ``remap_blocks_elastic`` live
+  migration -> resume), and a device rejoin (preempt-yield -> warm
+  scale-up back to P, migrating P-1 -> P with init-filled padding
+  positions).
+
+The faulted run's per-step losses must match the baseline's
+step-for-step: the microbatch decomposition is pinned across
+re-plans, the data cursor checkpoints exactly, and the executor's
+gradient math is placement-independent, so only float summation
+order (stage partitioning changes the psum/accumulation grouping)
+separates the trajectories.  Tolerance pinned accordingly.
+
+Usage: python elastic_train_check.py [P] [steps]
+Prints MAXERR=... OK=1 plus the recovery phase record for the parent
+test (or benchmark) to parse.
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+args = sys.argv[1:]
+P_ = int(args[0]) if len(args) > 0 else 4
+NSTEPS = int(args[1]) if len(args) > 1 else 12
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+from repro.configs import (OptimizerConfig, ParallelPlan,  # noqa: E402
+                           ShapeConfig, TrainConfig, get_reduced)
+from repro.ft.elastic_pipeline import train_elastic  # noqa: E402
+from repro.ft.inject import (CheckpointCrash, DeviceJoin,  # noqa: E402
+                             DeviceLoss)
+
+FAIL_STEP = max(NSTEPS // 2 + 1, 2)          # device loss here
+JOIN_STEP = min(FAIL_STEP + 2, NSTEPS - 1)   # device returns here
+CKPT_EVERY = 3
+
+cfg = dataclasses.replace(get_reduced("tinyllama-1.1b"), num_layers=2)
+shape = ShapeConfig("smoke", seq_len=18, global_batch=8, kind="train")
+
+
+def build_tc(ckpt_dir):
+    return TrainConfig(
+        model=cfg, shape=shape,
+        plan=ParallelPlan(pp_axis="pp", schedule="chronos", num_chunks=2,
+                          microbatch_size=2),
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                  total_steps=NSTEPS,
+                                  schedule="constant"),
+        log_every=1000, checkpoint_every=CKPT_EVERY,
+        checkpoint_dir=ckpt_dir, keep_checkpoints=2)
+
+
+quiet = lambda *_: None  # noqa: E731
+
+with tempfile.TemporaryDirectory() as d_base, \
+        tempfile.TemporaryDirectory() as d_ft:
+    base = train_elastic(build_tc(d_base), n_devices=P_, faults=(),
+                         steps=NSTEPS, log=quiet)
+    faults = [CheckpointCrash(step=CKPT_EVERY, at="rename"),
+              DeviceLoss(step=FAIL_STEP, device=1),
+              DeviceJoin(step=JOIN_STEP, device=1)]
+    ft = train_elastic(build_tc(d_ft), n_devices=P_, faults=faults,
+                       steps=NSTEPS, log=quiet)
+
+assert set(base["loss_by_step"]) == set(range(NSTEPS)), \
+    f"baseline steps {sorted(base['loss_by_step'])}"
+assert set(ft["loss_by_step"]) == set(range(NSTEPS)), \
+    f"faulted run is not step-count-exact: {sorted(ft['loss_by_step'])}"
+
+ps = [inc["P"] for inc in ft["incarnations"]]
+assert ps == [P_, P_ - 1, P_], \
+    f"expected P {P_}->{P_ - 1}->{P_}, got {ps}"
+kinds = [r.kind for r in ft["recoveries"]]
+assert kinds == ["device_loss", "scale_up"], kinds
+down, up = ft["recoveries"]
+assert (down.p_from, down.p_to) == (P_, P_ - 1)
+assert (up.p_from, up.p_to) == (P_ - 1, P_)
+assert down.restore_s > 0 and down.remap_s > 0, \
+    "device-loss recovery must exercise restore + remap"
+
+maxerr = max(abs(base["loss_by_step"][s] - ft["loss_by_step"][s])
+             for s in range(NSTEPS))
+rec = " ".join(
+    f"{r.kind}:{r.p_from}->{r.p_to}"
+    f"(detect={r.detect_s:.3f},replan={r.replan_s:.3f},"
+    f"restore={r.restore_s:.3f},remap={r.remap_s:.3f},"
+    f"resume={r.resume_s:.3f})" for r in ft["recoveries"])
+# measured bitwise-equal on CPU (per-position layer math and per-stage
+# accumulation order are partition-independent); 1e-5 headroom covers
+# platform psum reassociation
+TOL = 1e-5
+print(f"MAXERR={maxerr:.3e} recoveries=[{rec}] "
+      f"events={len(ft['events'])} OK={int(maxerr <= TOL)}")
+sys.exit(0 if maxerr <= TOL else 1)

@@ -98,6 +98,80 @@ def test_kill_restart_resume_equivalence(tmp_path):
                                rtol=1e-6)
 
 
+def _assert_restorable(ck, want_step, want_tree):
+    """LATEST resolves to ``want_step`` and a full restore round-trips."""
+    assert ck.latest_step() == want_step
+    restored, _ = ck.restore(jax.tree.map(jnp.zeros_like, want_tree))
+    for a, b in zip(jax.tree.leaves(want_tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_crash_consistency_random_offsets(tmp_path):
+    """Writer death at a random byte offset inside any leaf file never
+    corrupts the published history: LATEST keeps resolving to the last
+    *complete* step and it restores fully."""
+    from repro.ft.inject import (InjectedCheckpointCrash,
+                                 install_checkpoint_crash)
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree()
+    ck.save(1, tree)
+    max_bytes = max(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+    rng = np.random.default_rng(0xC0FFEE)
+    for trial in range(8):
+        off = int(rng.integers(0, max_bytes + 16))
+        install_checkpoint_crash(at="bytes", offset=off)
+        with pytest.raises(InjectedCheckpointCrash):
+            ck.save(2 + trial, tree)
+        _assert_restorable(ck, 1, tree)
+    # the crash patch is one-shot: the next save lands durably and GC
+    # sweeps the dead writers' tmp dirs
+    ck.save(50, tree)
+    _assert_restorable(ck, 50, tree)
+    assert not [d for d in os.listdir(str(tmp_path))
+                if d.startswith("tmp.")]
+
+
+def test_checkpoint_crash_between_write_and_rename(tmp_path):
+    """Writer death *after* the tmp dir is fully written but *before*
+    the atomic rename publishes it: the unpublished dir is invisible to
+    LATEST/restore and a retry succeeds."""
+    from repro.ft.inject import (InjectedCheckpointCrash,
+                                 install_checkpoint_crash)
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree()
+    ck.save(1, tree)
+    install_checkpoint_crash(at="rename")
+    with pytest.raises(InjectedCheckpointCrash):
+        ck.save(2, tree)
+    # the fully-written tmp dir exists but was never published
+    assert [d for d in os.listdir(str(tmp_path)) if d.startswith("tmp.")]
+    _assert_restorable(ck, 1, tree)
+    ck.save(2, tree)                       # one-shot patch: retry lands
+    _assert_restorable(ck, 2, tree)
+    assert not [d for d in os.listdir(str(tmp_path))
+                if d.startswith("tmp.")]
+
+
+def test_save_async_surfaces_background_error(tmp_path):
+    """A background writer death is not swallowed: wait() re-raises it,
+    the previous checkpoint stays intact, and the checkpointer keeps
+    working afterwards."""
+    from repro.ft.inject import (InjectedCheckpointCrash,
+                                 install_checkpoint_crash)
+    ck = Checkpointer(str(tmp_path), keep=3)
+    tree = _tree()
+    ck.save(1, tree)
+    install_checkpoint_crash(at="bytes", offset=3)
+    ck.save_async(2, tree)
+    with pytest.raises(InjectedCheckpointCrash):
+        ck.wait()
+    _assert_restorable(ck, 1, tree)
+    ck.save_async(3, tree)                 # error state was cleared
+    ck.wait()
+    _assert_restorable(ck, 3, tree)
+
+
 # ---------------------------------------------------------------------------
 # elastic
 # ---------------------------------------------------------------------------
@@ -118,14 +192,44 @@ def test_plan_after_failures_shrinks():
 
 @settings(max_examples=30, deadline=None)
 @given(n=st.integers(2, 512), tpd=st.sampled_from([4, 8, 16]),
-       gb=st.sampled_from([64, 128, 256]))
-def test_plan_mesh_invariants(n, tpd, gb):
-    d = plan_mesh(n, MeshRequirements(tp_divides=tpd, global_batch=gb))
+       gb=st.sampled_from([64, 128, 256]),
+       max_prb=st.sampled_from([0, 2, 4, 16]))
+def test_plan_mesh_invariants(n, tpd, gb, max_prb):
+    d = plan_mesh(n, MeshRequirements(tp_divides=tpd, global_batch=gb,
+                                      max_per_replica_batch=max_prb))
     if d is None:
         return
     assert d.dp * d.tp * d.pp <= n
     assert tpd % d.tp == 0
     assert gb % d.dp == 0
+    # the docstring's grad-accum fallback promise: whenever dp shrank,
+    # accumulation keeps the global batch *exactly*
+    assert d.dp * d.per_replica_batch * d.grad_accum_scale == gb
+    if max_prb:
+        assert d.per_replica_batch <= max_prb
+    else:
+        assert d.grad_accum_scale == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 64), pp=st.sampled_from([4, 8, 16]),
+       gb=st.sampled_from([8, 64]))
+def test_plan_mesh_elastic_pp_axis(n, pp, gb):
+    """min_pp makes the pipeline axis elastic: losing devices from a
+    pure-pp mesh re-plans at a shallower depth instead of failing."""
+    d = plan_mesh(n, MeshRequirements(tp_divides=1, global_batch=gb,
+                                      pp=pp, min_pp=1))
+    assert d is not None                      # always feasible down to pp=1
+    assert 1 <= d.pp <= pp
+    assert d.dp * d.tp * d.pp <= n
+    assert d.dp * d.per_replica_batch * d.grad_accum_scale == gb
+    # an exactly-full pure-pp mesh keeps its depth (tie-break prefers
+    # the deepest pipe at equal device count)...
+    if n == pp:
+        assert d.pp == pp
+    # ...and one lost device re-plans at P-1 instead of failing
+    if n == pp - 1:
+        assert (d.pp, d.dp) == (pp - 1, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +243,67 @@ def test_straggler_detection():
     assert mon.record_step(5.0) == Action.CHECKPOINT_NOW
     assert mon.record_step(5.0) == Action.CONTINUE
     assert mon.record_step(5.0) == Action.RESTART
+
+
+# ---------------------------------------------------------------------------
+# fault injection (repro.ft.inject)
+# ---------------------------------------------------------------------------
+
+def test_injector_device_loss_fires_once():
+    from repro.ft.inject import (DeviceLoss, DeviceLossError,
+                                 FaultInjector)
+    inj = FaultInjector([DeviceLoss(step=3, device=2)])
+    for s in (0, 1, 2):
+        inj.on_step_start(s)               # nothing due yet
+    with pytest.raises(DeviceLossError) as ei:
+        inj.on_step_start(3)
+    assert (ei.value.device, ei.value.kind, ei.value.step) == \
+        (2, "device_loss", 3)
+    inj.on_step_start(4)                   # one-shot: replay continues
+    assert len(inj.events) == 1
+
+
+def test_injector_hung_collective_trips_fake_clock_watchdog():
+    """A hang longer than the watchdog timeout becomes a
+    DeviceLossError(kind='hung_collective'); a shorter stall does not.
+    No wall-clock sleeping: the injector's fake clock drives it."""
+    from repro.ft.health import Watchdog
+    from repro.ft.inject import (DeviceLossError, FaultInjector,
+                                 HungCollective)
+    inj = FaultInjector([HungCollective(step=1, device=0, hang_s=30.0),
+                         HungCollective(step=5, device=1, hang_s=700.0)])
+    wd = Watchdog(600.0, clock=inj.clock)
+    for s in range(5):
+        wd.arm()
+        inj.on_step_start(s)
+        inj.on_step_end(s, wd)             # 30s stall at step 1: tolerated
+        wd.disarm()
+    wd.arm()
+    with pytest.raises(DeviceLossError) as ei:
+        inj.on_step_end(5, wd)
+    assert (ei.value.device, ei.value.kind) == (1, "hung_collective")
+
+
+def test_injector_straggler_escalates_through_health_monitor():
+    """Inflated step_time reports walk the real HealthMonitor through
+    its CHECKPOINT_NOW -> RESTART escalation deterministically."""
+    from repro.ft.inject import FaultInjector, Straggler
+    inj = FaultInjector([Straggler(step=10, n_steps=3, factor=10.0)])
+    mon = HealthMonitor(straggler_factor=2.0, straggler_patience=3)
+    acts = [mon.record_step(inj.step_time(s, 1.0)) for s in range(13)]
+    assert all(a == Action.CONTINUE for a in acts[:10])
+    assert acts[10:] == [Action.CHECKPOINT_NOW, Action.CONTINUE,
+                         Action.RESTART]
+
+
+def test_injector_device_join_yields_once():
+    from repro.ft.inject import DeviceJoin, FaultInjector
+    inj = FaultInjector([DeviceJoin(step=4, device=7)])
+    assert not any(inj.should_yield(s) for s in range(4))
+    assert inj.should_yield(4)
+    assert inj.take_rejoined() == [7]
+    assert inj.take_rejoined() == []
+    assert not inj.should_yield(5)         # one-shot
 
 
 # ---------------------------------------------------------------------------
