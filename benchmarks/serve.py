@@ -1,0 +1,92 @@
+"""Pipelined-serving benchmark: throughput + latency under synthetic
+Poisson traffic.
+
+Serves seeded Poisson request traces (``repro.serve.poisson_requests``)
+through the pipelined engine (seq-chunked prefill + steady-tick decode
+with continuous batching) at several arrival rates and records, per
+rate: tokens/sec, TTFT p50/p99 and per-token latency p50/p99 (wall
+clock, compile excluded by a warmup trace).  The full run (``P=4``,
+three rates) writes ``BENCH_serve.json`` at the repo root; ``--check``
+is the CI smoke (``P=2``, two rates, shorter trace) and writes
+``BENCH_serve_check.json`` so the committed full record is never
+clobbered — ``scripts/ci.sh`` runs it every PR.
+
+Must run standalone: the virtual devices require
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax import.
+"""
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--check", action="store_true",
+                help="CI smoke: P=2, two rates, short trace")
+ap.add_argument("--devices", type=int, default=0)
+ap.add_argument("--requests", type=int, default=0)
+args = ap.parse_args()
+P = args.devices or (2 if args.check else 4)
+NREQ = args.requests or (6 if args.check else 16)
+RATES = (4.0, 32.0) if args.check else (1.0, 4.0, 16.0)
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={P}"
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from benchmarks.run import write_json  # noqa: E402
+
+CHUNK = 8
+MAX_SEQ = 64
+ARCH = "tinyllama-1.1b"
+
+
+def main():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import LM
+    from repro.serve import PipelinedEngine, poisson_requests, summarize
+
+    cfg = get_reduced(ARCH)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    eng = PipelinedEngine(cfg, params, P=P, chunk=CHUNK, max_seq=MAX_SEQ,
+                          n_slots=P)
+
+    def traffic(rate, seed):
+        return poisson_requests(NREQ, rate, chunk=CHUNK, max_seq=MAX_SEQ,
+                                prompt_range=(1, 3),
+                                gen_range=(4, 8 if args.check else 16),
+                                vocab=cfg.vocab_size, seed=seed)
+
+    # warmup: compile both branch shapes (prefill + decode) off the clock
+    eng.serve(traffic(100.0, seed=99)[:2], clock=None)
+
+    rows = []
+    for rate in RATES:
+        res = eng.serve(traffic(rate, seed=17))
+        s = summarize(res)
+        assert s["requests"] == NREQ, "requests lost"
+        rows.append((f"rate{rate:g}.tokens_per_s",
+                     1e6 / max(s["tokens_per_s"], 1e-9),
+                     {"tokens_per_s": round(s["tokens_per_s"], 1),
+                      "requests": s["requests"],
+                      "output_tokens": s["output_tokens"],
+                      "ticks": s["ticks"]}))
+        rows.append((f"rate{rate:g}.ttft", s["ttft_p50_s"] * 1e6,
+                     {"p50_s": round(s["ttft_p50_s"], 4),
+                      "p99_s": round(s["ttft_p99_s"], 4)}))
+        rows.append((f"rate{rate:g}.per_token", s["tok_p50_s"] * 1e6,
+                     {"p50_ms": round(s["tok_p50_s"] * 1e3, 2),
+                      "p99_ms": round(s["tok_p99_s"] * 1e3, 2)}))
+    name = "serve_check" if args.check else "serve"
+    path = write_json(name, rows)
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,12 @@
 #    -> scale-up) on 2 forced-host devices and writes
 #    BENCH_ft_recovery_check.json (the committed full record
 #    BENCH_ft_recovery.json is refreshed by running without --check).
+# 3d. Serving perf record: benchmarks/serve.py --check serves seeded
+#    Poisson traffic through the pipelined engine (seq-chunked prefill
+#    + steady-tick decode, continuous batching) at two arrival rates
+#    on 2 forced-host devices and writes BENCH_serve_check.json (the
+#    committed full record BENCH_serve.json is refreshed by running
+#    without --check).
 # 4. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).  The
 #    fault-injection suite (tests/test_ft_and_data.py crash-consistency
@@ -50,8 +56,9 @@ import sys
 sys.modules['jax'] = None          # poison: any 'import jax' raises
 sys.modules['jaxlib'] = None
 import repro.core.schedule, repro.core.schedules, repro.plan
+import repro.serve                 # admission layer + traffic gen
 "
-echo "ci.sh: analytical layer (schedule IR, generators, planner) imports jax-free"
+echo "ci.sh: analytical layer (schedule IR, generators, planner, serve scheduler) imports jax-free"
 
 PYTHONPATH=src python scripts/render_schedules.py --check
 PYTHONPATH=src python -m doctest docs/ARCHITECTURE.md docs/SCHEDULES.md
@@ -62,5 +69,8 @@ echo "ci.sh: executor perf record regenerated (BENCH_pipeline_exec_check.json)"
 
 python benchmarks/ft_recovery.py --check
 echo "ci.sh: elastic-recovery perf record regenerated (BENCH_ft_recovery_check.json)"
+
+python benchmarks/serve.py --check
+echo "ci.sh: pipelined-serving perf record regenerated (BENCH_serve_check.json)"
 
 exec python benchmarks/run.py --check "$@"

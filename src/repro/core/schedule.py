@@ -235,7 +235,8 @@ class Schedule:
     def check(self, tc: float = 0.0) -> None:
         P, v, m, ns = self.P, self.v, self.m, self.n_seq
         rcs = self.r_chunks()
-        kinds = 3 if self.has_w else 2
+        has_b = any(t.kind == B for t in self.tasks)
+        kinds = (3 if self.has_w else 2) if has_b else 1
         n_expect = (kinds * P * v * m + len(rcs) * P * m) * ns
         assert len(self.tasks) == n_expect, \
             f"expected {n_expect} tasks, got {len(self.tasks)}"

@@ -133,6 +133,12 @@ class TaskTable:
     def has_r(self) -> bool:
         return bool(self.rmt_depth)
 
+    @property
+    def fwd_only(self) -> bool:
+        """True for inference-prefill tables (no backward op anywhere):
+        act slots stay -1 and the KV ring closes at the last seq chunk."""
+        return not np.isin(self.op, B_OPS).any()
+
     def arrays(self):
         """Stacked int32 [T, P, 16] for device transfer.  Column order:
         op, chunk, mb, src_slot, act_slot, send, rcf_dn, rcf_up,
@@ -272,14 +278,28 @@ def build_task_table(sched: Schedule) -> TaskTable:
             depth[c] = worst
         return depth
 
+    # Forward-only schedules (inference prefill, repro.seqpipe
+    # ``forward_only``): no backward readers exist, so the activation /
+    # W-stash / remat rings degenerate — boundary payloads go straight
+    # to the wire and act slots stay -1.  Only the KV-carry ring
+    # survives (closing at the microbatch's last seq chunk instead of
+    # its first backward).
+    fwd_only = not any(t.kind == B for t in sched.tasks)
+
     # activation rings hold boundary payloads: lifetime F -> R for
     # rematerialized chunks (the remat tick takes over), F -> B otherwise.
     # W-stash rings (split backward: boundary payload + upstream grad
     # residuals) live B -> W; remat rings live R -> B.
-    act_depth = ring_depth(F, lambda c: R if c in rcs else B)
-    has_w = sched.has_w
-    wstash_depth: Dict[int, int] = ring_depth(B, W) if has_w else {}
-    rmt_depth: Dict[int, int] = ring_depth(R, B, sorted(rcs)) if rcs else {}
+    if fwd_only:
+        act_depth = {c: 1 for c in range(v)}
+        has_w = False
+        wstash_depth: Dict[int, int] = {}
+        rmt_depth: Dict[int, int] = {}
+    else:
+        act_depth = ring_depth(F, lambda c: R if c in rcs else B)
+        has_w = sched.has_w
+        wstash_depth = ring_depth(B, W) if has_w else {}
+        rmt_depth = ring_depth(R, B, sorted(rcs)) if rcs else {}
 
     # ---- seq-chunked extras ----
     # KV-carry ring: one slot per in-flight *microbatch* (all its seq
@@ -297,7 +317,12 @@ def build_task_table(sched: Schedule) -> TaskTable:
                 events = []
                 for i in range(m):
                     events.append((tick[(F, i, c, s, 0)], 1))
-                    events.append((tick[(B, i, c, s, 0)], -1))
+                    # fwd-only: the table's KV lifetime ends at the last
+                    # seq chunk (the serving engine then hands the slot
+                    # to the decode phase outside the table)
+                    close = tick[(F, i, c, s, ns - 1)] if fwd_only \
+                        else tick[(B, i, c, s, 0)]
+                    events.append((close, -1))
                 events.sort()
                 cur = peak = 0
                 for _, d in events:
@@ -305,6 +330,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
                     peak = max(peak, cur)
                 worst = max(worst, peak)
             kv_depth[c] = worst
+    if ns > 1 and not fwd_only:
         act_depth = {}
         close_kind = {c: (R if c in rcs else B) for c in range(v)}
         for c in range(v):
@@ -346,6 +372,8 @@ def build_task_table(sched: Schedule) -> TaskTable:
                     f_edges.append(((F, i, c, s, q), (F, i, c, s + 1, q)))
                 elif c < v - 1:
                     f_edges.append(((F, i, c, s, q), (F, i, c + 1, 0, q)))
+                if fwd_only:
+                    continue
                 if s > 0:
                     b_edges.append(((B, i, c, s, q), (B, i, c, s - 1, q)))
                 elif c > 0:
@@ -436,7 +464,7 @@ def build_task_table(sched: Schedule) -> TaskTable:
         # interval coloring otherwise); rematerialized chunks retire
         # their act slot at the R tick, so their B reads the remat ring
         if t.kind != W and oc not in (FWD_FIRST, BWD_FIRST, RCP_FIRST) \
-                and not (t.kind == B and t.chunk in rcs):
+                and not (t.kind == B and t.chunk in rcs) and not fwd_only:
             act[tt, d] = (t.mb % act_depth[t.chunk] if ns == 1
                           else act_color[(t.chunk, s, t.mb, q)])
         # input queue slot
@@ -535,6 +563,8 @@ def derive_slots(tab: TaskTable, op, chunk, mb, seq, np_=np):
         has_act = isin(F_OPS) | is_b | is_r
         has_act &= (op != FWD_FIRST) & (op != BWD_FIRST) & (op != RCP_FIRST)
         has_act &= ~(is_b & is_rc)
+        if tab.fwd_only:               # prefill tables carry no act ring
+            has_act = has_act & False
         out[COL_ACT] = np_.where(
             has_act, mb % depth_arr(tab.act_depth)[chunk], -1)
     return out
@@ -678,7 +708,7 @@ def validate_table(tab: TaskTable) -> None:
                    int(tab.seq[t, s]) if tab.seq is not None else 0)
             assert key not in seen, f"duplicate {key}"
             seen.add(key)
-    kinds = 3 if tab.has_w else 2
+    kinds = 1 if tab.fwd_only else (3 if tab.has_w else 2)
     assert len(seen) == (kinds * P * v * m
                          + len(tab.rmt_depth) * P * m) * ns
 
@@ -745,6 +775,7 @@ def validate_table(tab: TaskTable) -> None:
     # see its own slot, released at B[mb,0]).
     if ns > 1:
         rcs = set(tab.rmt_depth)
+        fwd_o = tab.fwd_only
         for s in range(P):
             live_act: Dict[Tuple[int, int], Tuple] = {}
             live_kv: Dict[Tuple[int, int], int] = {}   # (c, slot) -> mb
@@ -779,11 +810,17 @@ def validate_table(tab: TaskTable) -> None:
                             f"stage {s} tick {t}: KV slot {key} " \
                             f"reclaimed while mb {live_kv.get(key)} live"
                         live_kv[key] = mb
+                        # fwd-only, ns-boundary: release below
                     else:
                         assert live_kv.get(key) == mb, \
                             f"stage {s} tick {t}: KV slot {key} does " \
                             f"not hold mb {mb}"
-                        if is_b and q == 0:
+                    # fwd-only tables release at the last seq chunk
+                    # (serving hands the slot to decode outside the
+                    # table); training tables release at B[mb, 0]
+                    if (is_b and q == 0) or \
+                            (fwd_o and is_f and q == ns - 1):
+                        if key in live_kv:
                             del live_kv[key]
             assert not live_act, f"stage {s}: unread act slots {live_act}"
             assert not live_kv, f"stage {s}: unreleased KV slots {live_kv}"

@@ -1,37 +1,96 @@
-"""Serving entry point: batched prefill + decode loop with KV/SSM caches.
+"""Serving entry point: single-host batched prefill + decode, or the
+pipelined engine (seq-chunked prefill + steady-tick decode with
+continuous batching).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --batch 4 --prompt-len 32 --gen 16 [--reduced]
+        --batch 4 --prompt-len 32 --gen 16 [--full]
+    PYTHONPATH=src python -m repro.launch.serve --pipelined 2 \
+        --requests 8 --rate 4.0
 
-On real hardware the same step functions are built against the
-production mesh via ``launch.steps.make_serve_steps`` (what the dry-run
-compiles); this CLI drives them on the local devices.
+On real hardware the same constructions are built against the
+production mesh via ``launch.steps.make_serve_steps`` (single-host
+steps; what the dry-run compiles) and
+``launch.steps.make_pipelined_serve_steps`` (the engine, pp on the
+"pod" axis); this CLI drives them on the local devices.
+
+jax is imported inside ``main`` so ``--pipelined P`` can force enough
+host devices before the backend initialises.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, get_reduced
-from repro.models import LM
-
-
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # --reduced used to be store_true with default=True: impossible to
+    # turn off.  Keep both spellings; --full selects the paper-size
+    # config.
+    ap.add_argument("--reduced", dest="reduced", action="store_true",
+                    help="tiny smoke config (default)")
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="paper-size config")
+    ap.set_defaults(reduced=True)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    ap.add_argument("--pipelined", type=int, default=0, metavar="P",
+                    help="serve through a P-stage pipelined engine "
+                         "(continuous batching; greedy decoding)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill sequence-chunk length (pipelined)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="request slots (pipelined; default P)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic requests to serve (pipelined)")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, req/s (pipelined)")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.pipelined > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
+                                   f"count={args.pipelined}")
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_reduced
+    from repro.models import LM
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.key(0))
+
+    if args.pipelined > 1:
+        from repro.serve import PipelinedEngine, poisson_requests, summarize
+        max_seq = args.prompt_len + args.gen + 4 * args.chunk
+        eng = PipelinedEngine(cfg, params, P=args.pipelined,
+                              chunk=args.chunk, max_seq=max_seq,
+                              n_slots=args.slots or None)
+        reqs = poisson_requests(args.requests, args.rate,
+                                chunk=args.chunk, max_seq=max_seq,
+                                gen_range=(4, args.gen),
+                                vocab=cfg.vocab_size, seed=0)
+        res = eng.serve(reqs)
+        s = summarize(res)
+        print(f"[serve] arch={cfg.name} P={args.pipelined} "
+              f"slots={eng.n_slots} rate={args.rate}/s "
+              f"reqs={s['requests']} toks={s['output_tokens']} "
+              f"tok/s={s['tokens_per_s']:.1f}")
+        print(f"[serve] ttft p50={s['ttft_p50_s']:.3f}s "
+              f"p99={s['ttft_p99_s']:.3f}s | per-token "
+              f"p50={s['tok_p50_s'] * 1e3:.1f}ms "
+              f"p99={s['tok_p99_s'] * 1e3:.1f}ms (incl. compile)")
+        rec = res["finished"][0]
+        print(f"[serve] sample rid=0: {rec.tokens[:12]}")
+        return
+
     total = args.prompt_len + args.gen
     prompt = jax.random.randint(jax.random.key(1),
                                 (args.batch, args.prompt_len), 0,

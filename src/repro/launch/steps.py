@@ -276,6 +276,28 @@ def make_serve_steps(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
     return out
 
 
+def make_pipelined_serve_steps(cfg: ModelConfig, mesh, rules, lm_params,
+                               *, chunk: int, max_seq: int,
+                               n_slots: Optional[int] = None,
+                               kernels: str = "xla"):
+    """Pipelined serving on the production mesh: the model splits over
+    ``rules['pp']`` stages (the "pod" axis in the multi-pod mesh — same
+    placement as pipelined training: PP tolerates the thin inter-pod
+    links) and requests stream through as seq-chunked prefill waves +
+    steady-tick decode with continuous batching.
+
+    Returns the constructed :class:`repro.serve.PipelinedEngine`; drive
+    it with ``engine.serve(requests)`` (its per-tick step is jitted
+    internally against ``mesh``).  ``lm_params`` are single-host
+    ``LM.init`` parameters — the engine packs them into per-stage
+    blocks, so serving and training checkpoints share one layout."""
+    from repro.serve.engine import PipelinedEngine
+    pp_axis = rules["pp"]
+    return PipelinedEngine(cfg, lm_params, P=mesh.shape[pp_axis],
+                           chunk=chunk, max_seq=max_seq, n_slots=n_slots,
+                           mesh=mesh, axis=pp_axis, kernels=kernels)
+
+
 # ---------------------------------------------------------------------------
 # pipeline (multi-pod) train step
 # ---------------------------------------------------------------------------

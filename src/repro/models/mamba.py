@@ -159,15 +159,20 @@ def mamba_block(params, x, cfg: SSMConfig, *, cache: Optional[dict] = None,
                     "conv_B": conv_in_B[:, -(W - 1):],
                     "conv_C": conv_in_C[:, -(W - 1):]}
     else:
-        xr_c = _causal_conv(xr, params["conv_x"])
-        Bc_c = _causal_conv(Bc, params["conv_B"])
-        Cc_c = _causal_conv(Cc, params["conv_C"])
+        # prefill: seed the conv window from the cached tail so chunked
+        # prefill (serving) matches the full-sequence pass; a fresh
+        # zero cache is bitwise-identical to the zero left-padding.
+        c_of = lambda k: cache[k] if cache is not None else None
+        xr_c = _causal_conv(xr, params["conv_x"], c_of("conv_x"))
+        Bc_c = _causal_conv(Bc, params["conv_B"], c_of("conv_B"))
+        Cc_c = _causal_conv(Cc, params["conv_C"], c_of("conv_C"))
         new_conv = None
-        if cache is not None:    # prefill: save conv tail
-            pad = max(0, (W - 1) - S)
-            tail = lambda t: jnp.pad(t, ((0, 0), (pad, 0), (0, 0)))[:, -(W - 1):]
-            new_conv = {"conv_x": tail(xr), "conv_B": tail(Bc),
-                        "conv_C": tail(Cc)}
+        if cache is not None:    # carry the conv tail across chunks
+            tail = lambda old, t: jnp.concatenate(
+                [old.astype(t.dtype), t], axis=1)[:, -(W - 1):]
+            new_conv = {"conv_x": tail(cache["conv_x"], xr),
+                        "conv_B": tail(cache["conv_B"], Bc),
+                        "conv_C": tail(cache["conv_C"], Cc)}
 
     xr_c = jax.nn.silu(xr_c)
     Bc_c = jax.nn.silu(Bc_c)

@@ -416,6 +416,17 @@ class LM:
                                         cache_pos=0, **kw)
         return logits[:, -1], cache
 
+    def prefill_chunk(self, params, tokens, cache, pos0, **kw):
+        """Seq-chunked prefill: run ``tokens`` [B, Sc] at offset ``pos0``
+        against an existing cache (serving engine's unit of work).
+        Chunked prefill equals the full-sequence pass bitwise for
+        attention caches; SSM configs additionally need ``Sc`` to be a
+        multiple of ``cfg.ssm.chunk_len`` (the SSD scan's chunk grid
+        must land on the same boundaries)."""
+        logits, cache, _ = self.forward(params, tokens, cache=cache,
+                                        cache_pos=pos0, **kw)
+        return logits[:, -1], cache
+
     def decode_step(self, params, tokens1, cache, pos, **kw):
         """tokens1 [B,1]; pos: scalar int (same position for the batch)."""
         B = tokens1.shape[0]

@@ -175,6 +175,32 @@ def chronos_seq(P: int, m: int, v: int = 2, n_seq: int = 2,
     return _seqify(base, m, n_seq, cyc, name)
 
 
+# ---------------------------------------------------------------------------
+# forward_only: inference-serving derivation
+# ---------------------------------------------------------------------------
+
+def forward_only(sched: Schedule) -> Schedule:
+    """Strip a schedule to its forward tasks (inference prefill).
+
+    Serving needs no backward pass: a prompt streams through the P
+    stages as ``n_seq`` causally-ordered sequence chunks, each stage
+    appending to the microbatch's KV ring and handing the boundary
+    activation down.  Dropping every B/W/R task from a seq-chunked
+    schedule leaves a dependency-closed forward DAG (F tasks only ever
+    depend on F tasks: prev stage, prev layer-chunk hop, prev seq
+    chunk), which ``Schedule.check`` re-verifies.  Task times keep
+    their training-schedule values; ``build_task_table`` re-times by
+    topological tick assignment, so the gaps left by removed backwards
+    compress away.
+    """
+    tasks = [t for t in sched.tasks if t.kind == F]
+    out = dataclasses.replace(
+        sched, name=f"{sched.name}+fwd_only", tasks=tasks, w=0.0,
+        stored_frac={}, meta=dict(sched.meta, fwd_only=True))
+    out.check()
+    return out
+
+
 def register(registry: Dict) -> None:
     registry["seq1f1b"] = seq1f1b
     registry["chronos_seq"] = chronos_seq

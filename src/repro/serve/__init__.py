@@ -1,0 +1,27 @@
+"""Pipelined inference serving: seq-chunked prefill rides forward-only
+pipeline task tables, decode rides steady-state ticks (one token per
+pipeline revolution), and an Orca-style continuous-batching scheduler
+maps requests onto the pipeline's microbatch slots.
+
+jax-free pieces (:mod:`repro.serve.scheduler`,
+:mod:`repro.serve.traffic`) import cheaply; the engine pulls in jax.
+"""
+from repro.serve.scheduler import (DECODE, IDLE, IDLE_INJ, PREFILL,
+                                   FinishedRecord, Injection, Request,
+                                   SlotScheduler,
+                                   prefill_injection_order)
+from repro.serve.traffic import percentile, poisson_requests, summarize
+
+__all__ = [
+    "DECODE", "IDLE", "IDLE_INJ", "PREFILL", "FinishedRecord",
+    "Injection", "Request", "SlotScheduler", "prefill_injection_order",
+    "percentile", "poisson_requests", "summarize",
+    "PipelinedEngine", "pack_blocks",
+]
+
+
+def __getattr__(name):
+    if name in ("PipelinedEngine", "pack_blocks"):
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

@@ -1,0 +1,329 @@
+"""Pipelined inference serving engine.
+
+The model is split across ``P`` pipeline stages exactly like the
+training executors (``StageLayout``, v=1); inference then runs as a
+conveyor of per-tick waves:
+
+- **prefill**: a prompt streams through the stages in sequence chunks
+  of ``chunk`` tokens, back-to-back — the forward-only ``seq1f1b`` task
+  table's stage-0 order (``repro.seqpipe.forward_only``).  Each stage
+  appends the chunk's K/V (or advances the SSM state) in the request's
+  slot cache and hands the boundary activation down the wire.
+- **decode** rides steady-state ticks: a request slot re-enters the
+  pipe one token at a time, one token per pipeline revolution
+  (``P`` ticks), with every in-between tick free for other slots'
+  prefill chunks or decodes — continuous batching at iteration level.
+
+One jitted SPMD tick (``jax_compat.shard_map``, manual over the pp
+axis) runs all stages: stage ``s`` executes the injection made ``s``
+ticks ago (the ctl row travels with the wave), a single ``ppermute``
+moves boundary activations down, and the greedy head is evaluated on
+the last stage.  The per-stage body mirrors ``LM.forward`` layer by
+layer (scan over period-groups, Python loop over the period — the
+``chunk_fwd`` idiom), and slot cache views are shaped exactly like the
+single-host batch-1 caches, so the engine's token stream matches
+``LM.prefill_chunk`` + ``LM.decode_step`` (tests pin greedy tokens
+exactly and logits bitwise).
+
+SSM configs (mamba2/jamba) additionally require ``chunk`` to be a
+multiple of ``cfg.ssm.chunk_len`` so the SSD scan's chunk grid lands on
+the same boundaries as the reference; prompts are chunk-padded
+upstream.  ``kernels="fused"`` routes prefill through the Pallas
+backend (decode is S=1 and always takes the XLA path by design).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import jax_compat
+from repro.configs.base import ModelConfig
+from repro.core.pipeline_runtime import StageLayout
+from repro.models import layers as L
+from repro.models.backend import get_backend
+from repro.models.sharding import no_shard_hints
+from repro.models.transformer import LM, _apply_layer
+from repro.serve.kv_slots import init_slot_caches, read_slot, write_slot
+from repro.serve.scheduler import (IDLE, IDLE_INJ, Injection, Request,
+                                   SlotScheduler)
+
+CTL_W = 4                              # (op, slot, pos, first)
+
+
+def pack_blocks(lm: LM, params, layout: StageLayout) -> List:
+    """LM parameters -> stage-stacked blocks: a list over period
+    position ``jp`` of trees with leaves ``[P, M, ...]``, where
+    ``blocks[jp]`` leaf ``[d, m]`` holds global layer
+    ``layout.global_idx(d, 0, m * period + jp)``.  Padding layers
+    (``g >= L``, gate 0) get zero parameters of the right structure.
+    Weights are the *same arrays* as the single-host model — no
+    re-init, so engine and reference compute the identical network."""
+    cfg = lm.cfg
+    per, M = layout.period, layout.M
+    assert layout.v == 1
+
+    def lm_layer(g):
+        if g < lm.num_periods * lm.period:
+            return jax.tree.map(lambda a: a[g // lm.period],
+                                params["layers"][g % lm.period])
+        return params["rem_layers"][g - lm.num_periods * lm.period]
+
+    def pad_proto(jp):
+        real = [g for g in range(cfg.num_layers) if g % per == jp % per]
+        assert real, f"no real layer shares period position {jp}"
+        return jax.tree.map(jnp.zeros_like, lm_layer(real[0]))
+
+    blocks = []
+    for jp in range(per):
+        rows = []
+        for d in range(layout.P):
+            col = []
+            for mi in range(M):
+                g = layout.global_idx(d, 0, mi * per + jp)
+                col.append(lm_layer(g) if g < cfg.num_layers
+                           else pad_proto(jp))
+            rows.append(jax.tree.map(lambda *a: jnp.stack(a), *col))
+        blocks.append(jax.tree.map(lambda *a: jnp.stack(a), *rows))
+    return blocks
+
+
+class PipelinedEngine:
+    """Seq-chunked prefill + steady-tick decode over ``P`` stages.
+
+    ``lm_params`` are single-host ``LM.init`` parameters (packed into
+    stage blocks internally).  ``mesh``/``axis`` default to a fresh
+    1-axis ``pp`` mesh over ``P`` devices; pass a production mesh and
+    its pipeline axis (e.g. ``"pod"``) to serve on a shared mesh
+    (``repro.launch.steps.make_pipelined_serve_steps``)."""
+
+    def __init__(self, cfg: ModelConfig, lm_params, *, P: int,
+                 chunk: int, max_seq: int, n_slots: Optional[int] = None,
+                 mesh=None, axis: str = "pp", kernels: str = "xla"):
+        self.cfg = cfg
+        self.P = P
+        self.chunk = chunk
+        self.max_seq = max_seq
+        self.n_slots = n_slots if n_slots is not None else P
+        self.axis = axis
+        self.kernels = kernels
+        if cfg.ssm is not None:
+            assert chunk % cfg.ssm.chunk_len == 0, \
+                f"prefill chunk {chunk} must align with the SSD scan " \
+                f"grid (cfg.ssm.chunk_len={cfg.ssm.chunk_len})"
+        self.lm = LM(cfg)
+        self.layout = StageLayout.build(cfg, P, 1)
+        self.mesh = mesh if mesh is not None \
+            else jax_compat.make_mesh((P,), (axis,))
+        assert dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape))[axis] == P, \
+            f"mesh axis {axis!r} must have size P={P}"
+        self.blocks = pack_blocks(self.lm, lm_params, self.layout)
+        self.shared = {"embed": lm_params["embed"],
+                       "final_norm": lm_params["final_norm"]}
+        fl = self.layout.flags(cfg)
+        self.flags = {k: jnp.asarray(a[:, 0]) for k, a in fl.items()}
+        self.caches = init_slot_caches(cfg, self.layout, self.n_slots,
+                                       max_seq)
+        self.wire = jnp.zeros((P, chunk, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+        self._tick_fn = self._build_tick()
+        self._hist: List[Injection] = []     # hist[k] = inj at tick t-k
+
+    # -- compiled tick ----------------------------------------------------
+    def _build_tick(self):
+        cfg = self.cfg
+        P_, Sc, per = self.P, self.chunk, self.layout.period
+        pp = self.axis
+        dtype = jnp.dtype(cfg.compute_dtype)
+        bk = get_backend(self.kernels)
+
+        def vary(x):
+            return jax.tree.map(
+                lambda a: jax_compat.to_varying(a, pp), x)
+
+        def spmd(stage_iota, blocks, shared, flags, caches, ctl,
+                 tokens, wire):
+            s = stage_iota[0]
+            loc = lambda t: jax.tree.map(lambda a: a[0], t)  # noqa: E731
+            blocks_s, caches_s = loc(blocks), loc(caches)
+            flags_s = loc(flags)
+            ctl_row, tok_row, wire_row = ctl[0], tokens[0], wire[0]
+            op, slot, pos = ctl_row[0], ctl_row[1], ctl_row[2]
+            first = ctl_row[3]
+
+            def head(x):               # [1, S, d] -> logits [1, S, V]
+                h = L.rmsnorm(shared["final_norm"], x, cfg.norm_eps)
+                return L.unembed(shared["embed"], h)
+
+            def run_stack(views, x, positions):
+                """Mirror of ``LM._stack`` over this stage's layers:
+                scan over the M period-groups, Python loop over the
+                period (the ``chunk_fwd`` idiom)."""
+                def body(x, xs):
+                    ptrees, ctrees, win, gate = xs
+                    new_c = []
+                    for jp in range(per):
+                        x, nc, _ = _apply_layer(
+                            ptrees[jp], x, positions, cfg, jp,
+                            cache=ctrees[jp], cache_pos=pos,
+                            window_override=win[jp], gate=gate[jp],
+                            backend=bk)
+                        new_c.append(nc)
+                    return x, new_c
+                x, new_views = jax.lax.scan(
+                    body, x, (blocks_s, views, flags_s["window"],
+                              flags_s["gate"]))
+                return x, new_views
+
+            # stage-0 input: embedded tokens; later stages: the wire
+            emb = L.embed(shared["embed"], tok_row[None])
+            emb = emb * jnp.asarray(cfg.d_model ** 0.5, emb.dtype)
+            emb = vary(emb.astype(dtype))
+            x0 = jnp.where(s == 0, emb, wire_row[None])   # [1, Sc, d]
+
+            view = read_slot(caches_s, slot)
+
+            def br_idle(_):
+                return (jnp.zeros((Sc, cfg.d_model), dtype),
+                        jnp.zeros((cfg.vocab_size,), dtype), view)
+
+            def br_prefill(_):
+                # first chunk: zero the slot's carried state (stale
+                # SSM/conv state must not leak; zeroed K/V keeps the
+                # slot bitwise-equal to a fresh single-host cache)
+                v0 = [jax.tree.map(
+                    lambda a: jnp.where(first > 0, jnp.zeros_like(a), a),
+                    t) for t in view]
+                positions = jnp.broadcast_to(
+                    (pos + jnp.arange(Sc))[None], (1, Sc))
+                x, nv = run_stack(v0, x0, positions)
+                logits = head(x)[0, -1]
+                return x[0], logits, nv
+
+            def br_decode(_):
+                positions = jnp.full((1, 1), pos, jnp.int32)
+                x, nv = run_stack(view, x0[:, :1], positions)
+                logits = head(x)[0, -1]
+                x_out = jnp.zeros((Sc, cfg.d_model), dtype)
+                x_out = x_out.at[0].set(x[0, 0])
+                return x_out, logits, nv
+
+            x_out, logits, new_view = jax.lax.switch(
+                jnp.clip(op, 0, 2), [br_idle, br_prefill, br_decode],
+                None)
+            caches_s = write_slot(caches_s, new_view, slot)
+            perm = [(i, i + 1) for i in range(P_ - 1)]
+            if perm:
+                w_out = jax.lax.ppermute(x_out, pp, perm)
+            else:
+                w_out = jnp.zeros_like(x_out)
+            tok = jnp.argmax(logits).astype(jnp.int32)
+            tok = jnp.where(op > 0, tok, jnp.int32(-1))
+            re = lambda t: jax.tree.map(lambda a: a[None], t)  # noqa: E731
+            return (re(caches_s), w_out[None], tok[None], logits[None])
+
+        def spmd_entry(*args):
+            if jax_compat.HAS_VMA:
+                return spmd(*args)
+            with no_shard_hints():
+                return spmd(*args)
+
+        sharded, rep = P(pp), P()
+        fn = jax_compat.shard_map(
+            spmd_entry, mesh=self.mesh,
+            in_specs=(sharded, sharded, rep, sharded, sharded, sharded,
+                      sharded, sharded),
+            out_specs=(sharded, sharded, sharded, sharded),
+            manual_axes={pp})
+        return jax.jit(fn, donate_argnums=(4, 7))
+
+    # -- per-tick driver --------------------------------------------------
+    def _ctl_rows(self) -> np.ndarray:
+        rows = np.zeros((self.P, CTL_W), np.int32)
+        for s in range(self.P):
+            inj = self._hist[s] if s < len(self._hist) else IDLE_INJ
+            rows[s] = (inj.op, inj.slot, inj.pos, inj.first)
+        return rows
+
+    def tick(self, inj: Injection):
+        """Inject ``inj`` at stage 0 and advance every wave one stage.
+        Returns ``(retired_injection, token, logits)`` for the wave
+        that just exited the last stage (injection from ``P - 1`` ticks
+        ago; token is -1 for IDLE waves)."""
+        self._hist.insert(0, inj)
+        toks = np.zeros((self.chunk,), np.int32)
+        toks[:len(inj.tokens)] = inj.tokens
+        tokens = np.tile(toks[None], (self.P, 1))
+        stage_iota = jnp.arange(self.P, dtype=jnp.int32)
+        self.caches, self.wire, tok, logits = self._tick_fn(
+            stage_iota, self.blocks, self.shared, self.flags,
+            self.caches, jnp.asarray(self._ctl_rows()),
+            jnp.asarray(tokens), self.wire)
+        retired = self._hist.pop() if len(self._hist) == self.P \
+            else IDLE_INJ
+        return retired, int(tok[self.P - 1]), logits[self.P - 1]
+
+    # -- serving loop -----------------------------------------------------
+    def serve(self, requests: List[Request], *,
+              preempt_after: Optional[int] = None,
+              clock: Optional[str] = "wall",
+              max_ticks: int = 1_000_000) -> Dict:
+        """Serve ``requests`` (arrivals ordered by ``arrival_s``) to
+        completion with continuous batching; greedy decoding.
+
+        ``clock="wall"`` admits arrivals by wall time (the benchmark
+        mode); ``clock=None`` admits everything immediately
+        (deterministic, used by the equivalence tests).  Returns
+        ``{"finished": {rid: FinishedRecord}, "metrics": {rid: {...}},
+        "elapsed_s", "ticks"}`` with per-request TTFT / per-token
+        wall-clock latencies."""
+        sched = SlotScheduler(self.n_slots, self.chunk, self.max_seq,
+                              preempt_after=preempt_after)
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        t_first: Dict[int, float] = {}
+        t_sub: Dict[int, float] = {}
+        tok_times: Dict[int, List[float]] = {}
+        n_out = 0
+        t0 = time.perf_counter()
+        ticks = 0
+        while ticks < max_ticks:
+            now = time.perf_counter() - t0
+            while pending and (clock != "wall"
+                               or pending[0].arrival_s <= now):
+                req = pending.pop(0)
+                t_sub[req.rid] = max(req.arrival_s, now) \
+                    if clock == "wall" else 0.0
+                sched.submit(req)
+            inj = sched.next_injection()
+            retired, token, _ = self.tick(inj)
+            ticks += 1
+            if retired.sample and retired.op != IDLE:
+                sched.on_result(retired, token)
+                t = time.perf_counter() - t0
+                if retired.rid in sched.finished \
+                        or retired.rid in {a.req.rid
+                                           for a in sched.active.values()}:
+                    t_first.setdefault(retired.rid, t)
+                    tok_times.setdefault(retired.rid, []).append(t)
+                    n_out += 1
+            if not pending and sched.idle and all(
+                    h.op == IDLE for h in self._hist):
+                break
+        elapsed = time.perf_counter() - t0
+        metrics = {}
+        for rid, rec in sched.finished.items():
+            ts = tok_times.get(rid, [])
+            metrics[rid] = {
+                "ttft_s": (t_first[rid] - t_sub.get(rid, 0.0))
+                if rid in t_first else None,
+                "per_token_s": [b - a for a, b in zip(ts, ts[1:])],
+                "n_tokens": len(rec.tokens),
+            }
+        return {"finished": sched.finished, "metrics": metrics,
+                "elapsed_s": elapsed, "ticks": ticks,
+                "tokens_per_s": n_out / max(elapsed, 1e-9)}

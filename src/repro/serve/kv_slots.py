@@ -1,0 +1,58 @@
+"""Slot-indexed per-request cache storage for the pipelined engine.
+
+Each pipeline stage owns the KV / SSM-state caches of its layers only,
+stacked ``[P, M, n_slots, max_seq, ...]`` (``[P, M, n_slots, ...]`` for
+per-request SSM state): the task-table ring idea applied to serving —
+the microbatch slot of the training schedules becomes a *request slot*,
+and the slot axis sits where the reference ``LM.init_cache`` puts its
+batch axis.  A sliced slot view is therefore shaped exactly like a
+single-host batch-1 cache (same buffer length ``max_seq``), which is
+what makes the engine's compute bitwise-comparable to
+``LM.prefill_chunk`` / ``LM.decode_step``.
+
+Layer kinds repeat with the stage layout's structural period, so the
+cache pytree is a list over the period position ``jp`` — identical
+across stages and period-groups — with leaves batched ``[P, M]`` in
+front (mirroring ``init_pipeline_params`` for parameters).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline_runtime import StageLayout
+from repro.models.transformer import _init_cache_layer
+
+
+def init_slot_caches(cfg, layout: StageLayout, n_slots: int,
+                     max_seq: int) -> List:
+    """Zero caches for every (stage, period-group, layer, slot): a list
+    over ``jp < layout.period`` of trees with leaves
+    ``[P, M, n_slots, ...]`` (batch axis of the per-layer cache =
+    slot)."""
+    assert layout.v == 1, "serving uses v=1 (no interleaving)"
+    out = []
+    for jp in range(layout.period):
+        one = _init_cache_layer(cfg, jp, n_slots, max_seq, 0)
+        out.append(jax.tree.map(
+            lambda a: jnp.zeros((layout.P, layout.M) + a.shape, a.dtype),
+            one))
+    return out
+
+
+def read_slot(caches_local: List, slot) -> List:
+    """Stage-local caches (leaves ``[M, n_slots, ...]``) -> the batch-1
+    view of one slot (leaves ``[M, 1, ...]``).  ``slot`` may be traced."""
+    return [jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), t)
+        for t in caches_local]
+
+
+def write_slot(caches_local: List, view: List, slot) -> List:
+    """Write an updated slot view back (inverse of :func:`read_slot`)."""
+    return [jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u, slot,
+                                                         axis=1), t, u_t)
+        for t, u_t in zip(caches_local, view)]

@@ -1,0 +1,253 @@
+"""Continuous-batching admission layer (Orca-style iteration-level
+scheduling) for the pipelined serving engine.
+
+jax-free on purpose: the scheduler is pure host-side bookkeeping that
+maps requests onto the engine's microbatch **slots** and decides, tick
+by tick, what enters the pipeline at stage 0.  The engine (or the test
+fakes) drives it through a two-call protocol:
+
+- :meth:`SlotScheduler.next_injection` — called once per pipeline tick;
+  returns the :class:`Injection` to feed stage 0 (possibly ``IDLE``).
+- :meth:`SlotScheduler.on_result` — called when that injection's wave
+  exits the last stage ``P - 1`` ticks later with the sampled token.
+
+Scheduling rules (all deterministic):
+
+- **admission**: FIFO queue -> lowest free slot, as soon as one drains
+  (iteration-level: a retiring request frees its slot for the next
+  queued prompt immediately, no batch barrier).
+- **prefill** streams a prompt through the stages in sequence chunks of
+  ``chunk`` tokens, back-to-back — one chunk per tick, microbatch-major,
+  exactly the stage-0 injection order of the forward-only
+  ``seq1f1b`` task table (:func:`prefill_injection_order`; pinned by
+  ``tests/test_serve.py``).  Only the last chunk samples.
+- **decode** rides steady-state ticks: slot ``k``'s next token can be
+  injected the tick after its previous sample returns, i.e. one token
+  per pipeline revolution (``P`` ticks).  Ready decodes win over
+  prefill chunks (latency first), oldest-ready first.
+- **preemption** (longest-first eviction): when the queue head has
+  waited more than ``preempt_after`` ticks with no free slot, the
+  active request with the most generated tokens (not mid-sample) is
+  evicted and requeued at the back; each request is preempted at most
+  once and restarts from scratch — greedy decoding regenerates the
+  identical token stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+IDLE, PREFILL, DECODE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: ``prompt`` token ids, generate ``max_new``
+    tokens greedily.  ``arrival_s`` orders Poisson traffic replay."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Injection:
+    """What stage 0 consumes this tick (one row of the engine's ctl).
+
+    ``op``: IDLE/PREFILL/DECODE; ``slot``: request slot; ``pos``: write
+    offset into the slot's KV/SSM cache; ``first``: 1 on a request's
+    first prefill chunk (the engine zeroes the slot's carried state —
+    stale SSM/conv state from the slot's previous tenant must not leak,
+    and attention K/V is zeroed along with it so the slot equals a
+    fresh single-host cache bitwise); ``tokens``: the chunk (prefill)
+    or the previous sampled token (decode); ``sample``: the head output
+    of this wave is consumed (last prefill chunk + every decode)."""
+    op: int
+    slot: int = 0
+    pos: int = 0
+    first: int = 0
+    tokens: Tuple[int, ...] = ()
+    sample: bool = False
+    rid: int = -1
+
+
+IDLE_INJ = Injection(op=IDLE)
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    slot: int
+    admit_tick: int
+    chunks: deque          # remaining prefill chunks: (pos, tokens)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    inflight: bool = False          # a sampling wave is in the pipe
+    next_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FinishedRecord:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    submit_tick: int
+    admit_tick: int
+    first_token_tick: int
+    done_tick: int
+    preemptions: int
+
+
+class SlotScheduler:
+    """Maps requests onto ``n_slots`` pipeline slots; see module doc."""
+
+    def __init__(self, n_slots: int, chunk: int, max_seq: int,
+                 preempt_after: Optional[int] = None):
+        assert n_slots >= 1 and chunk >= 1
+        self.n_slots, self.chunk, self.max_seq = n_slots, chunk, max_seq
+        self.preempt_after = preempt_after
+        self.queue: deque = deque()          # (submit_tick, Request)
+        self.active: Dict[int, _Active] = {}     # slot -> state
+        self.ready: deque = deque()          # slots with a token to feed
+        self.finished: Dict[int, FinishedRecord] = {}
+        self.preemptions: Dict[int, int] = {}    # rid -> times evicted
+        self._first_tick: Dict[int, int] = {}    # rid -> first-token tick
+        self._submit_tick: Dict[int, int] = {}
+        self.tick = 0
+
+    # -- intake -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new <= self.max_seq, \
+            f"request {req.rid} exceeds max_seq {self.max_seq}"
+        assert len(req.prompt) >= 1 and req.max_new >= 1
+        assert len(req.prompt) % self.chunk == 0, \
+            f"prompt len {len(req.prompt)} not a multiple of the " \
+            f"prefill chunk {self.chunk} (pad upstream)"
+        self._submit_tick.setdefault(req.rid, self.tick)
+        self.queue.append(req)
+
+    @property
+    def idle(self) -> bool:
+        """No admitted, queued, or in-flight work left."""
+        return not self.queue and not self.active
+
+    # -- per-tick protocol ------------------------------------------------
+    def next_injection(self) -> Injection:
+        self.tick += 1
+        self._maybe_preempt()
+        self._admit()
+        # ready decodes first (oldest first): one token per revolution
+        if self.ready:
+            slot = self.ready.popleft()
+            a = self.active[slot]
+            tok = a.next_token
+            a.next_token = None
+            a.inflight = True
+            # the fed token is generated[-1], written at this position
+            pos = len(a.req.prompt) + len(a.generated) - 1
+            return Injection(op=DECODE, slot=slot, pos=pos,
+                             tokens=(tok,), sample=True, rid=a.req.rid)
+        # else advance a prefilling request in admission order; all of
+        # one request's chunks go back-to-back — the microbatch-major
+        # stage-0 order of the forward-only seq1f1b table
+        for a in sorted(self.active.values(),
+                        key=lambda a: (a.admit_tick, a.slot)):
+            if not a.chunks:
+                continue
+            pos, toks = a.chunks.popleft()
+            last = not a.chunks
+            if last:
+                a.inflight = True
+            return Injection(op=PREFILL, slot=a.slot, pos=pos,
+                             first=int(pos == 0), tokens=toks,
+                             sample=last, rid=a.req.rid)
+        return IDLE_INJ
+
+    def on_result(self, inj: Injection, token: int) -> None:
+        """Deliver the sampled token of ``inj``'s wave (the engine calls
+        this ``P - 1`` ticks after injection, when the wave has exited
+        the last stage)."""
+        if inj.op == IDLE or not inj.sample:
+            return
+        a = self.active.get(inj.slot)
+        if a is None or a.req.rid != inj.rid:
+            return                         # slot preempted/retired: stale
+        a.inflight = False
+        a.generated.append(int(token))
+        rid = a.req.rid
+        if rid not in self._first_tick:
+            self._first_tick[rid] = self.tick
+        if len(a.generated) >= a.req.max_new:
+            self._finish(inj.slot, a)
+        else:
+            a.next_token = int(token)
+            self.ready.append(inj.slot)
+
+    # -- internals --------------------------------------------------------
+    def _chunks_of(self, req: Request) -> deque:
+        c = self.chunk
+        return deque((q * c, tuple(req.prompt[q * c:(q + 1) * c]))
+                     for q in range(len(req.prompt) // c))
+
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.n_slots:
+            req = self.queue.popleft()
+            slot = min(set(range(self.n_slots)) - set(self.active))
+            assert slot not in self.active, "slot double-allocation"
+            self.active[slot] = _Active(req=req, slot=slot,
+                                        admit_tick=self.tick,
+                                        chunks=self._chunks_of(req))
+
+    def _maybe_preempt(self) -> None:
+        if (self.preempt_after is None or not self.queue
+                or len(self.active) < self.n_slots):
+            return
+        head = self.queue[0]
+        waited = self.tick - self._submit_tick[head.rid]
+        if waited <= self.preempt_after:
+            return
+        # longest-first: evict the (not mid-sample, not already
+        # preempted) request with the most generated tokens
+        victims = [a for a in self.active.values()
+                   if not a.inflight
+                   and self.preemptions.get(a.req.rid, 0) == 0]
+        if not victims:
+            return
+        v = max(victims, key=lambda a: (len(a.generated), -a.slot))
+        self.preemptions[v.req.rid] = \
+            self.preemptions.get(v.req.rid, 0) + 1
+        if v.slot in self.ready:
+            self.ready.remove(v.slot)
+        del self.active[v.slot]
+        self._first_tick.pop(v.req.rid, None)
+        self.queue.append(v.req)           # restart from scratch later
+
+    def _finish(self, slot: int, a: _Active) -> None:
+        rid = a.req.rid
+        self.finished[rid] = FinishedRecord(
+            rid=rid, tokens=list(a.generated),
+            prompt_len=len(a.req.prompt),
+            submit_tick=self._submit_tick[rid],
+            admit_tick=a.admit_tick,
+            first_token_tick=self._first_tick[rid],
+            done_tick=self.tick,
+            preemptions=self.preemptions.get(rid, 0))
+        del self.active[slot]              # slot drains -> next admit
+
+
+def prefill_injection_order(P: int, m: int, n_seq: int,
+                            schedule: str = "seq1f1b") -> List[Tuple[int,
+                                                                     int]]:
+    """Stage-0 (mb, seq-chunk) injection order of the forward-only task
+    table — what the pipeline actually executes when ``m`` prompts of
+    ``n_seq`` chunks stream through ``P`` stages.  The admission layer's
+    back-to-back chunk policy replays exactly this order
+    (microbatch-major); ``tests/test_serve.py`` pins the equivalence,
+    keeping the F-only table an honest model of the serving engine."""
+    from repro.core.tasktable import IDLE as OP_IDLE
+    from repro.core.tasktable import build_task_table
+    from repro.seqpipe.schedules import forward_only, seq1f1b
+    assert schedule == "seq1f1b", "only seq1f1b prefill tables for now"
+    tab = build_task_table(forward_only(seq1f1b(P, m, n_seq)))
+    return [(int(tab.mb[t, 0]), int(tab.seq[t, 0]))
+            for t in range(tab.T) if tab.op[t, 0] != OP_IDLE]

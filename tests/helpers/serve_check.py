@@ -1,0 +1,77 @@
+"""Subprocess helper: token-stream equivalence of the pipelined serving
+engine against the single-host ``LM.prefill_chunk`` / ``LM.decode_step``
+reference (greedy decoding).
+
+Usage: python serve_check.py <arch> <P> [chunk] [n_slots] [preempt] \
+           [kernels]
+Exits 0 on success; prints MATCH=... rows for the parent test to parse.
+"""
+import os
+import sys
+
+arch = sys.argv[1]
+P_ = int(sys.argv[2])
+chunk = int(sys.argv[3]) if len(sys.argv) > 3 else 16
+n_slots = int(sys.argv[4]) if len(sys.argv) > 4 else P_
+preempt = int(sys.argv[5]) if len(sys.argv) > 5 else 0
+kernels = sys.argv[6] if len(sys.argv) > 6 else "xla"
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core.schedules  # noqa: E402,F401  (registry import order)
+from repro.configs import get_reduced  # noqa: E402
+from repro.models import LM  # noqa: E402
+from repro.serve import PipelinedEngine, Request  # noqa: E402
+
+cfg = get_reduced(arch)
+max_seq = 4 * chunk + 32
+lm = LM(cfg)
+params, _ = lm.init(jax.random.key(0))
+
+rng = np.random.default_rng(7)
+reqs = []
+for rid in range(2 * n_slots + 1):
+    plen = chunk * int(rng.integers(1, 4))
+    prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(int)
+    reqs.append(Request(rid=rid, prompt=prompt.tolist(),
+                        max_new=int(rng.integers(3, 9))))
+
+
+def reference(req):
+    cache = lm.init_cache(1, max_seq)
+    toks = np.asarray(req.prompt)[None]
+    pos = 0
+    for q in range(len(req.prompt) // chunk):
+        logits, cache = lm.prefill_chunk(
+            params, toks[:, q * chunk:(q + 1) * chunk], cache, pos)
+        pos += chunk
+    out = [int(np.argmax(np.asarray(logits)[0]))]
+    while len(out) < req.max_new:
+        logits, cache = lm.decode_step(
+            params, np.asarray([[out[-1]]]), cache, pos)
+        pos += 1
+        out.append(int(np.argmax(np.asarray(logits)[0])))
+    return out
+
+
+eng = PipelinedEngine(cfg, params, P=P_, chunk=chunk, max_seq=max_seq,
+                      n_slots=n_slots, kernels=kernels)
+res = eng.serve(reqs, clock=None,
+                preempt_after=preempt if preempt > 0 else None)
+
+ok = True
+assert set(res["finished"]) == {r.rid for r in reqs}, "requests lost"
+for req in reqs:
+    got = res["finished"][req.rid].tokens
+    want = reference(req)
+    match = got == want
+    ok = ok and match
+    print(f"MATCH={int(match)} rid={req.rid} plen={len(req.prompt)} "
+          f"gen={req.max_new} got={got[:6]} want={want[:6]}")
+npre = sum(r.preemptions for r in res["finished"].values())
+print(f"TICKS={res['ticks']} PREEMPTIONS={npre}")
+if preempt > 0:
+    assert npre > 0, "preemption path not exercised"
+sys.exit(0 if ok else 1)

@@ -1,0 +1,321 @@
+"""Pipelined serving subsystem.
+
+Four layers of coverage:
+
+- **forward-only task tables**: ``forward_only`` strips a training
+  schedule to its F tasks and the result still builds, validates, and
+  phase-factors exactly (the prefill pipeline reuses the training
+  executor machinery); the admission layer's back-to-back chunk policy
+  replays the table's stage-0 injection order.
+- **admission-layer properties** (jax-free, driven by a fake pipeline):
+  no slot double-allocation, every admitted request completes (with
+  preemption: evicted at most once and still completes), and greedy
+  output streams are independent of arrival order.
+- **single-host serving primitives**: ``LM.prefill_chunk`` chains
+  bitwise-equal to the full-sequence ``prefill`` and repeated
+  ``decode_step`` greedy tokens match the full-forward argmax for all
+  three cache families (dense GQA KV, mamba2 SSM state, jamba hybrid).
+- **pipelined-vs-single-host equivalence** (subprocess, forced host
+  devices): the engine's token streams equal the
+  ``prefill_chunk``/``decode_step`` reference exactly (tinyllama at
+  P=2 in the fast tier; mamba2/jamba and the P=4 + preemption sweep
+  ride the slow tier).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.core.schedules  # noqa: F401  (registry import order)
+from repro.core.schedule import B, F, W
+from repro.core.tasktable import (IDLE, build_task_table, factor_phases,
+                                  replay_phases, validate_table)
+from repro.seqpipe.schedules import chronos_seq, forward_only, seq1f1b
+from repro.serve import (DECODE, IDLE_INJ, PREFILL, Request,
+                         SlotScheduler, prefill_injection_order)
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "serve_check.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# forward-only task tables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P,m,ns", [(2, 4, 2), (4, 6, 3), (4, 8, 4)])
+def test_forward_only_strips_to_f_and_revalidates(P, m, ns):
+    sched = forward_only(seq1f1b(P, m, ns))
+    assert all(t.kind == F for t in sched.tasks)
+    assert len(sched.tasks) == P * m * ns
+    assert sched.meta["fwd_only"] is True
+    tab = build_task_table(sched)
+    assert tab.fwd_only
+    validate_table(tab)
+
+
+@pytest.mark.parametrize("mk", [
+    lambda: seq1f1b(4, 6, 2),
+    lambda: chronos_seq(4, 4, v=2, n_seq=2),
+])
+def test_forward_only_phase_factorization_roundtrip(mk):
+    """F-only tables phase-factor and replay tick-exactly — prefill
+    reuses the traced-once phase executor machinery unchanged."""
+    tab = build_task_table(forward_only(mk()))
+    plan = factor_phases(tab)
+    rep = replay_phases(tab, plan)
+    assert np.array_equal(rep, tab.arrays())
+
+
+def test_forward_only_backward_variants_agree():
+    """Schedules differing only in backward structure (1F1B vs split
+    B/W) strip to the same forward skeleton."""
+    a = forward_only(seq1f1b(4, 6, 2))
+    b_tasks = {(t.kind, t.mb, t.stage, t.seq)
+               for t in forward_only(seq1f1b(4, 6, 2, split=True)).tasks}
+    assert {(t.kind, t.mb, t.stage, t.seq) for t in a.tasks} == b_tasks
+    assert not any(t.kind in (B, W) for t in a.tasks)
+
+
+def test_prefill_injection_order_matches_scheduler_policy():
+    """The admission layer's back-to-back chunk policy (admission
+    order, one chunk per tick) replays the forward-only seq1f1b
+    table's stage-0 injection order — the F-only table stays an honest
+    model of what the serving engine executes."""
+    P, m, ns, chunk = 4, 3, 4, 8
+    want = prefill_injection_order(P, m, ns)
+    assert len(want) == m * ns
+    sched = SlotScheduler(n_slots=m, chunk=chunk, max_seq=chunk * ns + 8)
+    for rid in range(m):
+        sched.submit(Request(rid=rid, prompt=list(range(chunk * ns)),
+                             max_new=1))
+    got = []
+    while len(got) < m * ns:
+        inj = sched.next_injection()
+        assert inj.op == PREFILL
+        got.append((inj.slot, inj.pos // chunk))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# admission-layer properties (fake pipeline)
+# ---------------------------------------------------------------------------
+
+def _fake_serve(reqs, *, n_slots, P=4, chunk=4, max_seq=64,
+                preempt_after=None, max_ticks=40_000):
+    """Drive the scheduler against a depth-P fake pipeline whose
+    "model" deterministically maps (rid, step) -> token, recording
+    slot-occupancy invariants every tick."""
+    sched = SlotScheduler(n_slots, chunk, max_seq,
+                          preempt_after=preempt_after)
+    for r in reqs:
+        sched.submit(r)
+    hist = []
+    ticks = 0
+    while not sched.idle or hist:
+        assert ticks < max_ticks, "fake serve did not converge"
+        ticks += 1
+        # invariant: each slot holds one request, each rid one slot
+        rids = [a.req.rid for a in sched.active.values()]
+        assert len(rids) == len(set(rids)), "rid in two slots"
+        assert set(sched.active) <= set(range(n_slots))
+        hist.insert(0, sched.next_injection())
+        if len(hist) == P:
+            inj = hist.pop()
+            if inj.op != IDLE_INJ.op and inj.sample:
+                a = sched.active.get(inj.slot)
+                step = (0 if a is None or a.req.rid != inj.rid
+                        else len(a.generated))
+                sched.on_result(inj, 1000 * inj.rid + step)
+        if sched.idle and all(h.op == IDLE_INJ.op for h in hist):
+            break
+    return sched
+
+
+def _mk_reqs(n, seed=0, chunk=4):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=[1] * (chunk * int(rng.integers(1, 4))),
+                    max_new=int(rng.integers(1, 7))) for i in range(n)]
+
+
+@pytest.mark.parametrize("n_slots,n_req", [(1, 3), (2, 7), (4, 13)])
+def test_scheduler_all_requests_complete_exactly_once(n_slots, n_req):
+    reqs = _mk_reqs(n_req, seed=n_slots)
+    sched = _fake_serve(reqs, n_slots=n_slots)
+    assert set(sched.finished) == {r.rid for r in reqs}
+    for r in reqs:
+        rec = sched.finished[r.rid]
+        assert len(rec.tokens) == r.max_new
+        assert rec.preemptions == 0
+        # deterministic fake model: token k of rid is 1000*rid + k
+        assert rec.tokens == [1000 * r.rid + k for k in range(r.max_new)]
+
+
+def test_scheduler_preemption_evicts_at_most_once_and_completes():
+    reqs = _mk_reqs(11, seed=3)
+    sched = _fake_serve(reqs, n_slots=2, preempt_after=6)
+    assert set(sched.finished) == {r.rid for r in reqs}
+    npre = sum(rec.preemptions for rec in sched.finished.values())
+    assert npre > 0, "preemption path not exercised"
+    for rec in sched.finished.values():
+        assert rec.preemptions <= 1
+        # restart-from-scratch + deterministic decode: same stream
+        assert rec.tokens == [1000 * rec.rid + k
+                              for k in range(len(rec.tokens))]
+
+
+def test_scheduler_output_independent_of_arrival_order():
+    reqs = _mk_reqs(8, seed=5)
+    orders = [reqs, list(reversed(reqs)), reqs[1::2] + reqs[0::2]]
+    streams = []
+    for order in orders:
+        sched = _fake_serve(order, n_slots=3)
+        streams.append({rid: rec.tokens
+                        for rid, rec in sched.finished.items()})
+    assert streams[0] == streams[1] == streams[2]
+
+
+def test_scheduler_rejects_oversized_and_unpadded():
+    sched = SlotScheduler(n_slots=2, chunk=4, max_seq=16)
+    with pytest.raises(AssertionError):
+        sched.submit(Request(rid=0, prompt=[1] * 16, max_new=4))
+    with pytest.raises(AssertionError):
+        sched.submit(Request(rid=1, prompt=[1] * 3, max_new=1))
+
+
+def test_decode_rides_one_token_per_revolution():
+    """Steady-state single-request decode: exactly one DECODE injection
+    per P ticks (the slot re-enters the tick after its sample lands)."""
+    P = 4
+    sched = SlotScheduler(n_slots=1, chunk=4, max_seq=32)
+    sched.submit(Request(rid=0, prompt=[1] * 4, max_new=5))
+    hist, decode_ticks = [], []
+    for t in range(1, 60):
+        inj = sched.next_injection()
+        if inj.op == DECODE:
+            decode_ticks.append(t)
+        hist.insert(0, inj)
+        if len(hist) == P:
+            inj = hist.pop()
+            if inj.sample:
+                sched.on_result(inj, 7)
+        if sched.idle:
+            break
+    assert len(decode_ticks) == 4          # tokens 2..5 (1st from prefill)
+    assert all(b - a == P for a, b in zip(decode_ticks, decode_ticks[1:]))
+
+
+# ---------------------------------------------------------------------------
+# single-host serving primitives: chunked prefill + decode vs full forward
+# ---------------------------------------------------------------------------
+
+ARCHS = ["tinyllama-1.1b", "mamba2-2.7b",
+         pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_chunk_matches_full_prefill_bitwise(arch):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.models import LM
+
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    Sc, nq, max_seq = 16, 3, 80
+    toks = jax.random.randint(jax.random.key(1), (2, Sc * nq), 0,
+                              cfg.vocab_size)
+
+    full_logits, full_cache = lm.prefill(params, toks,
+                                         lm.init_cache(2, max_seq))
+    cache = lm.init_cache(2, max_seq)
+    for q in range(nq):
+        logits, cache = lm.prefill_chunk(
+            params, toks[:, q * Sc:(q + 1) * Sc], cache, q * Sc)
+    assert jnp.array_equal(logits, full_logits), \
+        f"{arch}: chunked prefill logits diverge"
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(full_cache)):
+        assert jnp.array_equal(a, b), f"{arch}: chunked cache diverges"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps_match_full_forward_greedy(arch):
+    """Greedy tokens from cached decode equal re-running the full
+    sequence through ``forward`` at every step (logits tight-tol: the
+    SSM recurrence vs chunked-scan paths differ in summation order)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.models import LM
+
+    cfg = get_reduced(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    plen, gen, max_seq = 16, 6, 48
+    prompt = jax.random.randint(jax.random.key(2), (1, plen), 0,
+                                cfg.vocab_size)
+
+    logits, cache = lm.prefill(params, prompt,
+                               lm.init_cache(1, max_seq))
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = plen
+    for _ in range(gen - 1):
+        logits, cache = lm.decode_step(
+            params, jnp.asarray([[toks[-1]]]), cache, pos)
+        seq = jnp.concatenate(
+            [prompt, jnp.asarray(toks, jnp.int32)[None]], axis=1)
+        ref, _, _ = lm.forward(params, seq)
+        assert float(jnp.max(jnp.abs(
+            logits[0] - ref[0, -1]))) < 5e-5, f"{arch}: decode logits"
+        toks.append(int(jnp.argmax(logits[0])))
+        assert toks[-1] == int(jnp.argmax(ref[0, -1])), \
+            f"{arch}: greedy token diverged at step {len(toks)}"
+        pos += 1
+
+
+# ---------------------------------------------------------------------------
+# pipelined engine vs single-host reference (subprocess)
+# ---------------------------------------------------------------------------
+
+def run_serve_case(arch, P, chunk, n_slots, preempt=0, kernels="xla",
+                   timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    args = [sys.executable, HELPER, arch, str(P), str(chunk),
+            str(n_slots), str(preempt), kernels]
+    r = subprocess.run(args, env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, \
+        f"{arch} P={P} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "MATCH=0" not in r.stdout
+
+
+def test_engine_matches_single_host_tinyllama_p2():
+    run_serve_case("tinyllama-1.1b", 2, 8, 2)
+
+
+@pytest.mark.slow
+def test_engine_matches_single_host_mamba2_p2():
+    run_serve_case("mamba2-2.7b", 2, 16, 2)
+
+
+@pytest.mark.slow
+def test_engine_matches_single_host_jamba_p2():
+    run_serve_case("jamba-v0.1-52b", 2, 16, 2)
+
+
+@pytest.mark.slow
+def test_engine_matches_single_host_p4_with_preemption():
+    run_serve_case("tinyllama-1.1b", 4, 8, 6, preempt=30)
+
+
+@pytest.mark.slow
+def test_engine_fused_kernels_matches_reference():
+    """kernels="fused" serving (Pallas chunk bodies through the
+    ComputeBackend seam; decode is S=1 and rides the dense path by
+    design) produces the same greedy tokens as the XLA reference."""
+    run_serve_case("tinyllama-1.1b", 2, 8, 2, kernels="fused")
