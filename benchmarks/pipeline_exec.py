@@ -1,11 +1,24 @@
 """Executor micro-benchmark: legacy per-tick interpreter vs the
 phase-compiled executor (PR 5's tentpole), measured per schedule family,
-and — per family — the compute-backend axis: ``kernels="xla"`` vs
-``kernels="fused"`` (the repro.models.backend seam dispatching the
-Pallas kernel library; interpret=True on this CPU host, so the fused
-column measures seam + interpret overhead, not TPU kernel speed).
+and — per family — three more axes:
 
-For each (family, executor, kernels) cell this records
+- ``kernels``: ``"xla"`` vs ``"fused"`` (the repro.models.backend seam
+  dispatching the Pallas kernel library; interpret=True on this CPU
+  host, so the fused column measures seam + interpret overhead, not TPU
+  kernel speed),
+- ``overlap``: synchronous in-tick exchange vs the double-buffered
+  (deferred) wire — the overlap table stretches cross-device deps to a
+  2-tick gap, so on this shared-memory host the column prices the skew
+  ticks the deferral adds, while on a real fabric it hides the p2p
+  latency,
+- ``wire`` (chronos only): boundary-payload dtype on the packed uint16
+  wire — fp32 (bitwise), bf16, int8-with-scale.
+
+A subprocess re-exec with 8 forced host devices adds a multi-axis
+``pp4 x dp2`` mesh row family (the full-manual shard_map fallback on
+the pinned jaxlib), phase executor, sync + overlapped wire.
+
+For each cell this records
 
 - **trace_s** — ``jax.jit(fn).lower(...)`` wall time (Python tracing),
 - **compile_s** — ``lowered.compile()`` wall time (XLA),
@@ -25,10 +38,10 @@ For each (family, executor, kernels) cell this records
 Writes ``BENCH_pipeline_exec.json`` (schema ``{bench, rows, host,
 commit}``) at the repo root and prints a summary table.  ``--check``
 runs the smoke matrix (the acceptance cell ``chronos P=4 v=2 m=8``
-only, fewer reps) and writes ``BENCH_pipeline_exec_check.json`` so the
-committed full-matrix record is never clobbered by a smoke run —
-``scripts/ci.sh`` runs the smoke every PR so perf numbers regenerate
-alongside the code.
+only, fewer reps, plus one overlapped+compressed wire cell) and writes
+``BENCH_pipeline_exec_check.json`` so the committed full-matrix record
+is never clobbered by a smoke run — ``scripts/ci.sh`` runs the smoke
+every PR so perf numbers regenerate alongside the code.
 
 Must run as a standalone script: the virtual pipeline devices require
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax import.
@@ -44,8 +57,9 @@ import time
 P_DEVICES = 4
 
 if __name__ == "__main__":
+    _NDEV = 8 if "--mesh-family" in sys.argv else P_DEVICES
     os.environ.setdefault(
-        "XLA_FLAGS", f"--xla_force_host_platform_device_count={P_DEVICES}")
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={_NDEV}")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
@@ -61,14 +75,37 @@ FULL_MATRIX = (
 )
 SMOKE_MATRIX = FULL_MATRIX[:1]
 
+SYNC = ("phase", "xla", False, "fp32")
+OVERLAP = ("phase", "xla", True, "fp32")
 
-def bench_cell(spec, sched, mesh, params, batch, executor, reps):
+
+def family_axes(family, check=False):
+    """(executor, kernels, overlap, wire) cells for a schedule family.
+
+    The kernels axis rides the phase executor only (the legacy
+    interpreter is the xla-backend baseline); the overlap and wire axes
+    ride phase/xla.  Compressed wires are measured on the acceptance
+    family (chronos) only — the protocol is schedule-independent."""
+    if check:
+        return (("legacy", "xla", False, "fp32"), SYNC,
+                ("phase", "fused", False, "fp32"),
+                ("phase", "xla", True, "int8"))   # overlapped+compressed
+    axes = [("legacy", "xla", False, "fp32"), SYNC, OVERLAP,
+            ("phase", "fused", False, "fp32")]
+    if family == "chronos":
+        axes += [("phase", "xla", True, "bf16"),
+                 ("phase", "xla", True, "int8")]
+    return tuple(axes)
+
+
+def bench_cell(spec, sched, mesh, params, batch, executor, reps,
+               rules=None):
     import jax
 
     from repro.core.analysis import predicted_tick_costs
     from repro.core.pipeline_runtime import make_train_grads_fn
     from repro.models import shard_env
-    with shard_env(mesh, {}):
+    with shard_env(mesh, rules or {}):
         fn = make_train_grads_fn(spec, mesh, executor=executor)
         t0 = time.perf_counter()
         lowered = jax.jit(fn).lower(params, batch)
@@ -92,7 +129,8 @@ def bench_cell(spec, sched, mesh, params, batch, executor, reps):
             "grain_us": round(steady * 1e6 / grains, 1)}
 
 
-def run(check=False, reps=None, rounds=None, json_out=None):
+def run(check=False, reps=None, rounds=None, json_out=None,
+        mesh_family=False):
     import jax
 
     from repro.configs import get_reduced
@@ -101,29 +139,39 @@ def run(check=False, reps=None, rounds=None, json_out=None):
     from repro.core.schedules import get_schedule
     from repro.jax_compat import make_mesh
 
-    matrix = SMOKE_MATRIX if check else FULL_MATRIX
+    matrix = SMOKE_MATRIX if (check or mesh_family) else FULL_MATRIX
     reps = reps or (6 if check else 12)
-    rounds = rounds or (2 if check else 3)
+    rounds = rounds or (2 if (check or mesh_family) else 3)
     P_, m, mbB, S = P_DEVICES, 8, 2, 17
     cfg = get_reduced("tinyllama-1.1b")
-    mesh = make_mesh((P_,), ("pp",))
+    if mesh_family:
+        # pp4 x dp2 (x model=1) on 8 forced host devices: exercises the
+        # full-manual shard_map fallback (pinned jaxlib) end to end
+        mesh = make_mesh((P_, 2, 1), ("pp", "data", "model"))
+        rules = {"dp": "data", "tp": "model", "fsdp": None}
+    else:
+        mesh = make_mesh((P_,), ("pp",))
+        rules = {}
 
     cells = {}
     for family, kw, v, n_seq in matrix:
-        specs = {kern: make_pipeline_spec(
+        axes = ((SYNC, OVERLAP) if mesh_family
+                else family_axes(family, check))
+        specs = {(kern, ov, wire): make_pipeline_spec(
             cfg, P=P_, v=v, m=m, microbatch=mbB, seq_len=S,
-            schedule=family, n_seq=n_seq, kernels=kern, **kw)
-            for kern in ("xla", "fused")}
+            schedule=family, n_seq=n_seq, kernels=kern, overlap=ov,
+            wire=wire, **kw)
+            for kern, ov, wire in {(k, o, w) for _, k, o, w in axes}}
         vkw = {"v": v} if family in ("chronos", "chronos_recomp",
                                      "chronos_seq") else {}
         if n_seq > 1:
             vkw["n_seq"] = n_seq
         sched = get_schedule(family, P_, m, **vkw, **kw)
-        params, _ = init_pipeline_params(jax.random.key(0), cfg,
-                                         specs["xla"].layout)
+        params, _ = init_pipeline_params(
+            jax.random.key(0), cfg, specs[("xla", False, "fp32")].layout)
         tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
                                     cfg.vocab_size)
-        cells[family] = (specs, sched, params, {"tokens": tokens})
+        cells[family] = (specs, axes, sched, params, {"tokens": tokens})
 
     # aggregation: MEDIAN across rounds for the one-shot costs (trace /
     # compile vary with environmental noise; the median is the robust
@@ -133,16 +181,14 @@ def run(check=False, reps=None, rounds=None, json_out=None):
     import statistics
     rows = []
     best = {}
-    # the kernels axis rides the phase executor only: the legacy
-    # interpreter is kept as the xla-backend baseline and the fused
-    # backend targets the production (phase) executor
-    cell_axes = (("legacy", "xla"), ("phase", "xla"), ("phase", "fused"))
     for rnd in range(rounds):
-        for family, (specs, sched, params, batch) in cells.items():
-            for executor, kern in cell_axes:
-                best.setdefault((family, executor, kern), []).append(
-                    bench_cell(specs[kern], sched, mesh, params, batch,
-                               executor, reps))
+        for family, (specs, axes, sched, params, batch) in cells.items():
+            for executor, kern, ov, wire in axes:
+                best.setdefault((family, executor, kern, ov, wire),
+                                []).append(
+                    bench_cell(specs[(kern, ov, wire)], sched, mesh,
+                               params, batch, executor, reps,
+                               rules=rules))
     agg = {}
     for key, rs in best.items():
         agg[key] = {
@@ -158,16 +204,26 @@ def run(check=False, reps=None, rounds=None, json_out=None):
             agg[key]["steady_ms"] * 1e3
             / agg[key]["predicted_grains"], 1)
     best = agg
-    for (family, executor, kern), r in best.items():
+    mesh_name = "pp4xdp2" if mesh_family else "pp4"
+    for (family, executor, kern, ov, wire), r in best.items():
         rows.append({"family": family, "P": P_, "m": m,
-                     "v": cells[family][0]["xla"].layout.v,
-                     "executor": executor, "kernels": kern, **r})
+                     "v": cells[family][0][("xla", False,
+                                            "fp32")].layout.v,
+                     "mesh": mesh_name, "executor": executor,
+                     "kernels": kern, "overlap": ov, "wire": wire, **r})
 
     summary = {}
     for family in cells:
-        leg = best[(family, "legacy", "xla")]
-        ph = best[(family, "phase", "xla")]
-        fu = best[(family, "phase", "fused")]
+        if mesh_family:
+            ph = best[(family, *SYNC)]
+            ov = best[(family, *OVERLAP)]
+            summary[f"{family}@{mesh_name}"] = {
+                "overlap_steady_ratio": round(
+                    ov["steady_ms"] / ph["steady_ms"], 2)}
+            continue
+        leg = best[(family, "legacy", "xla", False, "fp32")]
+        ph = best[(family, *SYNC)]
+        fu = best[(family, "phase", "fused", False, "fp32")]
         tc_ratio = (leg["trace_s"] + leg["compile_s"]) / \
             (ph["trace_s"] + ph["compile_s"])
         speedup = 1.0 - ph["steady_ms"] / leg["steady_ms"]
@@ -183,6 +239,35 @@ def run(check=False, reps=None, rounds=None, json_out=None):
             "fused_grain_ratio": round(
                 fu["grain_us"] / ph["grain_us"], 2),
         }
+        ovl = best.get((family, *OVERLAP)) \
+            or best.get((family, "phase", "xla", True, "int8"))
+        if ovl is not None:
+            # the deferred wire's cost on this shared-memory host: the
+            # stretched table's skew ticks divided by the sync steady
+            # (on a real fabric the hidden p2p latency flips the sign)
+            summary[family]["overlap_steady_ratio"] = round(
+                ovl["steady_ms"] / ph["steady_ms"], 2)
+
+    if not (check or mesh_family):
+        # multi-axis mesh family in a subprocess (needs 8 forced host
+        # devices, which requires a fresh jax)
+        import tempfile
+        tmp = tempfile.mktemp(suffix=".json")
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        r = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mesh-family",
+             "--reps", str(reps), "--json-out", tmp],
+            env=env, capture_output=True, text=True, timeout=3600)
+        if r.returncode == 0:
+            with open(tmp) as f:
+                sub = json.load(f)
+            rows.extend(sub["rows"])
+            summary.update(sub["summary"])
+            os.unlink(tmp)
+        else:
+            print(f"mesh-family subprocess failed:\n{r.stdout[-2000:]}\n"
+                  f"{r.stderr[-2000:]}", file=sys.stderr)
 
     try:
         commit = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
@@ -196,8 +281,9 @@ def run(check=False, reps=None, rounds=None, json_out=None):
                     "python": platform.python_version(),
                     "jax": jax.__version__,
                     "cpus": os.cpu_count(),
-                    "devices": P_DEVICES,
-                    "mode": "check" if check else "full"},
+                    "devices": 8 if mesh_family else P_DEVICES,
+                    "mode": ("mesh" if mesh_family
+                             else "check" if check else "full")},
            "commit": commit,
            "summary": summary}
     # the smoke run writes its own record: overwriting the committed
@@ -209,19 +295,27 @@ def run(check=False, reps=None, rounds=None, json_out=None):
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
 
-    hdr = (f"{'family':15s} {'executor':7s} {'kernels':7s} {'trace':>6s} "
-           f"{'compile':>8s} {'steady':>9s} {'cpu':>9s} {'grain':>8s}")
+    hdr = (f"{'family':15s} {'mesh':8s} {'exec':6s} {'kern':5s} "
+           f"{'ov':>2s} {'wire':5s} {'trace':>6s} {'compile':>8s} "
+           f"{'steady':>9s} {'cpu':>9s} {'grain':>8s}")
     print(hdr)
     for r in rows:
-        print(f"{r['family']:15s} {r['executor']:7s} {r['kernels']:7s} "
+        print(f"{r['family']:15s} {r['mesh']:8s} {r['executor']:6s} "
+              f"{r['kernels']:5s} {int(r['overlap']):2d} {r['wire']:5s} "
               f"{r['trace_s']:5.2f}s {r['compile_s']:7.2f}s "
               f"{r['steady_ms']:7.1f}ms {r['steady_cpu_ms']:7.1f}ms "
               f"{r['grain_us']:6.1f}us")
     for family, s in summary.items():
+        if "trace_compile_ratio" not in s:
+            print(f"{family}: overlap steady "
+                  f"{s['overlap_steady_ratio']}x")
+            continue
+        ov = s.get("overlap_steady_ratio")
         print(f"{family}: trace+compile {s['trace_compile_ratio']}x, "
               f"steady -{s['steady_speedup_pct']}% "
               f"(cpu -{s['steady_cpu_speedup_pct']}%), "
-              f"fused grain {s['fused_grain_ratio']}x")
+              f"fused grain {s['fused_grain_ratio']}x"
+              + (f", overlap steady {ov}x" if ov else ""))
     print(f"wrote {out_path}")
     return doc
 
@@ -230,12 +324,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="smoke matrix (acceptance cell only, few reps)")
+    ap.add_argument("--mesh-family", action="store_true",
+                    help="pp4 x dp2 row family (needs 8 host devices; "
+                         "run() re-execs this automatically)")
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
     run(check=args.check, reps=args.reps, rounds=args.rounds,
-        json_out=args.json_out)
+        json_out=args.json_out, mesh_family=args.mesh_family)
 
 
 if __name__ == "__main__":

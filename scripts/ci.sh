@@ -15,10 +15,12 @@
 #    and the docs' `>>>` code blocks run under doctest.
 # 3b. Executor perf record: benchmarks/pipeline_exec.py --check
 #    re-measures the legacy vs phase-compiled executor on the
-#    acceptance cell (chronos P=4 v=2 m=8) every PR and writes
-#    BENCH_pipeline_exec_check.json (the committed full-matrix record
-#    BENCH_pipeline_exec.json is refreshed by running the script
-#    without --check).
+#    acceptance cell (chronos P=4 v=2 m=8) every PR — including one
+#    overlapped+compressed wire cell (double-buffered exchange, int8
+#    boundary payloads) — and writes BENCH_pipeline_exec_check.json
+#    (the committed full-matrix record BENCH_pipeline_exec.json, with
+#    the overlap/wire axes and the pp4 x dp2 mesh family, is refreshed
+#    by running the script without --check).
 # 3c. Elastic-recovery perf record: benchmarks/ft_recovery.py --check
 #    replays the deterministic fault drill (checkpoint-writer crash,
 #    device loss -> re-plan at P-1 -> restore/remap -> resume, rejoin

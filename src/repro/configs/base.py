@@ -267,7 +267,18 @@ class ParallelPlan:
     zero_stage: int = 1
     recompute: RecomputeConfig = field(default_factory=RecomputeConfig)
     offload: OffloadConfig = field(default_factory=OffloadConfig)
-    grad_compression: str = "none"  # none | int8_ef
+    grad_compression: str = "none"  # none | int8_ef | int16_ef: compress
+                                    # the shared-parameter gradient psum
+                                    # over pp (optim.compression
+                                    # compressed_psum, persistent
+                                    # error-feedback threaded by the
+                                    # train driver); under offload the
+                                    # deep-chunk host shipment
+                                    # quantizes to the same width
+    wire: str = "fp32"              # boundary-activation wire dtype of
+                                    # the pipeline executor: fp32
+                                    # (exact), bf16, int8 (per-row
+                                    # scale in the payload aux words)
     kernels: str = "xla"            # compute backend for the chunk body
                                     # (repro.models.backend): "xla" |
                                     # "fused" (Pallas rmsnorm / flash /

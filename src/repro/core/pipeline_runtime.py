@@ -66,7 +66,8 @@ from repro.core.tasktable import (B_OPS, BWD_FIRST, BWD_LAST, BWD_MID,
                                   IDLE, R_OPS, RCP_MID, SEND_B_DOWN,
                                   SEND_B_LOC, SEND_BWD, SEND_F_LOC,
                                   SEND_F_UP, SEND_FWD, SEND_HOPB,
-                                  SEND_HOPF, TaskTable, W_OPS, WGT_FIRST,
+                                  SEND_HOPF, SEND_NONE, TaskTable,
+                                  W_OPS, WGT_FIRST,
                                   WGT_LAST, WGT_MID, build_task_table,
                                   factor_phases, replay_phases)
 from repro.models import backend as compute_backend
@@ -79,6 +80,11 @@ from repro.models.transformer import _init_layer
 #: (the pre-phase per-tick interpreter, kept for A/B benchmarking —
 #: ``benchmarks/pipeline_exec.py`` measures both).
 EXECUTOR_ENV = "REPRO_PIPELINE_EXECUTOR"
+
+#: default for :func:`make_pipeline_spec`'s ``overlap`` flag (the
+#: double-buffered cross-device exchange).  "0"/"false" restores the
+#: synchronous in-tick wire everywhere, e.g. for A/B benchmarking.
+OVERLAP_ENV = "REPRO_PIPELINE_OVERLAP"
 
 #: wire-protocol switch point (bytes of all-gathered payload per tick):
 #: at or below this, the phase executors use the single-collective
@@ -96,7 +102,8 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
                  s_idx):
     """Shared wire protocol of the phase executors (core + seqpipe).
 
-    Two statically-chosen forms (see the module docstrings):
+    Two statically-chosen cross-device forms (see the module
+    docstrings):
 
     - *rotation pair*: hop wraps fold into full ring rotations and
       same-direction F/B payloads stack — at most one ``ppermute`` per
@@ -108,8 +115,19 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
       latency- rather than bandwidth-bound (small payloads).
 
     Channels the table never uses compile away.  Returns
-    ``route(carry, out, row_all, row) -> (fq, bq)``; callers re-pin and
-    store the queues."""
+    ``(route_xdev, route_local)``:
+
+    - ``route_xdev(fq, bq, out, row_all, row) -> (fq, bq)`` runs the
+      collective and lands cross-device arrivals (columns 6/7/9/10);
+    - ``route_local(fq, bq, out, row) -> (fq, bq)`` lands the
+      device-local channels (columns 8/11), no collective.
+
+    The synchronous executor composes both on the current tick's
+    payload; the double-buffered executor feeds ``route_xdev`` the
+    *previous* tick's payload and row (deferring delivery by one tick,
+    which is what lets XLA overlap the collective with this tick's
+    compute) while local channels keep same-tick delivery."""
+
     def wr(buf, val, i):
         return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
 
@@ -124,11 +142,10 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
                              [code_val == cd for cd in have])
         return jnp.where(m, payload, jnp.zeros_like(payload))
 
-    def route_rotations(carry, out, row_all, row):
+    def route_rotations(fq, bq, out, row_all, row):
         snd = row[5]
         rot_dn = [(i, (i + 1) % P_) for i in range(P_)]
         rot_up = [(i, (i - 1) % P_) for i in range(P_)]
-        fq, bq = carry["fq"], carry["bq"]
         for perm, f_want, b_want, rcf_c, rcb_c in (
                 (rot_dn, (SEND_FWD, SEND_HOPF), (SEND_B_DOWN,), 6, 9),
                 (rot_up, (SEND_F_UP,), (SEND_BWD, SEND_HOPB), 7, 10)):
@@ -147,16 +164,17 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
                 bq = qwrite(bq, row[rcb_c], bp_, tab.bq_depth)
         return fq, bq
 
-    def route_exchange(carry, out, row_all, row):
-        if P_ > 1:
-            outs = jax.lax.all_gather(out, pp, axis=0, tiled=False)
-        else:
-            outs = out[None]
+    def gather_wire(out):
+        if P_ == 1:
+            return out[None]
+        return jax.lax.all_gather(out, pp, axis=0, tiled=False)
+
+    def route_exchange(fq, bq, out, row_all, row):
+        outs = gather_wire(out)
         prev = (s_idx + P_ - 1) % P_
         nxt = (s_idx + 1) % P_
         out_dn, snd_dn = outs[prev], row_all[prev, 5]
         out_up, snd_up = outs[nxt], row_all[nxt, 5]
-        fq, bq = carry["fq"], carry["bq"]
         for payload, code_val, want, qname, col in (
                 (out_dn, snd_dn, (SEND_FWD, SEND_HOPF), "f", 6),
                 (out_dn, snd_dn, (SEND_B_DOWN,), "b", 9),
@@ -171,10 +189,20 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
                 bq = qwrite(bq, row[col], arr, tab.bq_depth)
         return fq, bq
 
-    def route(carry, out, row_all, row):
+    # no cross-device send code in the whole table (P=1, or an entirely
+    # device-local placement): the collective route short-circuits away,
+    # deferred or not — mirroring _ppermute's identity-perm skip
+    has_xdev = bool(frozenset(snds) - frozenset(
+        (SEND_NONE, SEND_F_LOC, SEND_B_LOC)))
+
+    def route_xdev(fq, bq, out, row_all, row):
+        if not has_xdev:
+            return fq, bq
+        return (route_exchange if use_ag
+                else route_rotations)(fq, bq, out, row_all, row)
+
+    def route_local(fq, bq, out, row):
         snd = row[5]
-        fq, bq = (route_exchange if use_ag
-                  else route_rotations)(carry, out, row_all, row)
         fl = sel_from(out, snd, (SEND_F_LOC,))
         if fl is not None:
             fq = qwrite(fq, row[8], fl, tab.fq_depth)
@@ -183,7 +211,8 @@ def _build_route(tab: "TaskTable", P_: int, pp: str, snds, use_ag: bool,
             bq = qwrite(bq, row[11], bl, tab.bq_depth)
         return fq, bq
 
-    return route
+    route_xdev.has_xdev = has_xdev
+    return route_xdev, route_local
 
 
 def pipeline_period(cfg: ModelConfig) -> int:
@@ -392,12 +421,25 @@ class PipelineSpec:
     aux_weight: float = 0.01
     n_seq: int = 1              # sequence chunks (repro.seqpipe)
     kernels: str = "xla"        # compute backend (repro.models.backend)
+    #: boundary-payload wire dtype: "fp32" (exact bitcast, the
+    #: bitwise-equivalence baseline), "bf16" (cast + bitcast, half the
+    #: words), or "int8" (per-row symmetric quantization, scale riding
+    #: in two leading uint16 words per row per leaf — ~quarter width).
+    wire: str = "fp32"
+    #: int width of the compressed shared-parameter gradient psum over
+    #: the pipe axis (``optim.compression.compressed_psum``), or None
+    #: for the exact fp32 psum.  Requires the caller to thread
+    #: persistent error-feedback state (see :func:`init_psum_ef`).
+    grad_psum_bits: Optional[int] = None
 
 
 def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
                        microbatch: int, seq_len: int, schedule: str,
                        pp_axis: str = "pp", n_seq: int = 1,
-                       kernels: str = "xla", **sched_kw) -> PipelineSpec:
+                       kernels: str = "xla", wire: str = "fp32",
+                       overlap: Optional[bool] = None,
+                       grad_psum_bits: Optional[int] = None,
+                       **sched_kw) -> PipelineSpec:
     seq_schedules = ("seq1f1b", "chronos_seq")
     if schedule in seq_schedules:
         sched_kw["n_seq"] = n_seq
@@ -418,7 +460,14 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
     # (interleaved striping unless the generator carries one, e.g. the
     # V-shape family's fold-back)
     layout = StageLayout.build(cfg, P, v, placement=sched.placement)
-    table = build_task_table(sched)
+    # double-buffered (overlapped) exchange is the default; the env var
+    # (or overlap=False) restores the synchronous in-tick wire for A/B
+    # measurement — both build the same per-device op order, so gradient
+    # equivalence holds bitwise across the pair.
+    if overlap is None:
+        overlap = os.environ.get(OVERLAP_ENV, "1") not in ("0", "false")
+    assert wire in ("fp32", "bf16", "int8"), f"unknown wire {wire!r}"
+    table = build_task_table(sched, overlap=overlap)
     prefix = cfg.vision.num_patches if cfg.vision is not None else 0
     enc_len = cfg.encdec.num_frames if cfg.encdec is not None else 0
     if n_seq > 1:
@@ -438,7 +487,8 @@ def make_pipeline_spec(cfg: ModelConfig, *, P: int, v: int, m: int,
     return PipelineSpec(cfg=cfg, layout=layout, table=table, mbB=microbatch,
                         S=seq_len - 1 + prefix, prefix=prefix,
                         enc_len=enc_len, pp_axis=pp_axis, n_seq=n_seq,
-                        kernels=kernels)
+                        kernels=kernels, wire=wire,
+                        grad_psum_bits=grad_psum_bits)
 
 
 def _zero_payload(spec: PipelineSpec, dtype):
@@ -514,7 +564,15 @@ def make_train_grads_fn(spec: PipelineSpec, mesh,
     if executor not in ("phase", "legacy"):
         raise ValueError(f"unknown executor {executor!r}: "
                          f"expected 'phase' or 'legacy'")
+    if executor == "legacy" and (_wire_of(spec) != "fp32"
+                                 or spec.grad_psum_bits):
+        raise ValueError("wire compression (wire=/grad_psum_bits=) "
+                         "requires the 'phase' executor — the legacy "
+                         "interpreter moves unpacked payload trees")
     if spec.n_seq > 1:
+        if spec.grad_psum_bits:
+            raise ValueError("compressed gradient psum is not "
+                             "implemented for sequence-chunked specs")
         from repro.seqpipe.runtime import make_seq_train_grads_fn
         return make_seq_train_grads_fn(spec, mesh, executor=executor)
     if executor == "phase":
@@ -971,6 +1029,13 @@ def _make_train_grads_legacy(spec: PipelineSpec, mesh):
         metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
         return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
 
+    # same full-manual fallback as the phase executor: the pinned jaxlib
+    # cannot partition ppermute under partial-manual shard_map
+    full_manual = (not jax_compat.HAS_VMA) and any(
+        ax != spec.pp_axis and mesh.shape[ax] > 1
+        for ax in mesh.axis_names)
+    manual = frozenset(mesh.axis_names) if full_manual else {pp}
+
     def call(params, batch):
         in_specs = (
             P(pp),
@@ -998,7 +1063,7 @@ def _make_train_grads_legacy(spec: PipelineSpec, mesh):
         return jax_compat.shard_map(spmd_entry, mesh=mesh,
                                     in_specs=in_specs,
                                     out_specs=out_specs,
-                                    manual_axes={pp})(stage_iota, params,
+                                    manual_axes=manual)(stage_iota, params,
                                                       batch)
     return call
 
@@ -1027,39 +1092,88 @@ def _payload_struct(spec: PipelineSpec,
     return entries
 
 
+def _wire_of(spec: PipelineSpec) -> str:
+    return getattr(spec, "wire", "fp32")
+
+
+def _leaf_exact(key: str, dt, wire: str) -> bool:
+    """True when this payload leaf travels as an exact bitcast: the
+    fp32 wire always, the ``aux`` scalar always (it is a loss term —
+    never quantized), and 16-bit compute dtypes on the bf16 wire (the
+    cast would be the identity)."""
+    return (key == "aux" or wire == "fp32"
+            or (wire == "bf16" and jnp.dtype(dt).itemsize <= 2))
+
+
 def _payload_words(spec: PipelineSpec, S: Optional[int] = None) -> int:
-    """Packed row width (uint16 words per batch row)."""
+    """Packed row width (uint16 words per batch row) under the spec's
+    wire dtype: exact leaves bitcast to ``itemsize/2`` words per
+    element, bf16 leaves to one, int8 leaves to half a word per element
+    plus two leading scale words per row."""
     w = 0
+    wire = _wire_of(spec)
+    B = spec.mbB
     for key, shape, dt in _payload_struct(spec, S):
         ws = jnp.dtype(dt).itemsize // 2
-        n = int(np.prod(shape)) * ws
-        w += n if key == "aux" else n // spec.mbB
+        if key == "aux":
+            w += int(np.prod(shape)) * ws
+        elif _leaf_exact(key, dt, wire):
+            w += int(np.prod(shape)) * ws // B
+        elif wire == "bf16":
+            w += int(np.prod(shape)) // B
+        else:                                   # int8
+            elts = int(np.prod(shape)) // B
+            assert elts % 2 == 0, "int8 wire needs an even row length"
+            w += 2 + elts // 2
     return w
 
 
 def _pack_payload(spec: PipelineSpec, pay: Dict[str, Any],
                   S: Optional[int] = None) -> jnp.ndarray:
-    """Payload dict -> packed ``uint16 [mbB, W]`` (bitcast, exact).  The
-    batch axis stays leading so ring buffers remain dp-shardable; the
-    batch-free ``aux`` scalar is broadcast across rows and read back
-    from row 0."""
+    """Payload dict -> packed ``uint16 [mbB, W]``.  The batch axis stays
+    leading so ring buffers remain dp-shardable; the batch-free ``aux``
+    scalar is broadcast across rows and read back from row 0.
+
+    Exact leaves (see :func:`_leaf_exact`) are a pure bitcast — the
+    fp32 wire is bitwise.  The bf16 wire casts then bitcasts (one word
+    per element); the int8 wire quantizes per row with a symmetric
+    scale ``amax/127`` carried in two leading uint16 words (an fp32
+    bitcast), element pairs bitcast into single words."""
     B = spec.mbB
+    wire = _wire_of(spec)
     parts = []
     for key, shape, dt in _payload_struct(spec, S):
         a = pay[key]
-        w = jax.lax.bitcast_convert_type(a, jnp.uint16)
-        if key == "aux":
-            w = jnp.broadcast_to(w.reshape(1, -1), (B, w.size))
-        else:
-            w = w.reshape(B, -1)
+        if _leaf_exact(key, dt, wire):
+            w = jax.lax.bitcast_convert_type(a, jnp.uint16)
+            if key == "aux":
+                w = jnp.broadcast_to(w.reshape(1, -1), (B, w.size))
+            else:
+                w = w.reshape(B, -1)
+        elif wire == "bf16":
+            w = jax.lax.bitcast_convert_type(
+                a.astype(jnp.bfloat16), jnp.uint16).reshape(B, -1)
+        else:                                   # int8
+            flat = a.reshape(B, -1).astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1,
+                                        keepdims=True), 1e-30) / 127.0
+            q = jnp.clip(jnp.round(flat / scale), -127, 127)
+            qw = jax.lax.bitcast_convert_type(
+                q.astype(jnp.int8).reshape(B, -1, 2), jnp.uint16)
+            sw = jax.lax.bitcast_convert_type(scale, jnp.uint16)
+            w = jnp.concatenate([sw.reshape(B, 2), qw], axis=1)
         parts.append(w)
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
 
 def _unpack_payload(spec: PipelineSpec, flat: jnp.ndarray,
                     S: Optional[int] = None) -> Dict[str, Any]:
-    """Inverse of :func:`_pack_payload` (bitwise round-trip)."""
+    """Inverse of :func:`_pack_payload` — bitwise for exact leaves,
+    dequantizing for compressed ones.  Forward and backward branches
+    both read the *stored wire bytes*, so the chunk pullback linearizes
+    at exactly the (dequantized) primal point the forward consumed."""
     B = spec.mbB
+    wire = _wire_of(spec)
     out: Dict[str, Any] = {}
     off = 0
     for key, shape, dt in _payload_struct(spec, S):
@@ -1069,11 +1183,25 @@ def _unpack_payload(spec: PipelineSpec, flat: jnp.ndarray,
             seg = flat[0:1, off:off + n]
             out[key] = jax.lax.bitcast_convert_type(
                 seg.reshape(shape + ((ws,) if ws > 1 else ())), dt)
-        else:
+        elif _leaf_exact(key, dt, wire):
             n = int(np.prod(shape)) * ws // B
             seg = flat[:, off:off + n]
             out[key] = jax.lax.bitcast_convert_type(
                 seg.reshape(shape + ((ws,) if ws > 1 else ())), dt)
+        elif wire == "bf16":
+            n = int(np.prod(shape)) // B
+            seg = flat[:, off:off + n]
+            out[key] = jax.lax.bitcast_convert_type(
+                seg, jnp.bfloat16).reshape(shape).astype(dt)
+        else:                                   # int8
+            elts = int(np.prod(shape)) // B
+            n = 2 + elts // 2
+            seg = flat[:, off:off + n]
+            scale = jax.lax.bitcast_convert_type(
+                seg[:, 0:2].reshape(B, 1, 2), jnp.float32)
+            q = jax.lax.bitcast_convert_type(seg[:, 2:], jnp.int8)
+            x = q.astype(jnp.float32).reshape(B, elts) * scale
+            out[key] = x.reshape(shape).astype(dt)
         off += n
     return out
 
@@ -1162,8 +1290,35 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
     stream = replay_phases(tab, plan)
     assert np.array_equal(stream, A), \
         "phase factorization is not a pure re-encoding of the table"
+    # the one-tick-shifted row stream of the deferred route: tick t
+    # routes tick t-1's payload with tick t-1's columns (tick 0 routes
+    # nothing — null send code, trash recv slots)
+    null_row = np.zeros((1, tab.P, 16), np.int32)
+    null_row[..., 3:] = -1
+    null_row[..., 5] = SEND_NONE
+    null_row[..., 14] = 0
+    prev_stream = np.concatenate([null_row, stream[:-1]], axis=0)
+
+    # the pinned jaxlib (no vma tracking) cannot partition the executor
+    # under PARTIAL-manual shard_map (manual pp + auto dp/tp axes):
+    # ppermute/all_gather over the manual axis CHECK-fail outright, and
+    # the XLA subgroup partitioner aborts on the executor's switch/while
+    # mix even with psum-only exchanges.  Go FULL manual over every mesh
+    # axis there instead: non-pp axes are replicated inside the executor
+    # region (each dp/tp replica runs the identical pipeline; all
+    # collectives stay pp-only and are legal again), so multi-axis
+    # meshes are exact — just not dp/tp-accelerated — on the old
+    # toolchain.  vma-aware jax keeps real auto dp/tp axes.
+    full_manual = (not jax_compat.HAS_VMA) and any(
+        ax != spec.pp_axis and mesh.shape[ax] > 1
+        for ax in mesh.axis_names)
+    manual = frozenset(mesh.axis_names) if full_manual else {pp}
 
     split, remat = tab.has_w, tab.has_r
+    if spec.grad_psum_bits:
+        assert ocfg is None, \
+            "compressed gradient psum composes with the grads fn only " \
+            "(the fused-optimizer path keeps the exact psum)"
 
     def ring_offsets(depths: Dict[int, int]):
         off = np.zeros(v, np.int64)
@@ -1180,7 +1335,7 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
     Wb = _payload_words(spec)
     counts = {"embed": 0, "chunk": 0, "head": 0}
 
-    def spmd(stage_iota, params, batch, opt_state=None):
+    def spmd(stage_iota, params, batch, opt_state=None, psum_ef=None):
         s_idx = stage_iota[0]
         blocks = [jax.tree.map(lambda a: a[0], t) for t in params["blocks"]]
         flags = {k: jnp.asarray(vv)[s_idx] for k, vv in flags_np.items()}
@@ -1320,14 +1475,17 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
             # ---- branches are PURE PRODUCERS: they read the carry's
             # ring buffers (conditional inputs alias freely) but every
             # state write — rings, gradient accumulators, loss — happens
-            # unconditionally AFTER the switch.  XLA conditionals copy
-            # every carry element they return (pass-through included),
-            # so threading multi-MB gradient accumulators through the
-            # switch would pay a full copy per non-idle tick; pure
-            # branches return only their tick-sized products:
-            # (wire_out, gb_delta, gs_delta, ce, n_loss, stash_a[,
-            # stash_b]), with exact zeros where a branch has nothing to
-            # contribute. ----
+            # AFTER the switch.  XLA conditionals copy every carry
+            # element they return (pass-through included), so threading
+            # multi-MB gradient accumulators through the switch would
+            # pay a full copy per non-idle tick; pure branches return
+            # only their tick-sized products: (wire_out, gb_delta,
+            # gs_delta, ce, n_loss, stash_a[, stash_b]), with exact
+            # zeros where a branch has nothing to contribute.  Ring
+            # writes then run unconditionally (trash slots absorb the
+            # inactive classes); the accumulator adds are the one
+            # exception, ``lax.cond``-gated on the op class below —
+            # see the comment at the gb/gs update. ----
             def zeros_gbd():
                 return [jax.tree.map(
                     lambda a: jnp.zeros(a.shape[1:], a.dtype), t)
@@ -1513,12 +1671,29 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
                 is_r = op >= RCP_MID
                 carry = dict(carry, rmt=wr(
                     carry["rmt"], st_a, jnp.where(is_r, grm, total_rmt)))
-            gb = [jax.tree.map(
-                lambda g, d: jax.lax.dynamic_update_index_in_dim(
-                    g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
-                    + d, c, 0), gt, dt)
-                for gt, dt in zip(carry["gb"], gb_d)]
-            gs = jax.tree.map(lambda a, b: a + b, carry["gs"], gs_d)
+            # Gradient accumulators: only B/W ops ever produce nonzero
+            # deltas (F/R/idle branches return exact zeros), so the
+            # chunk-slice read-add-write on ``gb`` and the full-tree add
+            # on ``gs`` are gated on the op class.  This is what keeps
+            # the overlap table's skew ticks cheap: the stretched table
+            # has many more non-B/W ticks, and unconditionally adding
+            # zeros would pay the full accumulator memory traffic on
+            # every one of them.
+            is_g = (op >= BWD_MID) & (op <= WGT_LAST)
+            gb = jax.lax.cond(
+                is_g,
+                lambda t: [jax.tree.map(
+                    lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                        g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
+                        + d, c, 0), gt, dt)
+                    for gt, dt in zip(t, gb_d)],
+                lambda t: list(t), carry["gb"])
+            is_gs = ((op == BWD_FIRST) | (op == BWD_LAST)
+                     | (op == WGT_FIRST) | (op == WGT_LAST))
+            gs = jax.lax.cond(
+                is_gs,
+                lambda t: jax.tree.map(lambda a, b: a + b, t, gs_d),
+                lambda t: t, carry["gs"])
             carry = dict(carry, gb=gb, gs=gs,
                          loss=carry["loss"] + ce,
                          nloss=carry["nloss"] + nl)
@@ -1533,12 +1708,31 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
         use_ag = P_ * spec.mbB * Wb * 2 <= _exchange_ag_max()
 
         def make_tick():
-            route = _build_route(tab, P_, pp, snds, use_ag, s_idx)
+            route_x, route_l = _build_route(tab, P_, pp, snds, use_ag,
+                                            s_idx)
+            defer = tab.overlap and route_x.has_xdev
+            xdev_have = [cd for cd in snds
+                         if cd not in (SEND_NONE, SEND_F_LOC, SEND_B_LOC)]
 
-            def tick(carry, row_all):
-                carry, out, row = tick_core(carry, row_all, codes)
-                fq, bq = route(carry, out, row_all, row)
-                carry = dict(carry, fq=pin_buf(fq), bq=pin_buf(bq))
+            def skip_quiet(route_row_all, fq, bq, payload):
+                # Quiet ticks (no device holds a cross-device send code —
+                # the row is replicated table data, so the predicate is
+                # SPMD-uniform) skip the collective rendezvous entirely.
+                # The overlap table's stretched steady state has several
+                # of these per period; on a latency-bound wire they are
+                # pure fixed cost.
+                if not xdev_have:
+                    return fq, bq
+                anyx = jnp.any(functools.reduce(
+                    jnp.logical_or,
+                    [route_row_all[:, 5] == cd for cd in xdev_have]))
+                return jax.lax.cond(
+                    anyx,
+                    lambda a: route_x(a[0], a[1], a[2], route_row_all,
+                                      route_row_all[s_idx]),
+                    lambda a: (a[0], a[1]), (fq, bq, payload))
+
+            def repin(carry):
                 carry = dict(carry, act=pin_buf(carry["act"]))
                 if split:
                     carry = dict(carry, wx=pin_buf(carry["wx"]),
@@ -1547,7 +1741,35 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
                     carry = dict(carry, rmt=pin_buf(carry["rmt"]))
                 return carry
 
-            return tick
+            if not defer:
+                def tick(carry, rows):
+                    row_all, _ = rows
+                    carry, out, row = tick_core(carry, row_all, codes)
+                    fq, bq = skip_quiet(row_all, carry["fq"],
+                                        carry["bq"], out)
+                    fq, bq = route_l(fq, bq, out, row)
+                    return repin(dict(carry, fq=pin_buf(fq),
+                                      bq=pin_buf(bq)))
+                return tick, False
+
+            # double-buffered exchange: this tick's collective delivers
+            # the payload produced LAST tick (carry["wire"]) using last
+            # tick's routing row — the collective shares no dataflow
+            # with tick_core (which reads the pre-delivery queues), so
+            # XLA is free to run it concurrently with the compute.  The
+            # table's 2-tick cross-device gap (tasktable overlap mode)
+            # guarantees no consumer needs the payload any earlier;
+            # local channels keep same-tick delivery (1-tick gap).
+            def tick(carry, rows):
+                row_all, prow_all = rows
+                fq, bq = skip_quiet(prow_all, carry["fq"],
+                                    carry["bq"], carry["wire"])
+                carry, out, row = tick_core(carry, row_all, codes)
+                fq, bq = route_l(fq, bq, out, row)
+                return repin(dict(carry, fq=pin_buf(fq),
+                                  bq=pin_buf(bq), wire=out))
+
+            return tick, True
 
         # ---- the op stream: the factored plan replayed tick-for-tick
         # (warmup rows, the steady-state period template advanced by its
@@ -1555,18 +1777,34 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
         # re-derived per tick) — replay_phases() is asserted above to be
         # a pure re-encoding of the table, so the executor literally
         # consumes the factorization.  One scan, one compiled tick body.
-        tick = make_tick()
+        # The deferred route additionally scans over the stream shifted
+        # by one tick (a null first row), giving each tick its
+        # predecessor's routing columns.
+        tick, defer = make_tick()
+        carry0 = carry_init()
+        if defer:
+            carry0["wire"] = jnp.zeros((spec.mbB, Wb), jnp.uint16)
         carry, _ = jax.lax.scan(
             lambda cr, rw: (tick(cr, rw), None),
-            vary(carry_init()), jnp.asarray(stream))
+            vary(carry0), (jnp.asarray(stream), jnp.asarray(prev_stream)))
 
-        gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
+        if spec.grad_psum_bits:
+            from repro.optim.compression import compressed_psum
+            ef_local = jax.tree.map(lambda a: a[0], psum_ef)
+            gs, new_ef = compressed_psum(carry["gs"], pp, ef_local,
+                                         bits=spec.grad_psum_bits)
+            new_ef = jax.tree.map(lambda a: a[None], new_ef)
+        else:
+            gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
         loss = jax.lax.psum(carry["loss"], pp)
         n = jax.lax.psum(carry["nloss"], pp)
         metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
         if ocfg is None:
             gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
-            return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
+            grads = {"blocks": gb, **{k: gs[k] for k in gs}}
+            if spec.grad_psum_bits:
+                return grads, metrics, new_ef
+            return grads, metrics
 
         # ---- in-executor fused optimizer (make_train_update_fn): the
         # AdamW step runs here, inside the shard_map region, directly on
@@ -1636,8 +1874,33 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
         return jax_compat.shard_map(spmd_entry, mesh=mesh,
                                     in_specs=in_specs,
                                     out_specs=out_specs,
-                                    manual_axes={pp})(stage_iota, params,
+                                    manual_axes=manual)(stage_iota, params,
                                                       batch)
+
+    def call_ef(params, batch, psum_ef):
+        """Grads fn with the compressed shared-gradient psum: the
+        error-feedback residual is per-device state, stacked ``[P,
+        ...]`` over the pipe axis exactly like the block leaves, and
+        threaded through every step (see :func:`init_psum_ef`)."""
+        ef_specs = jax.tree.map(lambda _: P(pp), psum_ef)
+        in_specs = (P(pp), param_specs(params),
+                    jax.tree.map(lambda _: P(), batch), ef_specs)
+        out_specs = (param_specs(params),
+                     {"loss": P(), "n_microbatches": P()}, ef_specs)
+
+        def spmd_entry(stage_iota, params, batch, psum_ef):
+            if jax_compat.HAS_VMA:
+                return spmd(stage_iota, params, batch, psum_ef=psum_ef)
+            from repro.models.sharding import no_shard_hints
+            with no_shard_hints():
+                return spmd(stage_iota, params, batch, psum_ef=psum_ef)
+
+        stage_iota = jnp.arange(tab.P, dtype=jnp.int32)
+        return jax_compat.shard_map(spmd_entry, mesh=mesh,
+                                    in_specs=in_specs,
+                                    out_specs=out_specs,
+                                    manual_axes=manual)(stage_iota, params,
+                                                      batch, psum_ef)
 
     def call_update(params, opt_state, batch):
         pspec = param_specs(params)
@@ -1659,13 +1922,30 @@ def _make_train_grads_phase(spec: PipelineSpec, mesh, ocfg=None,
         return jax_compat.shard_map(spmd_entry, mesh=mesh,
                                     in_specs=in_specs,
                                     out_specs=out_specs,
-                                    manual_axes={pp})(stage_iota, params,
+                                    manual_axes=manual)(stage_iota, params,
                                                       opt_state, batch)
 
-    fn = call if ocfg is None else call_update
+    if ocfg is not None:
+        fn = call_update
+    elif spec.grad_psum_bits:
+        fn = call_ef
+    else:
+        fn = call
     fn.trace_counts = counts
     fn.phase_plan = plan
     return fn
+
+
+def init_psum_ef(spec: PipelineSpec, params):
+    """Zero error-feedback state for ``spec.grad_psum_bits``: one fp32
+    residual per shared-parameter leaf, stacked ``[P, ...]`` over the
+    pipe axis (each device carries its own residual).  Thread it
+    through the grads fn: ``grads, metrics, ef = fn(params, batch,
+    ef)``."""
+    shared = {k: params[k] for k in params if k != "blocks"}
+    return jax.tree.map(
+        lambda a: jnp.zeros((spec.table.P,) + a.shape, jnp.float32),
+        shared)
 
 
 def _ppermute(x, axis, perm):

@@ -577,6 +577,24 @@ def retime_with_comm(sched: Schedule, tc: float,
     return out
 
 
+def comm_calibration(sched: Schedule, tc: float) -> Dict[str, float]:
+    """Predicted makespans (grains) of ``sched`` under the three wire
+    models the executor can realize: ``zero`` (free communication, the
+    compute floor), ``sync`` (each device-crossing edge blocks its
+    producer/consumer for ``tc`` — the in-tick synchronous exchange),
+    and ``async`` (latency delays only the consumer — the
+    double-buffered overlapped exchange, which hides ``tc`` behind the
+    next tick's compute).
+
+    Calibrate against a measurement by scaling with a measured sync
+    step: ``scale = measured_sync / cal['sync']`` turns the async
+    prediction into wall-clock — see
+    ``tests/helpers/overlap_calibration_check.py``."""
+    return {"zero": retime_with_comm(sched, 0.0).total_time(),
+            "sync": retime_with_comm(sched, tc, sync=True).total_time(),
+            "async": retime_with_comm(sched, tc, sync=False).total_time()}
+
+
 def _dep_keys(t: Task, P: int, v: int,
               r_chunks: FrozenSet[int] = frozenset(), n_seq: int = 1):
     q = t.seq

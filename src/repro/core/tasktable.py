@@ -124,6 +124,14 @@ class TaskTable:
                                  # chunk -> KV-carry slots (per microbatch,
                                  # lifetime F[mb,0] -> B[mb,0])
     placement_name: str = "interleaved"
+    #: delivery contract of the wire.  ``False``: a cross-device payload
+    #: produced at tick t is in its queue slot before tick t+1 runs
+    #: (synchronous in-tick exchange).  ``True``: the exchange is
+    #: double-buffered — the payload is delivered DURING tick t+1
+    #: (overlapping that tick's compute) and readable only from tick
+    #: t+2, so every cross-device dependency is assigned a 2-tick gap.
+    #: Device-local handoffs keep the 1-tick gap in both modes.
+    overlap: bool = False
 
     @property
     def has_w(self) -> bool:
@@ -231,7 +239,7 @@ _SEND_CHANNEL = {SEND_FWD: "dn", SEND_HOPF: "dn", SEND_F_UP: "up",
                  SEND_B_DOWN: "dn", SEND_B_LOC: "loc"}
 
 
-def build_task_table(sched: Schedule) -> TaskTable:
+def build_task_table(sched: Schedule, overlap: bool = False) -> TaskTable:
     P, v, m, ns = sched.P, sched.v, sched.m, sched.n_seq
     pl = sched.pl
     rcs = sched.r_chunks()
@@ -241,6 +249,16 @@ def build_task_table(sched: Schedule) -> TaskTable:
         return pl.device(stage, chunk)
 
     # ---- tick assignment (topological levels, device order preserved) --
+    # ``overlap=False``: every dependency's payload/result is visible one
+    # tick after production (the exchange runs synchronously inside the
+    # producing tick).  ``overlap=True``: the double-buffered wire
+    # delivers a cross-device payload DURING the tick after production
+    # (overlapping that tick's compute), so its consumer needs a 2-tick
+    # gap; same-device handoffs (local channels, ring stashes, device
+    # order) stay 1-tick.  Per-device task order is identical in both
+    # modes (same task sort, monotone per-device ticks), so gradient
+    # accumulation order — and hence bitwise equivalence — is unchanged.
+    xgap = 2 if overlap else 1
     tasks = sorted(sched.tasks, key=lambda t: (t.start, t.kind == B,
                                                t.stage))
     tick: Dict[Tuple, int] = {}
@@ -249,9 +267,8 @@ def build_task_table(sched: Schedule) -> TaskTable:
         d = dev(t.stage, t.chunk)
         lo = dev_last[d] + 1
         for dep in _dep_keys(t, P, v, rcs, ns):
-            # cross-device or same-device: either way the payload /
-            # result is visible one tick later
-            lo = max(lo, tick[dep] + 1)
+            gap = xgap if dev(dep[3], dep[2]) != d else 1
+            lo = max(lo, tick[dep] + gap)
         tick[t.key()] = lo
         dev_last[d] = lo
     T = max(tick.values()) + 1
@@ -497,7 +514,8 @@ def build_task_table(sched: Schedule) -> TaskTable:
                      bq_depth=bq_depth, act_depth=act_depth,
                      wstash_depth=wstash_depth, rmt_depth=rmt_depth,
                      name=sched.name, n_seq=ns, seq=seq, kv_slot=kvs,
-                     kv_depth=kv_depth, placement_name=pl.name)
+                     kv_depth=kv_depth, placement_name=pl.name,
+                     overlap=overlap)
 
 
 # ---------------------------------------------------------------------------

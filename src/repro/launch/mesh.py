@@ -25,6 +25,19 @@ def make_study_mesh(pp: int, dp: int, tp: int):
     return make_mesh((pp, dp, tp), ("pod", "data", "model"))
 
 
+def make_host_study_mesh(pp: int, dp: int = 1, tp: int = 1):
+    """Host-device study mesh for CPU benchmarks/tests: a bare ("pp",)
+    pipe when dp == tp == 1, else the full ("pp", "data", "model")
+    lattice (uses pp*dp*tp virtual host devices — force them with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before first jax
+    init).  Returns (mesh, rules) ready for the pipeline step builders."""
+    if dp == 1 and tp == 1:
+        mesh = make_mesh((pp,), ("pp",))
+        return mesh, {"pp": "pp", "dp": None, "tp": None, "fsdp": None}
+    mesh = make_mesh((pp, dp, tp), ("pp", "data", "model"))
+    return mesh, {"pp": "pp", "dp": "data", "tp": "model", "fsdp": None}
+
+
 def production_rules(multi_pod: bool, *, serving: bool = False,
                      pipeline: bool = False) -> Dict[str, object]:
     """logical axis -> physical axes for the production meshes.

@@ -374,11 +374,17 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
         assert plan.num_chunks == 2, \
             f"{plan.schedule} is a fixed v=2 V-shape construction, " \
             f"got num_chunks={plan.num_chunks}"
+    psum_bits = {"none": None, "int8_ef": 8, "int16_ef": 16}[
+        plan.grad_compression]
+    if psum_bits and (plan.seq_chunks > 1 or plan.kernels == "fused"):
+        raise ValueError(
+            "grad_compression composes with the grads-fn pipeline step "
+            "only (not seq-chunked or in-executor fused-AdamW runs)")
     spec = make_pipeline_spec(
         cfg, P=P_, v=plan.num_chunks, m=m, microbatch=mbg,
         seq_len=shape.seq_len, schedule=plan.schedule, pp_axis=pp_axis,
-        n_seq=plan.seq_chunks, kernels=plan.kernels,
-        **plan_schedule_kwargs(plan))
+        n_seq=plan.seq_chunks, kernels=plan.kernels, wire=plan.wire,
+        grad_psum_bits=psum_bits, **plan_schedule_kwargs(plan))
     if extras is not None:
         extras["spec"] = spec
     offload = plan.offload.enabled and plan.offload.num_offload_chunks > 0
@@ -471,16 +477,38 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
 
     grads_fn = make_train_grads_fn(spec, mesh, executor=executor)
 
-    def step(params, opt_state, batch):
+    def ship_deep(g_deep):
+        """Deep-chunk gradients ride the host PCIe link quantized to the
+        plan's grad_compression width (symmetric per-leaf scale; the
+        one-shot shipment carries no error feedback — that belongs to
+        the *repeated* shared-grad psum).  fp32 when uncompressed."""
+        if not psum_bits:
+            return g_deep
+        from repro.optim.compression import quantize_int8
+        if psum_bits > 8:             # int16 shipment
+            def q16(g):
+                g = g.astype(jnp.float32)
+                s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 32767.0
+                return (jnp.clip(jnp.round(g / s), -32767,
+                                 32767).astype(jnp.int16), s)
+            return jax.tree.map(q16, g_deep)
+        return jax.tree.map(
+            lambda g: quantize_int8(g.astype(jnp.float32)), g_deep)
+
+    def step(params, opt_state, batch, psum_ef=None):
         with shard_env(mesh, rules):
-            grads, metrics = grads_fn(params, batch)
+            if psum_bits:
+                grads, metrics, new_ef = grads_fn(params, batch, psum_ef)
+            else:
+                grads, metrics = grads_fn(params, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32) / m,
                                  grads)
             if not offload:
                 master, opt_state, om = adamw_update(grads, opt_state,
                                                      ocfg)
                 params = cast_like(master, params)
-                return params, opt_state, {**metrics, **om}
+                out = (params, opt_state, {**metrics, **om})
+                return out + ((new_ef,) if psum_bits else ())
             # Chronos-Offload: device AdamW updates shallow chunks +
             # shared params; the deep chunks' gradients ship to the host
             # optimizer (caller drives the submit/collect overlap).
@@ -496,19 +524,34 @@ def make_pipeline_train_step(cfg: ModelConfig, shape: ShapeConfig,
                           for k in master if k != "blocks"}
             params = {"blocks": merge_deep_shallow(new_shallow, p_deep),
                       **shared_new}
-            return params, opt_state, {**metrics, **om}, g_deep
+            out = (params, opt_state, {**metrics, **om},
+                   ship_deep(g_deep))
+            return out + ((new_ef,) if psum_bits else ())
 
     metric_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
                              {"loss": 0, "n_microbatches": 0,
                               "grad_norm": 0, "lr": 0})
     in_shardings = (p_shard, o_shard, b_shard)
+    arg_structs = (params_s, opt_s, structs)
+    out_shardings = [p_shard, o_shard, metric_sh]
     if offload:
         deep_s = jax.eval_shape(
             lambda p: split_deep_shallow(p["blocks"], vch, n_off)[1],
             params_s)
         deep_shard = resolve_shardings(deep_s, logical["blocks"], mesh,
                                        {**rules, "pp": pp_axis})
-        out_shardings = (p_shard, o_shard, metric_sh, deep_shard)
-    else:
-        out_shardings = (p_shard, o_shard, metric_sh)
-    return step, (params_s, opt_s, structs), in_shardings, out_shardings
+        if psum_bits:
+            deep_shard = jax.tree.map(
+                lambda s: (s, NamedSharding(mesh, P())), deep_shard)
+        out_shardings.append(deep_shard)
+    if psum_bits:
+        from repro.core.pipeline_runtime import init_psum_ef
+        ef_s = jax.eval_shape(
+            functools.partial(init_psum_ef, spec), params_s)
+        ef_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, sanitize_spec(
+                P(pp_axis), s.shape, mesh)), ef_s)
+        arg_structs = arg_structs + (ef_s,)
+        in_shardings = in_shardings + (ef_shard,)
+        out_shardings.append(ef_shard)
+    return step, arg_structs, in_shardings, tuple(out_shardings)

@@ -180,7 +180,8 @@ def train_pipeline(tc: TrainConfig, *, mesh,
     """
     cfg, shape, plan, ocfg = tc.model, tc.shape, tc.plan, tc.optimizer
     steps = steps or ocfg.total_steps
-    from repro.core.pipeline_runtime import init_pipeline_params
+    from repro.core.pipeline_runtime import (init_pipeline_params,
+                                             init_psum_ef)
     from repro.jax_compat import set_mesh
     assert mesh is not None and plan.pp_axis in mesh.axis_names, \
         "train_pipeline needs a mesh carrying plan.pp_axis"
@@ -189,9 +190,10 @@ def train_pipeline(tc: TrainConfig, *, mesh,
     rules["pp"] = plan.pp_axis
 
     extras: Dict = {}
-    step_fn, (params_s, opt_s, structs), in_sh, out_sh = \
+    step_fn, arg_structs, in_sh, out_sh = \
         make_pipeline_train_step(cfg, shape, plan, ocfg, mesh, rules,
                                  extras=extras)
+    structs = arg_structs[2]        # (params, opt, batch[, psum_ef])
     spec = extras["spec"]
     m, mbg = structs["tokens"].shape[:2]
     v = plan.num_chunks
@@ -203,6 +205,13 @@ def train_pipeline(tc: TrainConfig, *, mesh,
     with shard_env(mesh, rules):
         params, _ = init_pipeline_params(jax.random.key(tc.seed), cfg,
                                          spec.layout)
+    # Compressed shared-grad psum (plan.grad_compression): the per-device
+    # error-feedback residual is driver-held state threaded through every
+    # step.  It is NOT checkpointed — a restart re-zeros it, which costs
+    # one step of quantization error (bounded by the wire grid) and keeps
+    # checkpoints layout-portable across compression settings.
+    psum_bits = spec.grad_psum_bits
+    psum_ef = init_psum_ef(spec, params) if psum_bits else None
 
     if offload:
         shallow0, deep0 = split_deep_shallow(params["blocks"], v, n_off)
@@ -306,9 +315,19 @@ def train_pipeline(tc: TrainConfig, *, mesh,
                 collect_wait_s += time.time() - t_c
             if watchdog is not None:
                 watchdog.arm()
-            out = jit_step(params, opt_state, batch)
+            out = jit_step(params, opt_state, batch, psum_ef) \
+                if psum_bits else jit_step(params, opt_state, batch)
+            if psum_bits:
+                *out, psum_ef = out
             if offload:
                 params, opt_state, metrics, deep_grads = out
+                if psum_bits:
+                    # host shipment arrives quantized; the host AdamW
+                    # wants fp32
+                    from repro.optim.compression import dequantize_int8
+                    deep_grads = jax.tree.map(
+                        lambda t: dequantize_int8(*t), deep_grads,
+                        is_leaf=lambda x: isinstance(x, tuple))
                 runner.submit(deep_grads)     # grads down + host AdamW
                 pending = True
             else:

@@ -31,6 +31,7 @@ def compressed_psum(grads, axis: str, ef,
     manual over ``axis``.
     """
     qmax = 2.0 ** (bits - 1) - 1
+    wdt = jnp.int8 if bits <= 8 else jnp.int16         # wire dtype
 
     def one(g, e):
         g = g.astype(jnp.float32) + e
@@ -39,8 +40,7 @@ def compressed_psum(grads, axis: str, ef,
         scale = jnp.maximum(amax, 1e-30) / qmax
         q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
         new_e = g - q * scale
-        q8 = q.astype(jnp.int8)                        # wire dtype
-        summed = jax.lax.psum(q8.astype(jnp.int32), axis)
+        summed = jax.lax.psum(q.astype(wdt).astype(jnp.int32), axis)
         return summed.astype(jnp.float32) * scale, new_e
 
     out = jax.tree.map(one, grads, ef)

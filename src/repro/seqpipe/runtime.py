@@ -42,6 +42,8 @@ IR/table-level only for now).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -49,8 +51,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat
 from repro.core.pipeline_runtime import PipelineSpec, _embed_tokens
-from repro.core.tasktable import (SEND_BWD, SEND_FWD, SEND_HOPB,
-                                  SEND_HOPF)
+from repro.core.tasktable import (SEND_B_LOC, SEND_BWD, SEND_F_LOC,
+                                  SEND_FWD, SEND_HOPB, SEND_HOPF,
+                                  SEND_NONE)
 from repro.models import backend as compute_backend
 from repro.models import layers as L
 from repro.models.backend import head_loss
@@ -425,6 +428,13 @@ def _make_seq_train_grads_legacy(spec: PipelineSpec, mesh):
         metrics = {"loss": loss / jnp.maximum(n, 1.0), "n_microbatches": n}
         return {"blocks": gb, **{k: gs[k] for k in gs}}, metrics
 
+    # full-manual fallback for multi-axis meshes on the pinned jaxlib —
+    # see the core phase executor for the rationale
+    full_manual = (not jax_compat.HAS_VMA) and any(
+        ax != spec.pp_axis and mesh.shape[ax] > 1
+        for ax in mesh.axis_names)
+    manual = frozenset(mesh.axis_names) if full_manual else {pp}
+
     def call(params, batch):
         in_specs = (
             P(pp),
@@ -453,7 +463,7 @@ def _make_seq_train_grads_legacy(spec: PipelineSpec, mesh):
         return jax_compat.shard_map(spmd_entry, mesh=mesh,
                                     in_specs=in_specs,
                                     out_specs=out_specs,
-                                    manual_axes={pp})(stage_iota, params,
+                                    manual_axes=manual)(stage_iota, params,
                                                       batch)
     return call
 
@@ -498,6 +508,19 @@ def _make_seq_train_grads_phase(spec: PipelineSpec, mesh):
             off[c] = total
             total += depths.get(c, 0)
         return jnp.asarray(off), total
+
+    # one-tick-shifted row stream for the deferred (double-buffered)
+    # route: tick t delivers tick t-1's payload with t-1's columns
+    null_row = np.zeros((1, tab.P, 16), np.int32)
+    null_row[..., 3:] = -1
+    null_row[..., 5] = 0                            # SEND_NONE
+    prev_stream = np.concatenate([null_row, stream[:-1]], axis=0)
+    # full-manual fallback for multi-axis meshes on the pinned jaxlib —
+    # see the core phase executor for the rationale
+    full_manual = (not jax_compat.HAS_VMA) and any(
+        ax != spec.pp_axis and mesh.shape[ax] > 1
+        for ax in mesh.axis_names)
+    manual = frozenset(mesh.axis_names) if full_manual else {pp}
 
     act_offsets, total_act = offsets(tab.act_depth)
     kv_offsets, total_kv = offsets(tab.kv_depth)
@@ -775,37 +798,91 @@ def _make_seq_train_grads_phase(spec: PipelineSpec, mesh):
                 is_r = op >= RCP_MID
                 carry = dict(carry, rmt=wr(
                     carry["rmt"], st_a, jnp.where(is_r, grm, total_rmt)))
-            gb = [jax.tree.map(
-                lambda g, d: jax.lax.dynamic_update_index_in_dim(
-                    g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
-                    + d, c, 0), gt, dt)
-                for gt, dt in zip(carry["gb"], gb_d)]
-            gs = jax.tree.map(lambda a, b: a + b, carry["gs"], gs_d)
+            # only B ops produce gradient deltas (F/R/idle return exact
+            # zeros): gate the accumulator traffic off every other tick
+            # — see the core executor's tick_core for the rationale
+            gb = jax.lax.cond(
+                is_b,
+                lambda t: [jax.tree.map(
+                    lambda g, d: jax.lax.dynamic_update_index_in_dim(
+                        g, jax.lax.dynamic_index_in_dim(g, c, 0, False)
+                        + d, c, 0), gt, dt)
+                    for gt, dt in zip(t, gb_d)],
+                lambda t: list(t), carry["gb"])
+            gs = jax.lax.cond(
+                is_b,
+                lambda t: jax.tree.map(lambda a, b: a + b, t, gs_d),
+                lambda t: t, carry["gs"])
             carry = dict(carry, gb=gb, gs=gs,
                          loss=carry["loss"] + ce,
                          nloss=carry["nloss"] + nl)
             return carry, out, row
 
         def make_tick():
-            route = _build_route(tab, P_, pp, snds, use_ag, s_idx)
+            route_x, route_l = _build_route(tab, P_, pp, snds, use_ag,
+                                            s_idx)
+            defer = tab.overlap and route_x.has_xdev
+            xdev_have = [cd for cd in snds
+                         if cd not in (SEND_NONE, SEND_F_LOC, SEND_B_LOC)]
 
-            def tick(carry, row_all):
-                carry, out, row = tick_core(carry, row_all)
-                fq, bq = route(carry, out, row_all, row)
-                carry = dict(carry, fq=pin_buf(fq), bq=pin_buf(bq),
-                             act=pin_buf(carry["act"]),
+            def skip_quiet(route_row_all, fq, bq, payload):
+                # quiet ticks skip the collective rendezvous — the row
+                # is replicated table data, so the predicate is
+                # SPMD-uniform (see the core executor)
+                if not xdev_have:
+                    return fq, bq
+                anyx = jnp.any(functools.reduce(
+                    jnp.logical_or,
+                    [route_row_all[:, 5] == cd for cd in xdev_have]))
+                return jax.lax.cond(
+                    anyx,
+                    lambda a: route_x(a[0], a[1], a[2], route_row_all,
+                                      route_row_all[s_idx]),
+                    lambda a: (a[0], a[1]), (fq, bq, payload))
+
+            def repin(carry):
+                carry = dict(carry, act=pin_buf(carry["act"]),
                              kv=pin_buf(carry["kv"]),
                              dkv=pin_buf(carry["dkv"]))
                 if remat:
                     carry = dict(carry, rmt=pin_buf(carry["rmt"]))
                 return carry
 
-            return tick
+            if not defer:
+                def tick(carry, rows):
+                    row_all, _ = rows
+                    carry, out, row = tick_core(carry, row_all)
+                    fq, bq = skip_quiet(row_all, carry["fq"],
+                                        carry["bq"], out)
+                    fq, bq = route_l(fq, bq, out, row)
+                    return repin(dict(carry, fq=pin_buf(fq),
+                                      bq=pin_buf(bq)))
+                return tick, False
 
-        tick = make_tick()
+            # double-buffered exchange: the collective delivers LAST
+            # tick's payload with last tick's routing row, independent
+            # of this tick's compute (see the core executor); the
+            # table's overlap mode gives cross-device consumers the
+            # required 2-tick gap, local channels stay same-tick.
+            def tick(carry, rows):
+                row_all, prow_all = rows
+                fq, bq = skip_quiet(prow_all, carry["fq"],
+                                    carry["bq"], carry["wire"])
+                carry, out, row = tick_core(carry, row_all)
+                fq, bq = route_l(fq, bq, out, row)
+                return repin(dict(carry, fq=pin_buf(fq),
+                                  bq=pin_buf(bq), wire=out))
+
+            return tick, True
+
+        tick, defer = make_tick()
+        carry0 = carry_init()
+        if defer:
+            carry0["wire"] = jnp.zeros((spec.mbB, Wb), jnp.uint16)
         carry, _ = jax.lax.scan(
             lambda cr, rw: (tick(cr, rw), None),
-            jax.tree.map(to_varying, carry_init()), jnp.asarray(stream))
+            jax.tree.map(to_varying, carry0),
+            (jnp.asarray(stream), jnp.asarray(prev_stream)))
 
         gb = [jax.tree.map(lambda a: a[None], t) for t in carry["gb"]]
         gs = jax.tree.map(lambda a: jax.lax.psum(a, pp), carry["gs"])
@@ -842,7 +919,7 @@ def _make_seq_train_grads_phase(spec: PipelineSpec, mesh):
         return jax_compat.shard_map(spmd_entry, mesh=mesh,
                                     in_specs=in_specs,
                                     out_specs=out_specs,
-                                    manual_axes={pp})(stage_iota, params,
+                                    manual_axes=manual)(stage_iota, params,
                                                       batch)
 
     call.trace_counts = counts

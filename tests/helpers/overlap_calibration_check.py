@@ -1,0 +1,100 @@
+"""Subprocess helper: measured-vs-predicted overlap calibration.
+
+Runs the chronos pipeline at P=4 twice — synchronous in-tick exchange
+(overlap=False) and the double-buffered overlapped exchange
+(overlap=True) — and checks which cost model the overlapped executor's
+measured steady step tracks.  Two predictions, both anchored on the
+sync measurement:
+
+- ``pred_async``: ``comm_calibration``'s tc-overlapped retime, scaled
+  by the measured-sync/modelled-sync grain ratio.  What the overlapped
+  wire should cost if the stretched table's skew ticks are (nearly)
+  free.
+- ``pred_naive``: ``M_sync * T_overlap / T_sync`` — what the
+  overlapped table costs if every skew tick pays full per-tick price
+  (this is what the executor measured before idle ticks were gated off
+  the gradient-accumulator traffic and quiet ticks off the collective).
+
+On a single-core host the wire is shared memory, so overlap cannot
+beat sync in absolute terms; the CPU-tolerant assertion is that the
+measurement lands strictly closer to ``pred_async`` than to
+``pred_naive``, plus a ratio guard that overlap never costs more than
+half the naive stretch.
+
+Usage: python overlap_calibration_check.py [P] [m]
+Prints OK=1 M_SYNC=... M_OV=... PRED=... for the parent test.
+"""
+import os
+import sys
+import time
+
+P_ = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+m = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.core.pipeline_runtime import (init_pipeline_params,  # noqa: E402
+                                         make_pipeline_spec,
+                                         make_train_grads_fn)
+from repro.core.schedule import comm_calibration  # noqa: E402
+from repro.core.schedules import get_schedule  # noqa: E402
+from repro.core.tasktable import build_task_table  # noqa: E402
+from repro.jax_compat import make_mesh  # noqa: E402
+from repro.models import shard_env  # noqa: E402
+
+TC = 0.25          # nominal P2P latency (grains) for the prediction
+REPS, ROUNDS = 6, 3
+
+cfg = get_reduced("tinyllama-1.1b")
+mbB, S = 2, 17
+mesh = make_mesh((P_,), ("pp",))
+params, _ = init_pipeline_params(
+    jax.random.key(0), cfg,
+    make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB, seq_len=S,
+                       schedule="chronos").layout)
+tokens = jax.random.randint(jax.random.key(1), (m, mbB, S), 0,
+                            cfg.vocab_size)
+batch = {"tokens": tokens}
+
+compiled = {}
+with shard_env(mesh, {}):
+    for name, overlap in (("sync", False), ("overlap", True)):
+        spec = make_pipeline_spec(cfg, P=P_, v=2, m=m, microbatch=mbB,
+                                  seq_len=S, schedule="chronos",
+                                  overlap=overlap)
+        fn = make_train_grads_fn(spec, mesh, executor="phase")
+        compiled[name] = jax.jit(fn).lower(params, batch).compile()
+        jax.block_until_ready(compiled[name](params, batch))
+
+    best = {"sync": float("inf"), "overlap": float("inf")}
+    for _ in range(ROUNDS):                 # interleave to de-bias drift
+        for name, c in compiled.items():
+            for _ in range(REPS):
+                t0 = time.perf_counter()
+                jax.block_until_ready(c(params, batch))
+                best[name] = min(best[name],
+                                 time.perf_counter() - t0)
+
+M_sync = best["sync"] * 1e3
+M_ov = best["overlap"] * 1e3
+sched = get_schedule("chronos", P_, m, v=2)
+cal = comm_calibration(sched, TC)
+scale = M_sync / cal["sync"]                # ms per grain, sync-anchored
+pred = cal["async"] * scale                 # predicted overlapped step
+t_sync = build_task_table(sched, overlap=False).op.shape[0]
+t_ov = build_task_table(sched, overlap=True).op.shape[0]
+pred_naive = M_sync * t_ov / t_sync         # every skew tick full price
+
+gap_async = abs(M_ov - pred)
+gap_naive = abs(M_ov - pred_naive)
+ratio = M_ov / M_sync
+ratio_cap = (1.0 + t_ov / t_sync) / 2       # halfway to the naive stretch
+print(f"M_SYNC={M_sync:.2f} M_OV={M_ov:.2f} PRED={pred:.2f} "
+      f"PRED_NAIVE={pred_naive:.2f} cal={cal} ticks={t_sync}/{t_ov} "
+      f"gap_async={gap_async:.2f} gap_naive={gap_naive:.2f} "
+      f"ratio={ratio:.3f} cap={ratio_cap:.3f}")
+ok = gap_async < gap_naive and ratio <= ratio_cap
+print(f"OK={int(ok)}")
+sys.exit(0 if ok else 1)

@@ -103,6 +103,58 @@ def test_ppermute_skips_degenerate_perms():
         assert out is x
 
 
+@pytest.mark.parametrize("schedule,n_seq", [("chronos", 1),
+                                            ("chronos_seq", 2)])
+def test_deferred_exchange_short_circuits_without_xdev(schedule, n_seq):
+    """P=1 under ``overlap=True``: the table carries the overlap flag
+    but holds no cross-device send code, so the double-buffered wire
+    must collapse to the synchronous tick — no send/recv buffer pair,
+    no exchange collective in the compiled HLO (mirroring
+    ``_ppermute``'s identity skip) — in BOTH runtimes (core phase
+    executor and the seq-chunked executor), with gradients bitwise
+    equal to the overlap=False build."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.core.pipeline_runtime import (init_pipeline_params,
+                                             make_pipeline_spec,
+                                             make_train_grads_fn)
+    from repro.jax_compat import make_mesh
+    from repro.models import shard_env
+
+    cfg = get_reduced("tinyllama-1.1b")
+    mesh = make_mesh((1,), ("pp",))
+    S = 13 if n_seq > 1 else 12       # seq executor: n_seq | (S - 1)
+    kw = dict(P=1, v=2, m=2, microbatch=2, seq_len=S,
+              schedule=schedule)
+    if n_seq > 1:
+        kw["n_seq"] = n_seq
+    layout = make_pipeline_spec(cfg, **kw).layout
+    params, _ = init_pipeline_params(jax.random.key(0), cfg, layout)
+    tokens = jax.random.randint(jax.random.key(1), (2, 2, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    grads = {}
+    with shard_env(mesh, {}):
+        for name, ov in (("sync", False), ("overlap", True)):
+            spec = make_pipeline_spec(cfg, **kw, overlap=ov)
+            assert spec.table.overlap is ov
+            fn = jax.jit(make_train_grads_fn(spec, mesh,
+                                             executor="phase"))
+            hlo = fn.lower(params, batch).compile().as_text()
+            # the wire collectives must be absent; (all-reduce for the
+            # final loss/shared-grad psum is outside the wire protocol)
+            assert "collective-permute" not in hlo
+            assert "all-gather" not in hlo
+            g, _ = fn(params, batch)
+            grads[name] = g
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        grads["sync"], grads["overlap"])
+
+
 def test_payload_packing_roundtrip_bitwise():
     """The byte-packed wire format is an exact (bitcast) round-trip,
     including the broadcast-row aux scalar."""
