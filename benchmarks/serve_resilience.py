@@ -1,0 +1,134 @@
+"""Resilient-serving benchmark: goodput, deadline hit rate, and
+recovery phase timings under bursty traffic with injected faults.
+
+Serves a seeded bursty trace (``repro.serve.bursty_requests`` — a
+two-state modulated Poisson arrival process with a heavy generation
+tail) with per-request deadlines and a bounded admission queue through
+:func:`repro.serve.serve_resilient`, injecting a slot corruption and a
+mid-decode device loss scheduled from a no-fault calibration pass.
+Records, per scenario:
+
+- lifecycle tallies (completed / expired / shed / failed, retry and
+  preemption counts) and the deadline hit rate,
+- goodput (completed-request tokens per wall second),
+- per-recovery phase timings (detect / replan / remap / readmit /
+  resume) for the elastic P-1 recovery.
+
+The full run (``P=3 -> 2``) writes ``BENCH_serve_resilience.json`` at
+the repo root; ``--check`` is the CI smoke (``P=2 -> 1``, shorter
+trace) and writes ``BENCH_serve_resilience_check.json`` so the
+committed full record is never clobbered — ``scripts/ci.sh`` runs it
+every PR.
+
+Must run standalone: the virtual devices require
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax import.
+"""
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--check", action="store_true",
+                help="CI smoke: P=2, shorter trace")
+ap.add_argument("--devices", type=int, default=0)
+ap.add_argument("--requests", type=int, default=0)
+args = ap.parse_args()
+P = args.devices or (2 if args.check else 3)
+NREQ = args.requests or (8 if args.check else 20)
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={P}"
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from benchmarks.run import write_json  # noqa: E402
+
+CHUNK = 8
+MAX_SEQ = 64
+ARCH = "tinyllama-1.1b"
+DEADLINE_S = 60.0          # generous: misses come from faults/overload
+MAX_QUEUE = NREQ           # bound exists; sized to shed only bursts
+
+
+def main():
+    import jax
+    from repro.configs import get_reduced
+    from repro.ft import SlotCorruption, TickDeviceLoss
+    from repro.models import LM
+    from repro.serve import bursty_requests, serve_resilient, summarize
+
+    cfg = get_reduced(ARCH)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+
+    def traffic(seed, deadline):
+        return bursty_requests(
+            NREQ, chunk=CHUNK, max_seq=MAX_SEQ, rate_lo=2.0,
+            rate_hi=50.0, dwell_lo_s=0.5, dwell_hi_s=0.2,
+            prompt_range=(1, 3), gen_range=(4, 8 if args.check else 12),
+            gen_tail=0.2, deadline_s=deadline, vocab=cfg.vocab_size,
+            seed=seed)
+
+    quiet = lambda *_: None  # noqa: E731
+
+    # calibration pass: no faults, tick-clock admission — compiles the
+    # engine off the record and tells us where mid-decode is
+    base = serve_resilient(cfg, params, traffic(17, None), P=P,
+                           chunk=CHUNK, max_seq=MAX_SEQ, clock=None,
+                           log=quiet)
+    done = sorted(r.done_tick for r in base["finished"].values())
+    loss_tick = done[0] + max(1, (done[-1] - done[0]) // 3)
+    corrupt_tick = min(P + 3, max(2, loss_tick - 1))
+    faults = [SlotCorruption(tick=corrupt_tick, slot=0),
+              TickDeviceLoss(tick=loss_tick, device=P - 1)]
+
+    res = serve_resilient(cfg, params, traffic(17, DEADLINE_S), P=P,
+                          chunk=CHUNK, max_seq=MAX_SEQ, faults=faults,
+                          max_queue=MAX_QUEUE, log=quiet)
+    s = summarize(res)
+    c = res["counts"]
+    assert len(res["recoveries"]) == 1, "device loss did not fire"
+    assert sum(c[k] for k in
+               ("completed", "expired", "shed", "failed")) == NREQ, \
+        "request lost (no terminal state)"
+
+    rows = [
+        ("bursty.goodput", 1e6 / max(s["goodput_tok_s"], 1e-9),
+         {"goodput_tok_s": round(s["goodput_tok_s"], 1),
+          "output_tokens": s["output_tokens"],
+          "elapsed_s": round(s["elapsed_s"], 3),
+          "ticks": res["ticks"]}),
+        ("bursty.lifecycle", 1e6 * max(1, c["retries"]),
+         {"completed": c["completed"], "expired": c["expired"],
+          "shed": c["shed"], "failed": c["failed"],
+          "retries": c["retries"], "preemptions": c["preemptions"]}),
+        ("bursty.deadlines",
+         1e6 * (1.0 - (s["deadline_hit_rate"] or 0.0)),
+         {"with_deadline": c["with_deadline"],
+          "hit_rate": None if s["deadline_hit_rate"] is None
+          else round(s["deadline_hit_rate"], 3)}),
+    ]
+    for i, r in enumerate(res["recoveries"]):
+        total = r.detect_s + r.replan_s + r.remap_s + r.readmit_s \
+            + r.resume_s
+        rows.append((f"recovery{i}.phases", total * 1e6,
+                     {"kind": r.kind, "tick": r.tick,
+                      "p": f"{r.p_from}->{r.p_to}",
+                      "readmitted": r.n_readmitted,
+                      "detect_ms": round(r.detect_s * 1e3, 1),
+                      "replan_ms": round(r.replan_s * 1e3, 1),
+                      "remap_ms": round(r.remap_s * 1e3, 1),
+                      "readmit_ms": round(r.readmit_s * 1e3, 1),
+                      "resume_ms": round(r.resume_s * 1e3, 1)}))
+    name = "serve_resilience_check" if args.check else "serve_resilience"
+    path = write_json(name, rows)
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,13 @@
 #    on 2 forced-host devices and writes BENCH_serve_check.json (the
 #    committed full record BENCH_serve.json is refreshed by running
 #    without --check).
+# 3e. Resilient-serving perf record: benchmarks/serve_resilience.py
+#    --check serves a bursty trace with deadlines under an injected
+#    slot corruption + mid-decode device loss (elastic P=2 -> 1
+#    recovery with re-prefill re-admission) and writes
+#    BENCH_serve_resilience_check.json (the committed full P=3 -> 2
+#    record BENCH_serve_resilience.json is refreshed by running
+#    without --check).
 # 4. Run the fast suite (slow marker deselected) through the same entry
 #    the benchmark harness uses (benchmarks/run.py --check).  The
 #    fault-injection suite (tests/test_ft_and_data.py crash-consistency
@@ -59,8 +66,12 @@ sys.modules['jax'] = None          # poison: any 'import jax' raises
 sys.modules['jaxlib'] = None
 import repro.core.schedule, repro.core.schedules, repro.plan
 import repro.serve                 # admission layer + traffic gen
+import repro.serve.resilience      # recovery records + fault specs
+import repro.ft                    # health / injection decision layer
+from repro.ft import FaultInjector, HealthMonitor, Watchdog
+from repro.serve import SlotScheduler, bursty_requests, parse_fault_spec
 "
-echo "ci.sh: analytical layer (schedule IR, generators, planner, serve scheduler) imports jax-free"
+echo "ci.sh: analytical layer (schedule IR, generators, planner, serve scheduler, ft decision layer) imports jax-free"
 
 PYTHONPATH=src python scripts/render_schedules.py --check
 PYTHONPATH=src python -m doctest docs/ARCHITECTURE.md docs/SCHEDULES.md
@@ -74,5 +85,8 @@ echo "ci.sh: elastic-recovery perf record regenerated (BENCH_ft_recovery_check.j
 
 python benchmarks/serve.py --check
 echo "ci.sh: pipelined-serving perf record regenerated (BENCH_serve_check.json)"
+
+python benchmarks/serve_resilience.py --check
+echo "ci.sh: resilient-serving perf record regenerated (BENCH_serve_resilience_check.json)"
 
 exec python benchmarks/run.py --check "$@"

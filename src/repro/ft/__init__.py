@@ -1,13 +1,43 @@
-from repro.ft.checkpoint import Checkpointer  # noqa: F401
-from repro.ft.elastic import (ElasticDecision, MeshRequirements,  # noqa: F401
-                              plan_mesh, reshard, simulate_failures)
+"""Fault tolerance: checkpointing, elastic mesh planning, health
+monitoring, and deterministic fault injection.
+
+The decision layer (:mod:`repro.ft.health`, :mod:`repro.ft.inject`) is
+jax-free and imports eagerly — the serving resilience stack composes it
+without pulling in the jax runtime.  The checkpoint / elastic-mesh
+pieces need jax and resolve lazily, mirroring :mod:`repro.serve`.
+
+``repro.ft.elastic_pipeline`` (train_elastic / migrate_checkpoint /
+RecoveryRecord) stays an explicit submodule import: it pulls in the
+whole jax runtime stack.
+"""
 from repro.ft.health import Action, HealthMonitor, Watchdog  # noqa: F401
 from repro.ft.inject import (CheckpointCrash, DeviceJoin,  # noqa: F401
                              DeviceLoss, DeviceLossError, FaultInjector,
-                             HungCollective, InjectedCheckpointCrash,
-                             Straggler)
+                             HungCollective, HungTick,
+                             InjectedCheckpointCrash, SlotCorruption,
+                             Straggler, StragglerTicks, TickDeviceLoss)
 
-# repro.ft.elastic_pipeline (train_elastic / migrate_checkpoint /
-# RecoveryRecord) is imported lazily by callers: it pulls in the jax
-# runtime stack, which this package init must not force on analytical
-# users.
+_LAZY = {
+    "Checkpointer": ("repro.ft.checkpoint", "Checkpointer"),
+    "ElasticDecision": ("repro.ft.elastic", "ElasticDecision"),
+    "MeshRequirements": ("repro.ft.elastic", "MeshRequirements"),
+    "plan_mesh": ("repro.ft.elastic", "plan_mesh"),
+    "reshard": ("repro.ft.elastic", "reshard"),
+    "simulate_failures": ("repro.ft.elastic", "simulate_failures"),
+}
+
+__all__ = [
+    "Action", "HealthMonitor", "Watchdog",
+    "CheckpointCrash", "DeviceJoin", "DeviceLoss", "DeviceLossError",
+    "FaultInjector", "HungCollective", "HungTick",
+    "InjectedCheckpointCrash", "SlotCorruption", "Straggler",
+    "StragglerTicks", "TickDeviceLoss",
+] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(name)

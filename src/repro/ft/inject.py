@@ -28,8 +28,28 @@ seams — so a recovery test is a pure function of its fault list:
 back, ``should_yield`` tells the driver to checkpoint and hand control
 back so the elastic loop can warm-restart scaled back up to P.
 
-Every fault fires exactly once (at its ``step``); an injector replayed
-over the same schedule of steps produces the same event sequence.
+**Serving-shaped faults** key on the engine's pipeline *tick* instead
+of the training step — the serving tick loop
+(:meth:`repro.serve.engine.PipelinedEngine.serve`) calls the mirrored
+seams ``on_tick_start`` / ``on_tick_end`` / ``tick_time`` /
+``take_slot_corruption``:
+
+- :class:`TickDeviceLoss` — a pipeline stage dies at a tick boundary
+  (raised from ``on_tick_start`` before the tick runs);
+  :func:`repro.serve.resilience.serve_resilient` recovers at P-1.
+- :class:`SlotCorruption` — one request slot's KV/SSM cache turns to
+  garbage at the end of a tick (``take_slot_corruption`` hands the slot
+  to the driver, which scribbles the cache and re-admits the victim via
+  re-prefill).
+- :class:`HungTick` — a pipeline revolution never completes; the fake
+  clock jumps past the armed watchdog's timeout and the check converts
+  the hang into a :class:`DeviceLossError` (kind ``hung_tick``).
+- :class:`StragglerTicks` — ``tick_time`` inflates reported tick
+  durations so the :class:`~repro.ft.health.HealthMonitor` sees a
+  persistent straggler without real waiting.
+
+Every fault fires exactly once (at its ``step`` / ``tick``); an
+injector replayed over the same schedule produces the same events.
 """
 from __future__ import annotations
 
@@ -104,6 +124,47 @@ class Straggler:
     factor: float = 10.0
 
 
+# -- serving-shaped faults (tick-keyed) ---------------------------------
+
+
+@dataclass(frozen=True)
+class TickDeviceLoss:
+    """Pipeline stage ``device`` dies at the boundary of serving tick
+    ``tick`` (before the tick runs).  ``device`` is the global device
+    index; ``-1`` = unknown peer (the recovery loop drops the last
+    survivor)."""
+    tick: int
+    device: int = -1
+
+
+@dataclass(frozen=True)
+class SlotCorruption:
+    """Request slot ``slot``'s cache becomes garbage at the end of tick
+    ``tick`` (flipped bits / evicted page).  The victim request's KV is
+    gone — it must be re-admitted via re-prefill from the prompt."""
+    tick: int
+    slot: int
+
+
+@dataclass(frozen=True)
+class HungTick:
+    """Serving tick ``tick`` never completes on device ``device``; the
+    hang is noticed ``hang_s`` fake-seconds later (must exceed the
+    watchdog timeout for the loss to be detected)."""
+    tick: int
+    device: int = -1
+    hang_s: float = 600.0
+
+
+@dataclass(frozen=True)
+class StragglerTicks:
+    """Ticks ``[tick, tick + n_ticks)`` report ``factor`` x their real
+    duration to the health monitor (slow stage; no sleeping)."""
+    tick: int
+    n_ticks: int = 5
+    factor: float = 10.0
+
+
 class FaultInjector:
     """Deterministic, step-keyed fault schedule for one training run.
 
@@ -128,12 +189,12 @@ class FaultInjector:
         self._now += seconds
 
     # -- step-loop seams ------------------------------------------------
-    def _take(self, kind, step):
+    def _take(self, kind, at, attr="step"):
         for i, f in enumerate(self.faults):
             if i not in self._fired and isinstance(f, kind) \
-                    and f.step <= step:
+                    and getattr(f, attr) <= at:
                 self._fired.add(i)
-                self.events.append({"step": step, "fault": f})
+                self.events.append({attr: at, "fault": f})
                 return f
         return None
 
@@ -177,6 +238,44 @@ class FaultInjector:
     def take_rejoined(self) -> List[int]:
         out, self._rejoined = self._rejoined, []
         return out
+
+    # -- serving tick-loop seams ----------------------------------------
+    def on_tick_start(self, tick: int) -> None:
+        """Raises :class:`DeviceLossError` when a
+        :class:`TickDeviceLoss` is due — the serving mirror of
+        ``on_step_start`` (a failed collective would surface at the
+        tick boundary)."""
+        f = self._take(TickDeviceLoss, tick, attr="tick")
+        if f is not None:
+            raise DeviceLossError(f.device, "device_loss", tick)
+
+    def on_tick_end(self, tick: int, watchdog=None) -> None:
+        """Hung-revolution seam: advances the fake clock past the armed
+        watchdog's timeout and converts the hang into a
+        :class:`DeviceLossError` (kind ``hung_tick``)."""
+        self._now += 1e-4           # healthy ticks take ~0.1ms fake time
+        f = self._take(HungTick, tick, attr="tick")
+        if f is None:
+            return
+        self._now += f.hang_s
+        if watchdog is None or watchdog.check():
+            raise DeviceLossError(f.device, "hung_tick", tick)
+
+    def take_slot_corruption(self, tick: int) -> Optional[int]:
+        """The slot whose cache turns to garbage at the end of ``tick``
+        (None when no :class:`SlotCorruption` is due).  The driver
+        scribbles the slot cache and re-admits the victim request."""
+        f = self._take(SlotCorruption, tick, attr="tick")
+        return None if f is None else f.slot
+
+    def tick_time(self, tick: int, dt: float) -> float:
+        """Reported (possibly straggler-inflated) tick duration."""
+        for i, f in enumerate(self.faults):
+            if isinstance(f, StragglerTicks) and \
+                    f.tick <= tick < f.tick + f.n_ticks:
+                self._fired.add(i)
+                return dt * f.factor
+        return dt
 
     # -- checkpoint-writer seam -----------------------------------------
     def arm_checkpoint_crash(self, step: int) -> None:

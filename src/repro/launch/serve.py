@@ -6,6 +6,14 @@ continuous batching).
         --batch 4 --prompt-len 32 --gen 16 [--full]
     PYTHONPATH=src python -m repro.launch.serve --pipelined 2 \
         --requests 8 --rate 4.0
+    PYTHONPATH=src python -m repro.launch.serve --pipelined 3 \
+        --requests 8 --bursty --deadline-s 30 --max-queue 16 \
+        --fault device_loss@tick=40
+
+Arguments are validated up front (``validate_args``): malformed rates /
+request counts / fault specs and a pipeline depth exceeding the visible
+device count die with a one-line error instead of a deep shard_map
+traceback.
 
 On real hardware the same constructions are built against the
 production mesh via ``launch.steps.make_serve_steps`` (single-host
@@ -49,11 +57,66 @@ def build_parser() -> argparse.ArgumentParser:
                     help="synthetic requests to serve (pipelined)")
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate, req/s (pipelined)")
+    ap.add_argument("--bursty", action="store_true",
+                    help="two-state bursty arrivals instead of "
+                         "stationary Poisson (pipelined)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request completion deadline in seconds "
+                         "(pipelined; default: none)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission queue bound; overload beyond it is "
+                         "load-shed (pipelined; default: unbounded)")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="SPEC",
+                    help="inject a serving fault, e.g. "
+                         "device_loss@tick=40, "
+                         "slot_corruption@tick=9,slot=1, "
+                         "hung_tick@tick=7, "
+                         "straggler@tick=5,n_ticks=4,factor=8 "
+                         "(repeatable; pipelined)")
     return ap
+
+
+def validate_args(args, n_devices=None) -> None:
+    """Reject malformed serving args with a one-line error instead of a
+    deep shard_map / scheduler traceback.  ``n_devices`` checks the
+    pipeline depth against the visible device count when known."""
+    def die(msg):
+        raise SystemExit(f"error: {msg}")
+    if args.pipelined < 0:
+        die(f"--pipelined must be >= 0, got {args.pipelined}")
+    if args.requests < 1:
+        die(f"--requests must be >= 1, got {args.requests}")
+    if args.rate <= 0:
+        die(f"--rate must be > 0 req/s, got {args.rate}")
+    if args.chunk < 1:
+        die(f"--chunk must be >= 1, got {args.chunk}")
+    if args.slots < 0:
+        die(f"--slots must be >= 0, got {args.slots}")
+    if args.gen < 4:
+        die(f"--gen must be >= 4 (traffic gen_range floor), "
+            f"got {args.gen}")
+    if args.deadline_s is not None and args.deadline_s <= 0:
+        die(f"--deadline-s must be > 0 seconds, got {args.deadline_s}")
+    if args.max_queue is not None and args.max_queue < 0:
+        die(f"--max-queue must be >= 0, got {args.max_queue}")
+    if args.fault and args.pipelined <= 1:
+        die("--fault needs --pipelined P (>= 2)")
+    from repro.serve import parse_fault_spec
+    for spec in args.fault:
+        try:
+            parse_fault_spec(spec)
+        except ValueError as e:
+            die(str(e))
+    if n_devices is not None and args.pipelined > n_devices:
+        die(f"--pipelined {args.pipelined} exceeds the {n_devices} "
+            f"visible devices (set XLA_FLAGS=--xla_force_host_"
+            f"platform_device_count={args.pipelined} or lower P)")
 
 
 def main():
     args = build_parser().parse_args()
+    validate_args(args)
     if args.pipelined > 1 and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
                                    f"count={args.pipelined}")
@@ -63,32 +126,71 @@ def main():
     from repro.configs import get_config, get_reduced
     from repro.models import LM
 
+    validate_args(args, n_devices=jax.device_count())
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.key(0))
 
     if args.pipelined > 1:
-        from repro.serve import PipelinedEngine, poisson_requests, summarize
+        from repro.serve import (PipelinedEngine, bursty_requests,
+                                 parse_fault_spec, poisson_requests,
+                                 serve_resilient, summarize)
         max_seq = args.prompt_len + args.gen + 4 * args.chunk
-        eng = PipelinedEngine(cfg, params, P=args.pipelined,
-                              chunk=args.chunk, max_seq=max_seq,
-                              n_slots=args.slots or None)
-        reqs = poisson_requests(args.requests, args.rate,
-                                chunk=args.chunk, max_seq=max_seq,
-                                gen_range=(4, args.gen),
-                                vocab=cfg.vocab_size, seed=0)
-        res = eng.serve(reqs)
+        if args.bursty:
+            reqs = bursty_requests(args.requests, chunk=args.chunk,
+                                   max_seq=max_seq, rate_lo=args.rate,
+                                   rate_hi=5 * args.rate,
+                                   gen_range=(4, args.gen),
+                                   deadline_s=args.deadline_s,
+                                   vocab=cfg.vocab_size, seed=0)
+        else:
+            reqs = poisson_requests(args.requests, args.rate,
+                                    chunk=args.chunk, max_seq=max_seq,
+                                    gen_range=(4, args.gen),
+                                    vocab=cfg.vocab_size, seed=0)
+            if args.deadline_s is not None:
+                import dataclasses
+                reqs = [dataclasses.replace(r, deadline=args.deadline_s)
+                        for r in reqs]
+        if args.fault:
+            faults = [parse_fault_spec(s) for s in args.fault]
+            res = serve_resilient(cfg, params, reqs,
+                                  P=args.pipelined, chunk=args.chunk,
+                                  max_seq=max_seq,
+                                  n_slots=args.slots or None,
+                                  faults=faults,
+                                  max_queue=args.max_queue)
+            for r in res["recoveries"]:
+                print(f"[serve] recovery @tick {r.tick} ({r.kind}): "
+                      f"P {r.p_from}->{r.p_to} "
+                      f"readmit={r.n_readmitted} "
+                      f"remap={r.remap_s * 1e3:.0f}ms "
+                      f"resume={r.resume_s * 1e3:.0f}ms")
+        else:
+            eng = PipelinedEngine(cfg, params, P=args.pipelined,
+                                  chunk=args.chunk, max_seq=max_seq,
+                                  n_slots=args.slots or None)
+            res = eng.serve(reqs, max_queue=args.max_queue)
         s = summarize(res)
         print(f"[serve] arch={cfg.name} P={args.pipelined} "
-              f"slots={eng.n_slots} rate={args.rate}/s "
+              f"slots={args.slots or args.pipelined} rate={args.rate}/s "
               f"reqs={s['requests']} toks={s['output_tokens']} "
               f"tok/s={s['tokens_per_s']:.1f}")
-        print(f"[serve] ttft p50={s['ttft_p50_s']:.3f}s "
-              f"p99={s['ttft_p99_s']:.3f}s | per-token "
-              f"p50={s['tok_p50_s'] * 1e3:.1f}ms "
-              f"p99={s['tok_p99_s'] * 1e3:.1f}ms (incl. compile)")
-        rec = res["finished"][0]
-        print(f"[serve] sample rid=0: {rec.tokens[:12]}")
+        if s["ttft_p50_s"] is not None:
+            print(f"[serve] ttft p50={s['ttft_p50_s']:.3f}s "
+                  f"p99={s['ttft_p99_s']:.3f}s | per-token "
+                  f"p50={s['tok_p50_s'] * 1e3:.1f}ms "
+                  f"p99={s['tok_p99_s'] * 1e3:.1f}ms (incl. compile)")
+        c = res.get("counts")
+        if c and (c["expired"] or c["shed"] or c["failed"]
+                  or c["retries"]):
+            print(f"[serve] lifecycle: completed={c['completed']} "
+                  f"expired={c['expired']} shed={c['shed']} "
+                  f"failed={c['failed']} retries={c['retries']}")
+        if res["finished"]:
+            rid0 = min(res["finished"])
+            rec = res["finished"][rid0]
+            print(f"[serve] sample rid={rid0}: {rec.tokens[:12]}")
         return
 
     total = args.prompt_len + args.gen

@@ -3,25 +3,40 @@ pipeline task tables, decode rides steady-state ticks (one token per
 pipeline revolution), and an Orca-style continuous-batching scheduler
 maps requests onto the pipeline's microbatch slots.
 
+The resilient layer (:mod:`repro.serve.resilience`) wraps the engine
+in the elastic recovery loop: injected device loss mid-decode re-plans
+at P-1, live-migrates the blocks, and re-admits in-flight requests via
+re-prefill, with request lifecycle (deadlines, load shedding, bounded
+retries) owned by the scheduler across incarnations.
+
 jax-free pieces (:mod:`repro.serve.scheduler`,
-:mod:`repro.serve.traffic`) import cheaply; the engine pulls in jax.
+:mod:`repro.serve.traffic`, :mod:`repro.serve.resilience`) import
+cheaply; the engine pulls in jax.
 """
-from repro.serve.scheduler import (DECODE, IDLE, IDLE_INJ, PREFILL,
+from repro.serve.resilience import (ServeRecovery, parse_fault_spec,
+                                    serve_resilient)
+from repro.serve.scheduler import (COMPLETED, DECODE, EXPIRED, FAILED,
+                                   IDLE, IDLE_INJ, PREFILL, SHED,
+                                   TERMINAL_STATES, DroppedRecord,
                                    FinishedRecord, Injection, Request,
                                    SlotScheduler,
                                    prefill_injection_order)
-from repro.serve.traffic import percentile, poisson_requests, summarize
+from repro.serve.traffic import (bursty_requests, percentile,
+                                 poisson_requests, summarize)
 
 __all__ = [
-    "DECODE", "IDLE", "IDLE_INJ", "PREFILL", "FinishedRecord",
-    "Injection", "Request", "SlotScheduler", "prefill_injection_order",
-    "percentile", "poisson_requests", "summarize",
-    "PipelinedEngine", "pack_blocks",
+    "COMPLETED", "DECODE", "EXPIRED", "FAILED", "IDLE", "IDLE_INJ",
+    "PREFILL", "SHED", "TERMINAL_STATES", "DroppedRecord",
+    "FinishedRecord", "Injection", "Request", "SlotScheduler",
+    "prefill_injection_order",
+    "ServeRecovery", "parse_fault_spec", "serve_resilient",
+    "bursty_requests", "percentile", "poisson_requests", "summarize",
+    "PipelinedEngine", "new_telemetry", "pack_blocks",
 ]
 
 
 def __getattr__(name):
-    if name in ("PipelinedEngine", "pack_blocks"):
+    if name in ("PipelinedEngine", "new_telemetry", "pack_blocks"):
         from repro.serve import engine
         return getattr(engine, name)
     raise AttributeError(name)

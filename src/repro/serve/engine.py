@@ -43,7 +43,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat
 from repro.configs.base import ModelConfig
-from repro.core.pipeline_runtime import StageLayout
+from repro.core.pipeline_runtime import StageLayout, remap_blocks_elastic
+from repro.ft.health import Action
+from repro.ft.inject import DeviceLossError
 from repro.models import layers as L
 from repro.models.backend import get_backend
 from repro.models.sharding import no_shard_hints
@@ -53,6 +55,16 @@ from repro.serve.scheduler import (IDLE, IDLE_INJ, Injection, Request,
                                    SlotScheduler)
 
 CTL_W = 4                              # (op, slot, pos, first)
+
+
+def new_telemetry() -> Dict:
+    """Cross-incarnation serving telemetry: per-request wall-clock
+    anchors plus delivered-token and health-action tallies.  Owned by
+    the caller when serving resiliently (`serve_resilient` threads one
+    object through every engine incarnation so TTFT / per-token
+    latencies span recoveries)."""
+    return {"t_first": {}, "t_sub": {}, "tok_times": {}, "n_out": 0,
+            "health_actions": []}
 
 
 def pack_blocks(lm: LM, params, layout: StageLayout) -> List:
@@ -103,7 +115,8 @@ class PipelinedEngine:
 
     def __init__(self, cfg: ModelConfig, lm_params, *, P: int,
                  chunk: int, max_seq: int, n_slots: Optional[int] = None,
-                 mesh=None, axis: str = "pp", kernels: str = "xla"):
+                 mesh=None, axis: str = "pp", kernels: str = "xla",
+                 blocks=None):
         self.cfg = cfg
         self.P = P
         self.chunk = chunk
@@ -122,7 +135,10 @@ class PipelinedEngine:
         assert dict(zip(self.mesh.axis_names,
                         self.mesh.devices.shape))[axis] == P, \
             f"mesh axis {axis!r} must have size P={P}"
-        self.blocks = pack_blocks(self.lm, lm_params, self.layout)
+        # blocks= injects already-stacked per-stage parameters (the
+        # elastic live-migration path); default packs from lm_params
+        self.blocks = blocks if blocks is not None \
+            else pack_blocks(self.lm, lm_params, self.layout)
         self.shared = {"embed": lm_params["embed"],
                        "final_norm": lm_params["final_norm"]}
         fl = self.layout.flags(cfg)
@@ -268,11 +284,59 @@ class PipelinedEngine:
             else IDLE_INJ
         return retired, int(tok[self.P - 1]), logits[self.P - 1]
 
+    # -- fault surface ----------------------------------------------------
+    def corrupt_slot(self, slot: int) -> None:
+        """Scribble garbage (NaN) over request slot ``slot``'s cache on
+        every stage — the landing point of an injected
+        :class:`~repro.ft.inject.SlotCorruption`.  Recovery must
+        re-prefill from the prompt: the first chunk's ``first=1``
+        zeroing is what rebuilds the slot into a fresh cache, so a
+        missed re-admission surfaces as NaN logits, not silence."""
+        def one(a):
+            bad = jnp.nan if jnp.issubdtype(a.dtype, jnp.floating) \
+                else jnp.iinfo(a.dtype).max
+            return a.at[:, :, slot].set(bad)
+        self.caches = [jax.tree.map(one, t) for t in self.caches]
+
+    def rebuild_elastic(self, P_new: int, *, mesh=None) -> \
+            "PipelinedEngine":
+        """Live-migrate this engine to pipeline depth ``P_new`` after a
+        device loss: the stage-stacked parameter blocks re-index onto
+        the new :class:`StageLayout` via
+        :func:`repro.core.pipeline_runtime.remap_blocks_elastic` (the
+        training stack's elastic path — no repack from host params),
+        slot caches rebuild fresh (per-request KV died with the failed
+        stage; the scheduler re-admits via re-prefill), and one new
+        SPMD tick compiles for the survivor ``mesh``."""
+        assert P_new >= 1
+        layout_new = StageLayout.build(self.cfg, P_new, 1)
+        # engine blocks are [P, M, ...] (v = 1); the elastic remap
+        # speaks [P, v, M, ...] — insert/strip the unit v axis
+        src = [jax.tree.map(lambda a: a[:, None], t)
+               for t in self.blocks]
+        init = [jax.tree.map(
+            lambda a: jnp.zeros((P_new, 1, layout_new.M) + a.shape[2:],
+                                a.dtype), t) for t in self.blocks]
+        mig = remap_blocks_elastic(src, self.layout, layout_new,
+                                   init_blocks=init)
+        blocks = [jax.tree.map(lambda a: a[:, 0], t) for t in mig]
+        return PipelinedEngine(
+            self.cfg, {"embed": self.shared["embed"],
+                       "final_norm": self.shared["final_norm"]},
+            P=P_new, chunk=self.chunk, max_seq=self.max_seq,
+            n_slots=self.n_slots, mesh=mesh, axis=self.axis,
+            kernels=self.kernels, blocks=blocks)
+
     # -- serving loop -----------------------------------------------------
     def serve(self, requests: List[Request], *,
               preempt_after: Optional[int] = None,
               clock: Optional[str] = "wall",
-              max_ticks: int = 1_000_000) -> Dict:
+              max_ticks: int = 1_000_000,
+              sched: Optional[SlotScheduler] = None,
+              max_queue: Optional[int] = None, max_retries: int = 3,
+              injector=None, watchdog=None, monitor=None,
+              telemetry: Optional[Dict] = None,
+              t0: Optional[float] = None) -> Dict:
         """Serve ``requests`` (arrivals ordered by ``arrival_s``) to
         completion with continuous batching; greedy decoding.
 
@@ -280,40 +344,88 @@ class PipelinedEngine:
         mode); ``clock=None`` admits everything immediately
         (deterministic, used by the equivalence tests).  Returns
         ``{"finished": {rid: FinishedRecord}, "metrics": {rid: {...}},
-        "elapsed_s", "ticks"}`` with per-request TTFT / per-token
-        wall-clock latencies."""
-        sched = SlotScheduler(self.n_slots, self.chunk, self.max_seq,
-                              preempt_after=preempt_after)
+        "elapsed_s", "ticks", "outcomes", "dropped", "counts", ...}``
+        with per-request TTFT / per-token wall-clock latencies.
+
+        Resilience seams (all default off; behavior is then bit-for-bit
+        PR 8's): ``sched`` / ``telemetry`` / ``t0`` let a caller own
+        scheduler state and latency anchors across engine incarnations
+        (:func:`repro.serve.resilience.serve_resilient`); ``injector``
+        is a :class:`~repro.ft.inject.FaultInjector` driven through its
+        tick seams — a due :class:`TickDeviceLoss` / :class:`HungTick`
+        raises :class:`DeviceLossError` out of this method with
+        ``e.pending`` (unsubmitted requests) attached; ``watchdog`` is
+        armed around every tick; ``monitor`` receives (possibly
+        straggler-inflated) tick durations and its non-CONTINUE actions
+        are logged to ``telemetry["health_actions"]``."""
+        if sched is None:
+            sched = SlotScheduler(self.n_slots, self.chunk, self.max_seq,
+                                  preempt_after=preempt_after,
+                                  max_queue=max_queue,
+                                  max_retries=max_retries)
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
-        t_first: Dict[int, float] = {}
-        t_sub: Dict[int, float] = {}
-        tok_times: Dict[int, List[float]] = {}
-        n_out = 0
-        t0 = time.perf_counter()
+        tel = telemetry if telemetry is not None else new_telemetry()
+        t_first, t_sub = tel["t_first"], tel["t_sub"]
+        tok_times = tel["tok_times"]
+        t0 = time.perf_counter() if t0 is None else t0
         ticks = 0
-        while ticks < max_ticks:
-            now = time.perf_counter() - t0
-            while pending and (clock != "wall"
-                               or pending[0].arrival_s <= now):
-                req = pending.pop(0)
-                t_sub[req.rid] = max(req.arrival_s, now) \
-                    if clock == "wall" else 0.0
-                sched.submit(req)
-            inj = sched.next_injection()
-            retired, token, _ = self.tick(inj)
-            ticks += 1
-            if retired.sample and retired.op != IDLE:
-                sched.on_result(retired, token)
-                t = time.perf_counter() - t0
-                if retired.rid in sched.finished \
-                        or retired.rid in {a.req.rid
-                                           for a in sched.active.values()}:
-                    t_first.setdefault(retired.rid, t)
-                    tok_times.setdefault(retired.rid, []).append(t)
-                    n_out += 1
-            if not pending and sched.idle and all(
-                    h.op == IDLE for h in self._hist):
-                break
+        first_sample_s = None
+        try:
+            while ticks < max_ticks:
+                now = time.perf_counter() - t0
+                dl_now = now if clock == "wall" else None
+                while pending and (clock != "wall"
+                                   or pending[0].arrival_s <= now):
+                    req = pending.pop(0)
+                    t_sub[req.rid] = max(req.arrival_s, now) \
+                        if clock == "wall" else 0.0
+                    sched.submit(req, now=dl_now)
+                tick_no = sched.tick + 1
+                if injector is not None:
+                    injector.on_tick_start(tick_no)
+                if watchdog is not None:
+                    watchdog.arm()
+                t_tick = time.perf_counter()
+                inj = sched.next_injection(now=dl_now)
+                retired, token, _ = self.tick(inj)
+                dt = time.perf_counter() - t_tick
+                ticks += 1
+                if injector is not None:
+                    cslot = injector.take_slot_corruption(tick_no)
+                    if cslot is not None:
+                        self.corrupt_slot(cslot)
+                        sched.fail_slot(cslot)
+                    # hung-tick seam runs while the watchdog is still
+                    # armed (mirrors train_pipeline's on_step_end order)
+                    injector.on_tick_end(tick_no, watchdog)
+                if watchdog is not None:
+                    if watchdog.check():
+                        raise DeviceLossError(-1, "hung_tick", tick_no)
+                    watchdog.disarm()
+                if monitor is not None:
+                    rep = injector.tick_time(tick_no, dt) \
+                        if injector is not None else dt
+                    act = monitor.record_step(rep)
+                    if act != Action.CONTINUE:
+                        tel["health_actions"].append((tick_no,
+                                                      act.value))
+                if retired.sample and retired.op != IDLE:
+                    if sched.on_result(retired, token):
+                        t = time.perf_counter() - t0
+                        if first_sample_s is None:
+                            first_sample_s = t
+                        t_first.setdefault(retired.rid, t)
+                        tok_times.setdefault(retired.rid, []).append(t)
+                        tel["n_out"] += 1
+                if not pending and sched.idle and all(
+                        h.op == IDLE for h in self._hist):
+                    break
+        except DeviceLossError as e:
+            # hand the recovery loop everything it needs to resume
+            e.pending = pending
+            e.ticks_done = ticks
+            e.first_sample_s = first_sample_s
+            raise
         elapsed = time.perf_counter() - t0
         metrics = {}
         for rid, rec in sched.finished.items():
@@ -323,7 +435,13 @@ class PipelinedEngine:
                 if rid in t_first else None,
                 "per_token_s": [b - a for a, b in zip(ts, ts[1:])],
                 "n_tokens": len(rec.tokens),
+                "done_s": ts[-1] if ts else None,
             }
         return {"finished": sched.finished, "metrics": metrics,
                 "elapsed_s": elapsed, "ticks": ticks,
-                "tokens_per_s": n_out / max(elapsed, 1e-9)}
+                "tokens_per_s": tel["n_out"] / max(elapsed, 1e-9),
+                "outcomes": dict(sched.outcomes),
+                "dropped": dict(sched.dropped),
+                "counts": sched.lifecycle_counts(),
+                "health_actions": list(tel["health_actions"]),
+                "first_sample_s": first_sample_s}

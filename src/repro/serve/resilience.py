@@ -1,0 +1,240 @@
+"""Resilient serving: the elastic recovery loop around the pipelined
+inference engine.
+
+The serving mirror of :func:`repro.ft.elastic_pipeline.train_elastic`:
+run :meth:`~repro.serve.engine.PipelinedEngine.serve` under a
+:class:`~repro.ft.inject.FaultInjector`; when an injected (or real)
+device loss surfaces as :class:`~repro.ft.inject.DeviceLossError`,
+recover at P-1 without dropping the service:
+
+1. **detect** — the error's ``raised_at`` anchors detection latency;
+2. **re-plan** — re-solve the forward-only seq1f1b task table at the
+   survivor depth (the same validated-spec discipline training uses);
+3. **remap** — live-migrate the engine's stage-stacked blocks onto the
+   new :class:`~repro.core.pipeline_runtime.StageLayout` via
+   :meth:`~repro.serve.engine.PipelinedEngine.rebuild_elastic` (no
+   repack from host params) and compile one new SPMD tick over the
+   survivor mesh;
+4. **re-admit** — every in-flight request lost its slot cache with the
+   failed stage; :meth:`~repro.serve.scheduler.SlotScheduler.fail_all`
+   requeues them at the front for re-prefill (greedy decoding
+   regenerates the identical stream — token streams for requests
+   completing before *and after* the failure stay pinned to the
+   single-host reference);
+5. **resume** — the next incarnation's first delivered token closes
+   the recovery record.
+
+The scheduler, telemetry, and wall-clock anchor are owned *here* and
+threaded through every engine incarnation, so per-request TTFT /
+latency metrics and the request lifecycle (terminal states, retry
+budgets, deadlines) span recoveries seamlessly.
+
+jax-free at import time (the engine / runtime imports resolve inside
+:func:`serve_resilient`), so the analytical layer can import
+``repro.serve.resilience`` for :class:`ServeRecovery` and
+:func:`parse_fault_spec` under the ci.sh jax-poisoned smoke.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.ft.health import HealthMonitor, Watchdog
+from repro.ft.inject import (DeviceLossError, FaultInjector, HungTick,
+                             SlotCorruption, StragglerTicks,
+                             TickDeviceLoss)
+
+_FAULT_KINDS = {
+    "device_loss": (TickDeviceLoss, {"tick": int, "device": int}),
+    "slot_corruption": (SlotCorruption, {"tick": int, "slot": int}),
+    "hung_tick": (HungTick, {"tick": int, "device": int,
+                             "hang_s": float}),
+    "straggler": (StragglerTicks, {"tick": int, "n_ticks": int,
+                                   "factor": float}),
+}
+
+
+def parse_fault_spec(spec: str):
+    """CLI fault syntax -> an injectable fault object.
+
+    ``kind@key=val[,key=val...]``, e.g. ``device_loss@tick=40``,
+    ``slot_corruption@tick=9,slot=1``, ``hung_tick@tick=7``,
+    ``straggler@tick=5,n_ticks=4,factor=8``.  Raises ``ValueError``
+    with the valid vocabulary on a malformed spec (the launcher
+    surfaces it instead of a deep traceback)."""
+    kind, sep, rest = spec.partition("@")
+    if kind not in _FAULT_KINDS:
+        raise ValueError(
+            f"unknown fault kind {kind!r}; expected one of "
+            f"{sorted(_FAULT_KINDS)} (syntax: kind@tick=N[,key=val])")
+    cls, fields = _FAULT_KINDS[kind]
+    kwargs = {}
+    if sep:
+        for item in filter(None, rest.split(",")):
+            key, eq, val = item.partition("=")
+            if not eq or key not in fields:
+                raise ValueError(
+                    f"bad fault arg {item!r} for {kind}; valid keys: "
+                    f"{sorted(fields)}")
+            try:
+                kwargs[key] = fields[key](val)
+            except ValueError:
+                raise ValueError(
+                    f"fault arg {key}={val!r} is not a valid "
+                    f"{fields[key].__name__}")
+    if "tick" not in kwargs:
+        raise ValueError(f"fault spec {spec!r} must set tick=N")
+    return cls(**kwargs)
+
+
+@dataclass
+class ServeRecovery:
+    """Per-recovery phase timings (seconds) — the numbers
+    ``benchmarks/serve_resilience.py`` publishes."""
+    tick: int                   # serving tick the fault fired at
+    kind: str                   # device_loss | hung_tick
+    p_from: int
+    p_to: int
+    n_readmitted: int = 0       # in-flight requests requeued for
+    #                             re-prefill
+    detect_s: float = 0.0       # fault raise -> driver caught it
+    replan_s: float = 0.0       # forward-only table re-solve at P-1
+    remap_s: float = 0.0        # remap_blocks_elastic + tick recompile
+    readmit_s: float = 0.0      # fail_all + queue rebuild
+    resume_s: float = 0.0       # restart -> first delivered token
+
+
+def serve_resilient(cfg, lm_params, requests: Sequence, *, P: int,
+                    chunk: int, max_seq: int,
+                    n_slots: Optional[int] = None,
+                    kernels: str = "xla", faults=(),
+                    preempt_after: Optional[int] = None,
+                    max_queue: Optional[int] = None,
+                    max_retries: int = 3,
+                    clock: Optional[str] = "wall",
+                    watchdog_timeout: float = 60.0, min_P: int = 1,
+                    max_incarnations: int = 4, axis: str = "pp",
+                    log: Callable[[str], None] = print) -> Dict:
+    """Serve ``requests`` to terminal states across device loss,
+    re-planning the pipeline depth each incarnation.
+
+    Returns :meth:`PipelinedEngine.serve`'s result dict (finished
+    records, metrics, lifecycle counts — all spanning recoveries, since
+    one scheduler + telemetry object threads through) merged with
+    ``recoveries`` (:class:`ServeRecovery` per fault), ``incarnations``,
+    and the injector's fired-fault ``events``."""
+    import jax
+
+    from repro import jax_compat
+    from repro.serve.engine import PipelinedEngine, new_telemetry
+    from repro.serve.scheduler import SlotScheduler
+
+    injector = faults if isinstance(faults, FaultInjector) \
+        else FaultInjector(faults)
+    watchdog = Watchdog(watchdog_timeout, clock=injector.clock)
+    monitor = HealthMonitor()
+    n_slots = n_slots if n_slots is not None else P
+    sched = SlotScheduler(n_slots, chunk, max_seq,
+                          preempt_after=preempt_after,
+                          max_queue=max_queue, max_retries=max_retries)
+    tel = new_telemetry()
+
+    all_devices = list(jax.devices())
+    assert P <= len(all_devices), \
+        f"need {P} devices for the first incarnation, have " \
+        f"{len(all_devices)}"
+    healthy = list(range(P))
+    n_seq = max(max(1, len(r.prompt) // chunk) for r in requests) \
+        if requests else 1
+
+    recoveries: List[ServeRecovery] = []
+    incarnations: List[Dict] = []
+    pending_rec: Optional[ServeRecovery] = None
+    reqs = list(requests)
+    eng = PipelinedEngine(cfg, lm_params, P=P, chunk=chunk,
+                          max_seq=max_seq, n_slots=n_slots, axis=axis,
+                          kernels=kernels)
+    t0 = time.perf_counter()
+    out = None
+    while len(incarnations) < max_incarnations:
+        P_cur = eng.P
+        log(f"[serve-ft] incarnation {len(incarnations)}: P={P_cur} "
+            f"over devices {healthy}")
+        t_run = time.perf_counter()
+        try:
+            out = eng.serve(reqs, clock=clock, sched=sched,
+                            injector=injector, watchdog=watchdog,
+                            monitor=monitor, telemetry=tel, t0=t0)
+        except DeviceLossError as e:
+            detect_s = time.time() - e.raised_at
+            reqs = list(getattr(e, "pending", []))
+            if pending_rec is not None:
+                # the previous recovery did resume before this fault
+                pending_rec.resume_s = _resume_s(e, t0, t_run)
+                recoveries.append(pending_rec)
+            lost = e.device if e.device in healthy else healthy[-1]
+            healthy = [d for d in healthy if d != lost]
+            P_new = len(healthy)
+            log(f"[serve-ft] {e.kind} at tick {e.step}: lost device "
+                f"{lost}, {P_new} survivors -> re-plan")
+            incarnations.append({"P": P_cur, "status": e.kind,
+                                 "ticks": getattr(e, "ticks_done", 0),
+                                 "devices": healthy + [lost]})
+            if P_new < min_P:
+                raise RuntimeError(
+                    f"unrecoverable: {P_new} survivors < min_P "
+                    f"{min_P}") from e
+            # re-plan: the forward-only seq1f1b table must solve at
+            # the survivor depth (same validated-spec gate as training)
+            t_p = time.perf_counter()
+            if P_new > 1:
+                from repro.core.tasktable import build_task_table
+                from repro.seqpipe.schedules import forward_only, seq1f1b
+                build_task_table(forward_only(
+                    seq1f1b(P_new, max(n_slots, P_new), n_seq)))
+            replan_s = time.perf_counter() - t_p
+            # remap: live-migrate blocks, recompile the survivor tick
+            t_m = time.perf_counter()
+            mesh = jax_compat.make_mesh(
+                (P_new,), (axis,),
+                devices=[all_devices[i] for i in healthy])
+            eng = eng.rebuild_elastic(P_new, mesh=mesh)
+            remap_s = time.perf_counter() - t_m
+            # re-admit: in-flight requests lost their KV with the
+            # stage; requeue at the front for re-prefill
+            t_a = time.perf_counter()
+            victims = sched.fail_all("device_loss")
+            readmit_s = time.perf_counter() - t_a
+            log(f"[serve-ft] re-admitted {len(victims)} in-flight "
+                f"requests for re-prefill: {victims}")
+            pending_rec = ServeRecovery(
+                tick=e.step if e.step is not None else -1, kind=e.kind,
+                p_from=P_cur, p_to=P_new, n_readmitted=len(victims),
+                detect_s=detect_s, replan_s=replan_s, remap_s=remap_s,
+                readmit_s=readmit_s)
+            continue
+        incarnations.append({"P": P_cur, "status": "complete",
+                             "ticks": out["ticks"],
+                             "devices": list(healthy)})
+        if pending_rec is not None:
+            pending_rec.resume_s = _resume_s(out, t0, t_run)
+            recoveries.append(pending_rec)
+            pending_rec = None
+        break
+    else:
+        raise RuntimeError(
+            f"serve did not complete within {max_incarnations} "
+            "incarnations")
+    return dict(out, ticks=sched.tick, recoveries=recoveries,
+                incarnations=incarnations, events=injector.events)
+
+
+def _resume_s(src, t0: float, t_run: float) -> float:
+    """Restart -> first token delivered by the recovered incarnation
+    (``src`` is the serve() result or the next DeviceLossError)."""
+    first = src["first_sample_s"] if isinstance(src, dict) \
+        else getattr(src, "first_sample_s", None)
+    if first is not None:
+        return t0 + first - t_run
+    return time.perf_counter() - t_run

@@ -1,0 +1,110 @@
+"""Subprocess helper: elastic P-1 serving recovery pins token streams.
+
+Runs the resilient serving loop under an injected mid-decode device
+loss (plus an early slot corruption) and checks, against the
+single-host ``LM.prefill_chunk`` / ``LM.decode_step`` reference, that
+every request's greedy stream is exact — including requests that
+completed *before* the failure and requests re-admitted via re-prefill
+that completed *after* it at P-1.
+
+Usage: python serve_resilience_check.py <arch> <P> [chunk] [kernels]
+Exits 0 on success; prints MATCH=... / RECOVERY=... rows for the
+parent test to parse.
+"""
+import os
+import sys
+
+arch = sys.argv[1]
+P_ = int(sys.argv[2])
+chunk = int(sys.argv[3]) if len(sys.argv) > 3 else 16
+kernels = sys.argv[4] if len(sys.argv) > 4 else "xla"
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P_}"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.core.schedules  # noqa: E402,F401  (registry import order)
+from repro.configs import get_reduced  # noqa: E402
+from repro.ft import SlotCorruption, TickDeviceLoss  # noqa: E402
+from repro.models import LM  # noqa: E402
+from repro.serve import Request, serve_resilient  # noqa: E402
+
+cfg = get_reduced(arch)
+max_seq = 4 * chunk + 32
+lm = LM(cfg)
+params, _ = lm.init(jax.random.key(0))
+
+rng = np.random.default_rng(7)
+reqs = []
+for rid in range(2 * P_ + 1):
+    plen = chunk * int(rng.integers(1, 4))
+    prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(int)
+    reqs.append(Request(rid=rid, prompt=prompt.tolist(),
+                        max_new=int(rng.integers(3, 9))))
+
+
+def reference(req):
+    cache = lm.init_cache(1, max_seq)
+    toks = np.asarray(req.prompt)[None]
+    pos = 0
+    for q in range(len(req.prompt) // chunk):
+        logits, cache = lm.prefill_chunk(
+            params, toks[:, q * chunk:(q + 1) * chunk], cache, pos)
+        pos += chunk
+    out = [int(np.argmax(np.asarray(logits)[0]))]
+    while len(out) < req.max_new:
+        logits, cache = lm.decode_step(
+            params, np.asarray([[out[-1]]]), cache, pos)
+        pos += 1
+        out.append(int(np.argmax(np.asarray(logits)[0])))
+    return out
+
+
+# pass 1 (no faults): learn when requests retire so the device loss
+# lands mid-decode — after the first completion, before the last
+base = serve_resilient(cfg, params, reqs, P=P_, chunk=chunk,
+                       max_seq=max_seq, kernels=kernels, clock=None,
+                       log=lambda *_: None)
+done = sorted(r.done_tick for r in base["finished"].values())
+assert len(done) == len(reqs) and base["counts"]["completed"] == len(reqs)
+loss_tick = done[0] + max(1, (done[-1] - done[0]) // 3)
+corrupt_tick = P_ + 3
+assert corrupt_tick < loss_tick, \
+    f"trace too short to stage both faults ({done})"
+
+faults = [SlotCorruption(tick=corrupt_tick, slot=0),
+          TickDeviceLoss(tick=loss_tick, device=P_ - 1)]
+res = serve_resilient(cfg, params, reqs, P=P_, chunk=chunk,
+                      max_seq=max_seq, kernels=kernels, clock=None,
+                      faults=faults, log=lambda *_: None)
+
+ok = True
+assert set(res["finished"]) == {r.rid for r in reqs}, "requests lost"
+assert all(s == "completed" for s in res["outcomes"].values()), \
+    res["outcomes"]
+for req in reqs:
+    got = res["finished"][req.rid].tokens
+    want = reference(req)
+    match = got == want
+    ok = ok and match
+    when = "pre" if res["finished"][req.rid].done_tick <= loss_tick \
+        else "post"
+    print(f"MATCH={int(match)} rid={req.rid} {when}-loss "
+          f"plen={len(req.prompt)} gen={req.max_new} "
+          f"got={got[:6]} want={want[:6]}")
+
+done_ticks = [r.done_tick for r in res["finished"].values()]
+assert any(t <= loss_tick for t in done_ticks), \
+    "no request completed before the device loss"
+assert any(t > loss_tick for t in done_ticks), \
+    "no request completed after the device loss"
+assert len(res["recoveries"]) == 1, res["recoveries"]
+rec = res["recoveries"][0]
+assert (rec.p_from, rec.p_to) == (P_, P_ - 1)
+assert rec.kind == "device_loss" and rec.n_readmitted >= 1
+assert res["counts"]["retries"] >= rec.n_readmitted + 1  # + corruption
+assert len(res["events"]) == 2, res["events"]
+print(f"RECOVERY=1 tick={rec.tick} p={rec.p_from}->{rec.p_to} "
+      f"readmit={rec.n_readmitted} retries={res['counts']['retries']} "
+      f"ticks={res['ticks']}")
+sys.exit(0 if ok else 1)

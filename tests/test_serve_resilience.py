@@ -1,0 +1,443 @@
+"""Resilient serving: request lifecycle, fault seams, health decision
+logic, bursty traffic, and the elastic P-1 recovery pin.
+
+Layers (mirroring the subsystem's composition):
+
+- **health decision logic** (jax-free): ``HealthMonitor.record_step``
+  action transitions (warmup -> ok -> straggler escalation) and
+  ``Watchdog`` arm/disarm/check on an injected clock — first direct
+  unit coverage for :mod:`repro.ft.health`.
+- **injector tick seams** (jax-free): serving-shaped faults fire
+  exactly once at their tick through ``on_tick_start`` /
+  ``on_tick_end`` / ``take_slot_corruption`` / ``tick_time``.
+- **request lifecycle** (jax-free, fake pipeline): deadlines expire on
+  time, overload sheds, corrupted slots re-admit via re-prefill with a
+  bounded retry budget, stale waves are dropped by generation — and a
+  hypothesis property: under random deadlines/faults/shedding every
+  request reaches exactly one terminal state, slots never leak, and
+  with all knobs off the PR 8 streams reproduce bit-for-bit.
+- **bursty traffic**: the two-state modulated Poisson generator is
+  seeded-reproducible and respects the chunk/max_seq contract;
+  ``summarize`` stays None-safe on pre-lifecycle result dicts.
+- **elastic recovery pin** (subprocess, forced host devices): injected
+  device loss mid-decode recovers at P-1 with token streams exact vs
+  the single-host reference for requests completing before and after
+  the failure (tinyllama P=3->2 fast; mamba2 — the SSM cache family —
+  P=2->1 slow).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.ft.health import Action, HealthMonitor, Watchdog
+from repro.ft.inject import (DeviceLossError, FaultInjector, HungTick,
+                             SlotCorruption, StragglerTicks,
+                             TickDeviceLoss)
+from repro.serve import (COMPLETED, EXPIRED, FAILED, IDLE_INJ, SHED,
+                         TERMINAL_STATES, Request, SlotScheduler,
+                         bursty_requests, parse_fault_spec,
+                         poisson_requests, summarize)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "helpers"))
+from hypcompat import given, settings, st  # noqa: E402
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "serve_resilience_check.py")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# ft/health.py decision logic
+# ---------------------------------------------------------------------------
+
+def test_monitor_warmup_never_acts():
+    m = HealthMonitor()
+    for t in [0.1, 0.1, 9.9, 0.1]:      # < 5 samples: even a spike is
+        assert m.record_step(t) == Action.CONTINUE   # not actionable
+
+
+def test_monitor_escalates_checkpoint_then_restart():
+    m = HealthMonitor(straggler_factor=2.0, straggler_patience=3)
+    for _ in range(5):
+        assert m.record_step(0.1) == Action.CONTINUE
+    assert m.record_step(0.3) == Action.CHECKPOINT_NOW   # streak 1
+    assert m.record_step(0.3) == Action.CONTINUE         # streak 2
+    assert m.record_step(0.3) == Action.RESTART          # streak 3
+    # restart resets the streak: the next slow step re-escalates from 1
+    assert m.record_step(0.3) == Action.CHECKPOINT_NOW
+
+
+def test_monitor_streak_resets_on_healthy_step():
+    m = HealthMonitor(straggler_patience=3)
+    for _ in range(5):
+        m.record_step(0.1)
+    assert m.record_step(0.3) == Action.CHECKPOINT_NOW
+    assert m.record_step(0.1) == Action.CONTINUE     # streak broken
+    assert m.record_step(0.3) == Action.CHECKPOINT_NOW   # back to 1
+    assert m.median_step == pytest.approx(0.1)
+
+
+def test_watchdog_on_injected_clock():
+    now = [0.0]
+    wd = Watchdog(5.0, clock=lambda: now[0])
+    assert not wd.check()               # never armed
+    wd.arm()
+    now[0] = 4.0
+    assert not wd.check()               # within budget
+    now[0] = 9.5
+    assert wd.check()                   # past timeout while armed
+    wd.disarm()
+    assert not wd.check()               # disarmed clears the trip
+    wd.arm()                            # re-arm restarts the budget
+    now[0] = 12.0
+    assert not wd.check()
+
+
+# ---------------------------------------------------------------------------
+# injector serving seams
+# ---------------------------------------------------------------------------
+
+def test_tick_device_loss_fires_once_at_its_tick():
+    inj = FaultInjector([TickDeviceLoss(tick=5, device=2)])
+    for t in range(1, 5):
+        inj.on_tick_start(t)
+    with pytest.raises(DeviceLossError) as ei:
+        inj.on_tick_start(5)
+    assert ei.value.device == 2 and ei.value.kind == "device_loss"
+    inj.on_tick_start(6)                # one-shot: fired faults stay dead
+    assert [e["tick"] for e in inj.events] == [5]
+
+
+def test_hung_tick_needs_armed_watchdog():
+    inj = FaultInjector([HungTick(tick=2, hang_s=100.0)])
+    wd = Watchdog(60.0, clock=inj.clock)
+    wd.arm()
+    inj.on_tick_end(1, wd)              # healthy tick: tiny fake time
+    wd.disarm()
+    wd.arm()
+    with pytest.raises(DeviceLossError) as ei:
+        inj.on_tick_end(2, wd)          # hang > timeout while armed
+    assert ei.value.kind == "hung_tick"
+
+
+def test_hung_tick_below_timeout_is_absorbed():
+    inj = FaultInjector([HungTick(tick=1, hang_s=10.0)])
+    wd = Watchdog(60.0, clock=inj.clock)
+    wd.arm()
+    inj.on_tick_end(1, wd)              # 10s hang < 60s budget: no trip
+
+
+def test_slot_corruption_and_straggler_seams():
+    inj = FaultInjector([SlotCorruption(tick=3, slot=1),
+                         StragglerTicks(tick=4, n_ticks=2, factor=10.0)])
+    assert inj.take_slot_corruption(2) is None
+    assert inj.take_slot_corruption(3) == 1
+    assert inj.take_slot_corruption(3) is None       # one-shot
+    assert inj.tick_time(3, 0.01) == pytest.approx(0.01)
+    assert inj.tick_time(4, 0.01) == pytest.approx(0.1)
+    assert inj.tick_time(5, 0.01) == pytest.approx(0.1)
+    assert inj.tick_time(6, 0.01) == pytest.approx(0.01)   # window over
+
+
+def test_serving_and_training_seams_are_independent():
+    """A tick-keyed fault must not fire from the step-keyed seams and
+    vice versa (the injector serves both drivers)."""
+    inj = FaultInjector([TickDeviceLoss(tick=1)])
+    inj.on_step_start(1)                # step seam: no tick faults
+    with pytest.raises(DeviceLossError):
+        inj.on_tick_start(1)
+
+
+def test_parse_fault_spec_round_trip_and_errors():
+    assert parse_fault_spec("device_loss@tick=40") == \
+        TickDeviceLoss(tick=40)
+    assert parse_fault_spec("slot_corruption@tick=9,slot=1") == \
+        SlotCorruption(tick=9, slot=1)
+    assert parse_fault_spec("straggler@tick=5,n_ticks=4,factor=8") == \
+        StragglerTicks(tick=5, n_ticks=4, factor=8.0)
+    for bad in ("nope@tick=1", "device_loss@frog=1", "device_loss",
+                "device_loss@tick=x", "slot_corruption@tick=1,slot"):
+        with pytest.raises(ValueError):
+            parse_fault_spec(bad)
+
+
+def test_launch_serve_validates_args():
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    ok = ap.parse_args(["--pipelined", "2", "--fault",
+                        "device_loss@tick=4"])
+    validate_args(ok)
+    for argv in (["--rate", "0"], ["--requests", "0"],
+                 ["--pipelined", "-1"], ["--deadline-s", "0"],
+                 ["--gen", "2"], ["--max-queue", "-3"],
+                 ["--fault", "device_loss@tick=4"],   # needs --pipelined
+                 ["--pipelined", "2", "--fault", "bogus@tick=1"]):
+        with pytest.raises(SystemExit):
+            validate_args(ap.parse_args(argv))
+    with pytest.raises(SystemExit):
+        validate_args(ap.parse_args(["--pipelined", "64"]), n_devices=2)
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle on the fake pipeline
+# ---------------------------------------------------------------------------
+
+def drive(sched, reqs, P=4, fail_at=(), max_ticks=40_000):
+    """Drive the scheduler against a depth-P fake pipeline (the
+    deterministic (rid, step) -> token model of ``tests/test_serve``),
+    optionally corrupting slots at given (tick, slot) points.  Asserts
+    the slot-occupancy invariants every tick."""
+    for r in reqs:
+        sched.submit(r)
+    fail_at = dict(fail_at)             # tick -> slot
+    hist, ticks = [], 0
+    while not sched.idle or hist:
+        assert ticks < max_ticks, "fake serve did not converge"
+        ticks += 1
+        rids = [a.req.rid for a in sched.active.values()]
+        assert len(rids) == len(set(rids)), "rid in two slots"
+        assert set(sched.active) <= set(range(sched.n_slots))
+        hist.insert(0, sched.next_injection())
+        if ticks in fail_at:
+            sched.fail_slot(fail_at[ticks])
+        if len(hist) == P:
+            inj = hist.pop()
+            if inj.op != IDLE_INJ.op and inj.sample:
+                a = sched.active.get(inj.slot)
+                step = (0 if a is None or a.req.rid != inj.rid
+                        else len(a.generated))
+                sched.on_result(inj, 1000 * inj.rid + step)
+        if sched.idle and all(h.op == IDLE_INJ.op for h in hist):
+            break
+    return sched
+
+
+def test_deadline_expires_queued_and_active_requests():
+    # slot-starved: rid 1 waits in queue past its deadline; rid 2's
+    # deadline lapses mid-decode and frees the slot the same tick
+    sched = SlotScheduler(1, 4, 64)
+    reqs = [Request(rid=0, prompt=[1] * 4, max_new=4),
+            Request(rid=1, prompt=[1] * 4, max_new=2, deadline=6.0),
+            Request(rid=2, prompt=[1] * 4, max_new=40, deadline=90.0)]
+    drive(sched, reqs)
+    assert sched.outcomes[0] == COMPLETED
+    assert sched.outcomes[1] == EXPIRED          # starved in queue
+    assert sched.outcomes[2] == EXPIRED          # cancelled mid-decode
+    assert sched.dropped[2].n_generated > 0      # it did make progress
+    assert len(sched.finished[0].tokens) == 4
+    assert not sched.active and not sched.queue
+
+
+def test_overload_sheds_beyond_queue_bound():
+    sched = SlotScheduler(1, 4, 64, max_queue=2)
+    reqs = [Request(rid=i, prompt=[1] * 4, max_new=2) for i in range(6)]
+    accepted = [sched.submit(r) for r in reqs]
+    # admission happens at tick time: the queue holds rids 0-1, all
+    # later arrivals are shed on the spot
+    assert accepted == [True, True, False, False, False, False]
+    drive(sched, [])                     # already submitted; just run
+    counts = sched.lifecycle_counts()
+    assert counts["completed"] == 2 and counts["shed"] == 4
+    assert all(sched.outcomes[r] == SHED for r in (2, 3, 4, 5))
+
+
+def test_corruption_readmits_then_fails_past_retry_budget():
+    sched = SlotScheduler(1, 4, 64, max_retries=1)
+    # first corruption re-admits (retry 1); second exceeds the budget
+    drive(sched, [Request(rid=0, prompt=[1] * 4, max_new=20)],
+          fail_at=[(8, 0), (20, 0)])
+    assert sched.outcomes[0] == FAILED
+    assert sched.dropped[0].retries == 2
+    assert not sched.active and not sched.queue
+
+    sched2 = SlotScheduler(1, 4, 64, max_retries=2)
+    drive(sched2, [Request(rid=0, prompt=[1] * 4, max_new=20)],
+          fail_at=[(8, 0), (20, 0)])
+    assert sched2.outcomes[0] == COMPLETED       # within budget
+    assert sched2.finished[0].retries == 2
+    # restart-from-scratch + deterministic model: stream unchanged
+    assert sched2.finished[0].tokens == [1000 * 0 + k for k in range(20)]
+
+
+def test_fail_all_readmits_everyone_without_retry_penalty():
+    sched = SlotScheduler(2, 4, 64, max_retries=0)
+    reqs = [Request(rid=i, prompt=[1] * 4, max_new=4) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(5):
+        sched.next_injection()
+    victims = sched.fail_all()
+    assert len(victims) == 2 and not sched.active
+    assert list(sched.queue)[0].rid == victims[0]    # admission order
+    drive(sched, [])
+    assert all(sched.outcomes[r.rid] == COMPLETED for r in reqs)
+    # max_retries=0 yet nobody failed: device loss is the system's fault
+    assert sched.lifecycle_counts()["retries"] == 2
+
+
+def test_stale_wave_rejected_by_generation():
+    sched = SlotScheduler(1, 4, 64)
+    sched.submit(Request(rid=0, prompt=[1] * 4, max_new=3))
+    inj = sched.next_injection()         # prefill, sample, gen 0
+    sched.fail_slot(0, count_retry=False)
+    sched.next_injection()               # re-admission -> gen 1
+    assert not sched.on_result(inj, 7), "stale gen-0 wave accepted"
+    a = next(iter(sched.active.values()))
+    assert a.gen > inj.gen and a.generated == []
+
+
+@settings(max_examples=24, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_slots=st.integers(min_value=1, max_value=4),
+       deadline=st.sampled_from([None, 4.0, 9.0, 25.0]),
+       max_queue=st.sampled_from([None, 0, 2, 8]),
+       preempt_after=st.sampled_from([None, 5, 12]))
+def test_lifecycle_exactly_one_terminal_state_no_slot_leaks(
+        seed, n_slots, deadline, max_queue, preempt_after):
+    """Under random deadlines, preemption, faults, and shedding, every
+    submitted request reaches exactly one terminal state and the
+    scheduler drains completely — no slot leaks, no lost requests."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(2, 12))
+    reqs = [Request(rid=i, prompt=[1] * (4 * int(rng.integers(1, 4))),
+                    max_new=int(rng.integers(1, 9)),
+                    deadline=deadline if rng.random() < 0.5 else None)
+            for i in range(n_req)]
+    fail_at = {int(t): int(rng.integers(0, n_slots))
+               for t in rng.integers(2, 60, size=rng.integers(0, 4))}
+    sched = SlotScheduler(n_slots, 4, 64, preempt_after=preempt_after,
+                          max_queue=max_queue, max_retries=2)
+    drive(sched, reqs, fail_at=fail_at.items())
+    # exactly one terminal state per request
+    assert set(sched.outcomes) == {r.rid for r in reqs}
+    assert set(sched.finished) | set(sched.dropped) == set(sched.outcomes)
+    assert not (set(sched.finished) & set(sched.dropped))
+    for rid, state in sched.outcomes.items():
+        assert state in TERMINAL_STATES
+        assert (state == COMPLETED) == (rid in sched.finished)
+    # no slot leaks: fully drained
+    assert not sched.active and not sched.queue and not sched.ready
+    counts = sched.lifecycle_counts()
+    assert sum(counts[s] for s in
+               ("completed", "expired", "shed", "failed")) == n_req
+    # completed streams are the deterministic model's, full length
+    for rid, rec in sched.finished.items():
+        req = next(r for r in reqs if r.rid == rid)
+        assert len(rec.tokens) == req.max_new
+        assert rec.tokens == [1000 * rid + k for k in range(req.max_new)]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_knobs_off_reproduces_pr8_streams_bitwise(seed):
+    """With every new knob disabled the scheduler's decision sequence
+    is byte-identical to PR 8's: two fresh instances (old-style
+    construction vs full-signature construction with defaults) produce
+    identical injection sequences and token streams."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, prompt=[1] * (4 * int(rng.integers(1, 4))),
+                    max_new=int(rng.integers(1, 7)))
+            for i in range(int(rng.integers(1, 9)))]
+    streams = []
+    for mk in (lambda: SlotScheduler(2, 4, 64),
+               lambda: SlotScheduler(2, 4, 64, preempt_after=None,
+                                     max_queue=None, max_retries=3)):
+        sched = drive(mk(), list(reqs))
+        assert all(s == COMPLETED for s in sched.outcomes.values())
+        streams.append({rid: rec.tokens
+                        for rid, rec in sched.finished.items()})
+    assert streams[0] == streams[1]
+    assert all(streams[0][r.rid] ==
+               [1000 * r.rid + k for k in range(r.max_new)]
+               for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# bursty traffic + summarize
+# ---------------------------------------------------------------------------
+
+def test_bursty_requests_seeded_reproducible_and_well_formed():
+    kw = dict(chunk=8, max_seq=128, deadline_s=3.0, seed=11)
+    a = bursty_requests(40, **kw)
+    b = bursty_requests(40, **kw)
+    assert [(r.rid, r.prompt, r.max_new, r.arrival_s, r.deadline)
+            for r in a] == \
+        [(r.rid, r.prompt, r.max_new, r.arrival_s, r.deadline)
+         for r in b]
+    c = bursty_requests(40, **dict(kw, seed=12))
+    assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+    for r in a:
+        assert len(r.prompt) % 8 == 0
+        assert len(r.prompt) + r.max_new <= 128
+        assert r.deadline == 3.0
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(a, a[1:]))
+
+
+def test_bursty_requests_heavy_tail_exceeds_grid():
+    base = bursty_requests(200, chunk=4, max_seq=512, gen_tail=0.0,
+                           gen_range=(4, 16), seed=0)
+    tail = bursty_requests(200, chunk=4, max_seq=512, gen_tail=0.5,
+                           gen_range=(4, 16), seed=0)
+    assert max(r.max_new for r in base) <= 16
+    assert max(r.max_new for r in tail) > 16    # geometric tail fired
+
+
+def test_bursty_requests_are_actually_bursty():
+    """Burst-phase gaps are drawn at rate_hi: the trace must contain
+    inter-arrival spreads a stationary Poisson at rate_lo would not
+    (min gap far below the calm mean)."""
+    reqs = bursty_requests(300, chunk=4, max_seq=64, rate_lo=1.0,
+                           rate_hi=100.0, seed=4)
+    gaps = [y.arrival_s - x.arrival_s for x, y in zip(reqs, reqs[1:])]
+    assert min(gaps) < 0.02 < 0.25 < max(gaps)
+
+
+def test_summarize_none_safe_and_lifecycle_fields():
+    pre = {"metrics": {0: {"ttft_s": 0.5, "per_token_s": [0.1],
+                           "n_tokens": 2}},
+           "elapsed_s": 1.0, "ticks": 10}
+    s = summarize(pre)                  # PR 8-shaped dict: no counts
+    assert s["completed"] is None and s["deadline_hit_rate"] is None
+    full = dict(pre, counts={"completed": 1, "expired": 1, "shed": 2,
+                             "failed": 0, "retries": 3, "preemptions": 0,
+                             "with_deadline": 2, "deadline_hits": 1})
+    s = summarize(full)
+    assert s["shed"] == 2 and s["retries"] == 3
+    assert s["deadline_hit_rate"] == pytest.approx(0.5)
+    assert s["deadline_miss_rate"] == pytest.approx(0.5)
+    assert s["goodput_tok_s"] == pytest.approx(2.0)
+
+
+def test_poisson_requests_unchanged_by_new_fields():
+    reqs = poisson_requests(5, 4.0, chunk=4, max_seq=64, seed=0)
+    assert all(r.deadline is None for r in reqs)    # default: no knobs
+
+
+# ---------------------------------------------------------------------------
+# elastic P-1 recovery pin (subprocess)
+# ---------------------------------------------------------------------------
+
+def run_resilience_case(arch, P, chunk, kernels="xla", timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    args = [sys.executable, HELPER, arch, str(P), str(chunk), kernels]
+    r = subprocess.run(args, env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, \
+        f"{arch} P={P} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "MATCH=0" not in r.stdout
+    assert "RECOVERY=1" in r.stdout
+
+
+def test_elastic_recovery_pins_streams_tinyllama_p3_to_p2():
+    run_resilience_case("tinyllama-1.1b", 3, 8)
+
+
+@pytest.mark.slow
+def test_elastic_recovery_pins_streams_mamba2_p2_to_p1():
+    run_resilience_case("mamba2-2.7b", 2, 16)
